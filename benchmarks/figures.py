@@ -1,0 +1,220 @@
+"""One harness per paper table/figure (see DESIGN.md §5 for the index).
+
+Each ``figN_*`` returns a dict of rows; ``benchmarks.run`` renders them and
+checks the headline claims (within generous cost-model tolerances).
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.cost_model import (CLUSTER_A, CLUSTER_A16, CLUSTER_B,
+                                   PAPER_MODELS, GPT_MOE_S, GPT_MOE_L,
+                                   BERT_MOE_DEEP,
+                                   MoEModel, TPU_V5E_POD, run_ep,
+                                   run_fastermoe, run_flexmoe, run_hecate,
+                                   run_smartmoe)
+from benchmarks.load_traces import make_trace
+
+_ITERS = 60
+# paper uses the largest batch that fits (§5.1): tokens per DEVICE
+_TOKENS_PER_DEV = {"GPT-MoE-S": 4 * 2048, "GPT-MoE-L": 2 * 2048,
+                   "BERT-MoE": 32 * 512, "BERT-MoE-Deep": 16 * 512}
+
+
+def _TOKENS_FOR(model, cl):
+    return _TOKENS_PER_DEV[model.name] * cl.devices
+
+
+def _avg_times(model, cl, fn, trace, window=5, **kw):
+    """Average per-layer-iteration time with sliding-window-stale loads
+    (the scheduler sees the w-step average of PAST loads, like Hecate)."""
+    times, mems = [], None
+    for i in range(window, len(trace)):
+        stale = trace[max(0, i - window):i].mean(0)
+        toks = _TOKENS_FOR(model, cl)
+        try:
+            r = fn(model, cl, trace[i], toks, stale_loads=stale, **kw)
+        except TypeError:
+            r = fn(model, cl, trace[i], toks, **kw)
+        times.append(r.moe_time + r.overhead)
+        mems = r
+    return float(np.mean(times)), mems
+
+
+def fig9_10_end_to_end(cluster, concentration=0.25) -> Dict[str, Dict]:
+    """End-to-end speedup over EP for each system x model (Figures 9/10)."""
+    out = {}
+    for model in PAPER_MODELS:
+        trace = make_trace(_ITERS, model.experts, seed=hash(model.name) % 97,
+                           concentration=concentration)
+        rows = {}
+        t_ep, _ = _avg_times(model, cluster, run_ep, trace)
+        # attention time is common to all systems; end-to-end per layer =
+        # attn + moe.  (paper reports end-to-end, so include the dense part)
+        t_attn = 3 * model.attn_time(_TOKENS_FOR(model, cluster)
+                                     / cluster.devices, cluster)
+        for name, fn, kw in [
+                ("EP", run_ep, {}),
+                ("FasterMoE", run_fastermoe, {}),
+                ("SmartMoE", run_smartmoe, {"rearrange": True}),
+                ("FlexMoE", run_flexmoe, {}),
+                ("Hecate", run_hecate, {})]:
+            t, _ = _avg_times(model, cluster, fn, trace, **kw)
+            rows[name] = {"layer_time_s": t + t_attn,
+                          "speedup_vs_ep": (t_ep + t_attn) / (t + t_attn)}
+        out[model.name] = rows
+    return out
+
+
+def fig11_layerwise(cluster=CLUSTER_B) -> List[Dict]:
+    """Layer-wise MoE speedup: different layers have different imbalance
+    (Fig 11: 2.8-18.8x on GPT-MoE-S, Cluster B)."""
+    model = GPT_MOE_S
+    rows = []
+    for layer in range(model.layers):
+        conc = 0.08 + 0.6 * layer / model.layers   # later layers balanced-er
+        trace = make_trace(_ITERS, model.experts, seed=layer,
+                           concentration=conc)
+        t_ep, _ = _avg_times(model, cluster, run_ep, trace)
+        t_h, _ = _avg_times(model, cluster, run_hecate, trace)
+        rows.append({"layer": layer, "ep_s": t_ep, "hecate_s": t_h,
+                     "speedup": t_ep / t_h})
+    return rows
+
+
+def fig12_breakdown(cluster=CLUSTER_B) -> Dict[str, Dict]:
+    """Critical-path breakdown for BERT-MoE-Deep (Fig 12)."""
+    model = BERT_MOE_DEEP
+    trace = make_trace(_ITERS, model.experts, seed=5, concentration=0.2)
+    loads = trace[-1]
+    stale = trace[-6:-1].mean(0)
+    toks = _TOKENS_FOR(model, cluster)
+    out = {}
+    from benchmarks import cost_model as cm
+    for name, fn, kw in [("EP", run_ep, {}),
+                         ("FasterMoE", run_fastermoe, {}),
+                         ("SmartMoE", run_smartmoe, {"rearrange": True}),
+                         ("FlexMoE", run_flexmoe, {}),
+                         ("Hecate", run_hecate, {"stale_loads": stale}),
+                         ("Hecate-RM", run_hecate,
+                          {"stale_loads": stale, "rematerialize": True})]:
+        r = fn(model, cluster, loads, toks, **kw)
+        out[name] = {"moe_time_s": r.moe_time, "overhead_s": r.overhead,
+                     "total_s": r.moe_time + r.overhead}
+    return out
+
+
+def fig13_memory(cluster=CLUSTER_B) -> Dict[str, Dict]:
+    """Peak memory by category (Fig 13): Opt / Grad / Param, per device."""
+    model = BERT_MOE_DEEP
+    trace = make_trace(_ITERS, model.experts, seed=7, concentration=0.2)
+    loads, toks = trace[-1], _TOKENS_FOR(model, cluster)
+    out = {}
+    for name, fn, kw in [("EP", run_ep, {}),
+                         ("FasterMoE", run_fastermoe, {}),
+                         ("SmartMoE", run_smartmoe, {}),
+                         ("FlexMoE", run_flexmoe, {}),
+                         ("Hecate", run_hecate, {}),
+                         ("Hecate-RM", run_hecate, {"rematerialize": True})]:
+        r = fn(model, cluster, loads, toks, **kw)
+        out[name] = {"param_gb": r.param_mem / 1e9,
+                     "grad_gb": r.grad_mem / 1e9,
+                     "opt_gb": r.opt_mem / 1e9,
+                     "total_gb": (r.param_mem + r.grad_mem + r.opt_mem) / 1e9}
+    return out
+
+
+def fig14_batch_scaling(cluster=CLUSTER_A) -> List[Dict]:
+    """Throughput and OOM boundary vs per-device batch (Fig 14, GPT-MoE-S,
+    V100-32G).  Activation memory includes no-remat attention probs +
+    dispatch buffers (what actually OOMs MoE training at this scale)."""
+    model = GPT_MOE_S
+    trace = make_trace(_ITERS, model.experts, seed=9, concentration=0.2)
+    rows = []
+    budget = cluster.hbm_bytes - 6e9        # dense model + framework
+    for batch in [1, 2, 3, 4, 5, 6]:
+        toks_dev = batch * model.seq_len
+        toks = toks_dev * cluster.devices
+        act_mem = (
+            toks_dev * model.seq_len * 12 * 2 * model.layers     # attn probs
+            + toks_dev * model.d_model * 14 * 2 * model.layers   # residuals
+            + 4 * toks_dev * model.d_model * 2 * 4)              # dispatch
+        for name, fn, kw in [("EP", run_ep, {}), ("FlexMoE", run_flexmoe, {}),
+                             ("Hecate", run_hecate, {}),
+                             ("Hecate-RM", run_hecate,
+                              {"rematerialize": True})]:
+            r = fn(model, cluster, trace[-1], toks, **kw)
+            mem = r.param_mem + r.grad_mem + r.opt_mem + act_mem
+            fits = mem < budget
+            rows.append({"batch": batch, "system": name,
+                         "tokens_per_s": toks / (r.moe_time + r.overhead)
+                         / model.layers if fits else 0.0,
+                         "fits": fits, "mem_gb": mem / 1e9})
+    return rows
+
+
+def fig15_ablation(cluster=CLUSTER_B) -> Dict[str, Dict]:
+    """(a) component combinations; (b) re-sharding interval sweep."""
+    model = GPT_MOE_S
+    trace = make_trace(400, model.experts, seed=11, concentration=0.2)
+    toks = _TOKENS_FOR(model, cluster)
+
+    def avg(fn, **kw):
+        t, _ = _avg_times(model, cluster, fn, trace[:80], **kw)
+        return t
+    t_ep = avg(run_ep)
+    combos = {
+        "EP": t_ep,
+        "Sharding only": avg(run_hecate, m=0, use_hetero=True),
+        "Mat. only": avg(run_hecate, use_hetero=False),
+        "Sharding+Mat. (Hecate)": avg(run_hecate),
+    }
+    a = {k: {"time_s": v, "speedup_vs_ep": t_ep / v}
+         for k, v in combos.items()}
+    # (b) interval sweep: re-sharding uses loads stale by `interval`
+    b = {}
+    for interval in [10, 25, 50, 100]:
+        times = []
+        for i in range(interval, 400, interval):
+            stale = trace[max(0, i - 5):i].mean(0)
+            r = run_hecate(model, cluster, trace[i], toks, stale_loads=stale)
+            times.append(r.moe_time + r.overhead)
+        b[interval] = {"time_s": float(np.mean(times)),
+                       "speedup_vs_ep": t_ep / float(np.mean(times))}
+    return {"components": a, "resharding_interval": b}
+
+
+def tpu_adaptation(records_dir: str = "experiments/dryrun") -> Dict[str, Dict]:
+    """Beyond-paper: ring (exact-λS static-schedule) vs slot-a2a
+    (paper-faithful upper bound) vs dense-FSDP vs EP materialization — from
+    the REAL compiled dry-run artifacts (collective bytes per device,
+    olmoe-1b-7b @ train_4k on the 16x16 v5e mesh)."""
+    import glob
+    import json as _json
+    import os
+    out = {}
+    for impl in ("ring", "a2a", "dense", "ep"):
+        cands = [os.path.join("experiments/perf",
+                              ("olmoe_base_ring.json" if impl == "ring"
+                               else f"olmoe_impl_{impl}.json")),
+                 os.path.join(records_dir,
+                              f"olmoe_1b_7b_train_4k_single_{impl}.json")]
+        f = next((c for c in cands if os.path.exists(c)), None)
+        if f is None:
+            continue
+        with open(f) as fh:
+            r = _json.load(fh)
+        if r.get("status") != "ok":
+            continue
+        cb = r["cost"]["collective_bytes"]
+        out[impl] = {
+            "collective_gb_per_device":
+                r["cost"]["collective_bytes_total"] / 1e9,
+            "materialization_gb": (cb.get("collective-permute", 0)
+                                   + cb.get("all-gather", 0)) / 1e9,
+            "collective_term_s": r["roofline"]["collective_s"],
+            "dominant": r["roofline"]["dominant"],
+        }
+    return out

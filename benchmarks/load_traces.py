@@ -1,0 +1,35 @@
+"""Synthetic expert-load traces with the temporal locality of Figure 3:
+loads drift smoothly (random walk in logit space with momentum) with
+occasional regime shifts; imbalance controlled by a concentration knob."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def make_trace(num_iters: int, num_experts: int, *, seed: int = 0,
+               concentration: float = 0.3, drift: float = 0.02,
+               shift_every: int = 200) -> np.ndarray:
+    """Returns (num_iters, num_experts) load fractions (rows sum to 1).
+
+    concentration: lower -> more skewed (Dirichlet alpha).
+    drift: per-iteration logit random-walk scale (Fig 3's smooth change).
+    """
+    rng = np.random.default_rng(seed)
+    logits = np.log(rng.dirichlet(np.full(num_experts, concentration))
+                    + 1e-8)
+    mom = np.zeros(num_experts)
+    out = np.zeros((num_iters, num_experts))
+    for i in range(num_iters):
+        if shift_every and i and i % shift_every == 0:
+            logits = 0.5 * logits + 0.5 * np.log(
+                rng.dirichlet(np.full(num_experts, concentration)) + 1e-8)
+        mom = 0.9 * mom + drift * rng.standard_normal(num_experts)
+        logits = logits + mom
+        p = np.exp(logits - logits.max())
+        out[i] = p / p.sum()
+    return out
+
+
+def imbalance(loads: np.ndarray) -> float:
+    """max/mean of per-expert load — 1.0 == perfectly balanced."""
+    return float(loads.max(-1).mean() / loads.mean())

@@ -1,0 +1,83 @@
+"""§Perf hillclimbing driver: re-lower the three chosen (arch x shape)
+pairs under candidate optimizations and record the roofline deltas.
+
+Pairs (chosen per the brief from the baseline table):
+  1. olmoe-1b-7b x train_4k   — most representative of the paper's
+                                 technique (FSSDP MoE, collective-bound)
+  2. qwen1.5-110b x train_4k  — worst collective term (weight-grad
+                                 all-reduces dominate)
+  3. jamba-v0.1-52b x train_4k — hybrid; large collective-permute +
+                                 all-gather mix from the SSM/TP boundary
+
+Run:  PYTHONPATH=src python -m benchmarks.perf_sweep
+Writes experiments/perf/<tag>.json; EXPERIMENTS.md §Perf reads these.
+"""
+import json
+import os
+import sys
+import traceback
+
+
+def main():
+    from repro.launch.dryrun import dryrun_combo
+    from repro.launch.mesh import make_production_mesh
+
+    out_dir = "experiments/perf"
+    os.makedirs(out_dir, exist_ok=True)
+    mesh = make_production_mesh()
+
+    runs = [
+        # --- pair 1: olmoe train_4k -----------------------------------
+        ("olmoe_base_ring", "olmoe-1b-7b", "train_4k", "ring", {}),
+        ("olmoe_gradrs", "olmoe-1b-7b", "train_4k", "ring",
+         {"grad_constraint": True}),
+        ("olmoe_zero", "olmoe-1b-7b", "train_4k", "ring",
+         {"grad_constraint": True, "sharding_mode": "zero"}),
+        ("olmoe_zero_cf125", "olmoe-1b-7b", "train_4k", "ring",
+         {"grad_constraint": True, "sharding_mode": "zero",
+          "capacity_factor": 1.25}),
+        # materialization-impl comparison (also feeds benchmarks.run)
+        ("olmoe_impl_a2a", "olmoe-1b-7b", "train_4k", "a2a", {}),
+        ("olmoe_impl_dense", "olmoe-1b-7b", "train_4k", "dense", {}),
+        ("olmoe_impl_ep", "olmoe-1b-7b", "train_4k", "ep", {}),
+        # --- pair 2: qwen1.5-110b train_4k ------------------------------
+        ("qwen_base", "qwen1.5-110b", "train_4k", "ring", {}),
+        ("qwen_gradrs", "qwen1.5-110b", "train_4k", "ring",
+         {"grad_constraint": True}),
+        ("qwen_gradrs_zero", "qwen1.5-110b", "train_4k", "ring",
+         {"grad_constraint": True, "sharding_mode": "zero"}),
+        # --- pair 3: jamba train_4k -------------------------------------
+        ("jamba_base_ring", "jamba-v0.1-52b", "train_4k", "ring", {}),
+        ("jamba_gradrs", "jamba-v0.1-52b", "train_4k", "ring",
+         {"grad_constraint": True}),
+        ("jamba_gradrs_zero", "jamba-v0.1-52b", "train_4k", "ring",
+         {"grad_constraint": True, "sharding_mode": "zero"}),
+    ]
+    failures = []
+    for tag, arch, shape, impl, po in runs:
+        try:
+            rec = dryrun_combo(arch, shape, multi_pod=False, impl=impl,
+                               mesh=mesh, perf_opts=po or None)
+        except Exception as e:
+            rec = {"status": "FAILED", "error": str(e),
+                   "traceback": traceback.format_exc()}
+            failures.append(tag)
+        with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+            json.dump(rec, f, indent=2)
+        if rec.get("status") == "ok":
+            r = rec["roofline"]
+            c = rec["cost"]["collective_bytes"]
+            print(f"[{tag:22s}] comp={r['compute_s']:7.2f}s "
+                  f"mem={r['memory_s']:6.2f}s coll={r['collective_s']:7.2f}s "
+                  f"dom={r['dominant']:10s} "
+                  f"collGB={{{', '.join(f'{k}:{v/1e9:.0f}' for k, v in sorted(c.items()) if v > 1e8)}}}",
+                  flush=True)
+        else:
+            print(f"[{tag:22s}] {rec.get('status')}: "
+                  f"{rec.get('error','')[:100]}", flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

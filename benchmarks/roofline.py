@@ -1,0 +1,90 @@
+"""Roofline table renderer: reads the dry-run JSON records and emits the
+per-(arch x shape x mesh) three-term roofline with dominant bottleneck.
+See repro/launch/dryrun.py for how each term is derived (and the
+scan-correction + CPU-bytes caveats, documented there and in
+EXPERIMENTS.md)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+
+# Wire-volume factors for records produced before parser_version 2 (which
+# counted tensor sizes, not ring wire bytes): all-reduce ~2x, reduce-scatter
+# ~(g-1)x with g=16 typical, gather/a2a ~(g-1)/g.
+_V1_FACTORS = {"all-reduce": 1.9, "reduce-scatter": 15.0,
+               "all-gather": 0.94, "all-to-all": 0.94,
+               "collective-permute": 1.0}
+
+
+def _upgrade_v1(rec: Dict) -> Dict:
+    if rec.get("parser_version", 1) >= 2 or rec.get("status") != "ok":
+        return rec
+    from repro.common.config import TPU_V5E
+    for key in ("cost", "cost_raw"):
+        c = rec.get(key)
+        if not c:
+            continue
+        cb = {k: v * _V1_FACTORS.get(k, 1.0)
+              for k, v in c["collective_bytes"].items()}
+        c["collective_bytes"] = cb
+        c["collective_bytes_total"] = sum(cb.values())
+    r = rec["roofline"]
+    r["collective_s"] = rec["cost"]["collective_bytes_total"] / TPU_V5E.ici_bw
+    terms = {"compute": r["compute_s"], "memory": r["memory_s"],
+             "collective": r["collective_s"]}
+    r["dominant"] = max(terms, key=terms.get)
+    rec["upgraded_from_v1"] = True
+    return rec
+
+
+def load_records(directory: str = "experiments/dryrun") -> List[Dict]:
+    recs = []
+    for f in sorted(glob.glob(os.path.join(directory, "*.json"))):
+        with open(f) as fh:
+            recs.append(_upgrade_v1(json.load(fh)))
+    return recs
+
+
+def render_table(recs: List[Dict], mesh: str = None) -> str:
+    rows = []
+    hdr = (f"{'arch':22s} {'shape':12s} {'mesh':10s} {'status':8s} "
+           f"{'comp_ms':>9s} {'mem_ms':>9s} {'coll_ms':>9s} "
+           f"{'dominant':>10s} {'useful%':>8s}")
+    rows.append(hdr)
+    rows.append("-" * len(hdr))
+    for r in recs:
+        if mesh and r.get("mesh") != mesh:
+            continue
+        if r.get("status") != "ok":
+            rows.append(f"{r['arch']:22s} {r['shape']:12s} "
+                        f"{r.get('mesh',''):10s} {r.get('status','?'):8s} "
+                        f"{(r.get('reason') or r.get('error',''))[:50]}")
+            continue
+        rf = r["roofline"]
+        rows.append(
+            f"{r['arch']:22s} {r['shape']:12s} {r['mesh']:10s} ok       "
+            f"{rf['compute_s']*1e3:9.2f} {rf['memory_s']*1e3:9.2f} "
+            f"{rf['collective_s']*1e3:9.2f} {rf['dominant']:>10s} "
+            f"{rf['useful_flops_ratio']*100:7.1f}%")
+    return "\n".join(rows)
+
+
+def summarize(recs: List[Dict]) -> Dict:
+    ok = [r for r in recs if r.get("status") == "ok"]
+    skipped = [r for r in recs if r.get("status") == "skipped"]
+    failed = [r for r in recs if r.get("status") not in ("ok", "skipped")]
+    dom = {}
+    for r in ok:
+        dom[r["roofline"]["dominant"]] = dom.get(
+            r["roofline"]["dominant"], 0) + 1
+    return {"ok": len(ok), "skipped": len(skipped), "failed": len(failed),
+            "dominant_histogram": dom}
+
+
+if __name__ == "__main__":
+    recs = load_records()
+    print(render_table(recs))
+    print(json.dumps(summarize(recs), indent=2))

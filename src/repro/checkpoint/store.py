@@ -1,0 +1,79 @@
+"""Atomic, versioned npz checkpoints for arbitrary pytrees.
+
+Layout:  <dir>/step_<n>/arrays.npz + meta.json (written to a tmp dir then
+renamed, so a crash never leaves a half-written checkpoint visible).
+Restores with the caller-provided target structure and (optionally) puts
+leaves onto the given shardings.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def save(directory: str, step: int, tree: Any, extra_meta: Optional[dict] = None
+         ) -> str:
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = tempfile.mkdtemp(dir=directory, prefix=".tmp_ckpt_")
+    try:
+        arrays = _flatten_with_paths(tree)
+        np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+        meta = {"step": step, "num_arrays": len(arrays),
+                "format_version": 1, **(extra_meta or {})}
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump(meta, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    return final
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(directory)
+             if d.startswith("step_")]
+    return max(steps) if steps else None
+
+
+def restore(directory: str, step: int, target: Any,
+            shardings: Any = None) -> Any:
+    path = os.path.join(directory, f"step_{step:08d}")
+    data = np.load(os.path.join(path, "arrays.npz"))
+    flat, treedef = jax.tree_util.tree_flatten_with_path(target)
+    shard_flat = (treedef.flatten_up_to(shardings)
+                  if shardings is not None else [None] * len(flat))
+    leaves = []
+    for (pth, leaf), shd in zip(flat, shard_flat):
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in pth)
+        arr = data[key]
+        assert arr.shape == tuple(leaf.shape), (key, arr.shape, leaf.shape)
+        leaves.append(jax.device_put(arr, shd) if shd is not None
+                      else jax.numpy.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def meta(directory: str, step: int) -> dict:
+    with open(os.path.join(directory, f"step_{step:08d}", "meta.json")) as f:
+        return json.load(f)

@@ -1,0 +1,257 @@
+"""Configuration schema for the repro framework.
+
+Everything the launcher, models, FSSDP core, and dry-run consume is driven by
+these dataclasses.  Architecture configs under ``repro.configs`` instantiate
+``ModelConfig``; input shapes are ``ShapeConfig``; the distributed setup is a
+``MeshConfig``; training knobs live in ``TrainConfig``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Sequence, Tuple
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    """Mixture-of-Experts sub-config (paper's target substrate)."""
+
+    num_experts: int = 0
+    experts_per_token: int = 0          # top-k
+    d_ff: int = 0                       # per-expert hidden dim
+    # Which layers carry an MoE FFN: every `period` layers, offset `offset`.
+    period: int = 1
+    offset: int = 0
+    capacity_factor: float = 2.0        # GShard-style dispatch capacity
+    aux_loss_weight: float = 1e-2       # load-balance loss (GShard)
+    router_z_loss_weight: float = 1e-3
+    # FSSDP knobs ------------------------------------------------------
+    # m: extra materialization slots per device (Alg. 1's memory capacity).
+    slots_per_device: int = 2
+    # q: static all_to_all rounds == max experts per (owner, dest) pair.
+    a2a_rounds: int = 1
+    # strategy: "fssdp" (paper), "ep" (baseline), "fsdp" (dense all-gather).
+    strategy: str = "fssdp"
+    # Re-materialization (release params after fwd, re-gather in bwd).
+    rematerialize: bool = False
+
+    @property
+    def enabled(self) -> bool:
+        return self.num_experts > 0
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    """Mamba-2 (SSD) sub-config."""
+
+    state_dim: int = 128                # N
+    head_dim: int = 64                  # P
+    expand: int = 2                     # d_inner = expand * d_model
+    conv_width: int = 4
+    chunk: int = 64                     # SSD chunk length
+
+    def num_heads(self, d_model: int) -> int:
+        return self.expand * d_model // self.head_dim
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    arch_type: str                      # dense | moe | ssm | hybrid | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                   # 0 -> d_model // num_heads
+    # --- attention options -------------------------------------------
+    qkv_bias: bool = False              # qwen1.5
+    rope_theta: float = 10_000.0
+    attn_logit_softcap: float = 0.0     # gemma2 (50.0)
+    final_logit_softcap: float = 0.0    # gemma2 (30.0)
+    sliding_window: int = 0             # gemma2 local layers (4096)
+    mrope: bool = False                 # qwen2-vl multimodal RoPE
+    # Repeating unit of layer kinds, tiled to num_layers.  Kinds:
+    #   "attn"    causal global attention + FFN
+    #   "local"   sliding-window attention + FFN
+    #   "mamba"   Mamba-2 SSD block
+    # The FFN of a layer is MoE iff moe.enabled and layer_idx % period == offset.
+    layer_pattern: Tuple[str, ...] = ("attn",)
+    # --- submodule configs -------------------------------------------
+    moe: MoEConfig = field(default_factory=MoEConfig)
+    ssm: SSMConfig = field(default_factory=SSMConfig)
+    # --- encoder-decoder (whisper) ------------------------------------
+    is_encoder_decoder: bool = False
+    encoder_layers: int = 0
+    encoder_seq_len: int = 0            # whisper: 1500 frames
+    max_decoder_len: int = 0            # architecture cap (whisper: 448)
+    # --- modality frontend stub ---------------------------------------
+    # None | "audio" | "vision": input_specs() yields embeddings directly.
+    frontend: Optional[str] = None
+    # --- misc ----------------------------------------------------------
+    norm: str = "rms"                   # rms | ln
+    act: str = "silu_glu"               # silu_glu | gelu
+    tie_embeddings: bool = True
+    dtype: str = "bfloat16"             # compute dtype
+    param_dtype: str = "float32"        # master params
+    remat: bool = True                  # activation checkpointing per block
+    source: str = ""                    # citation
+
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+        if len(self.layer_pattern) == 0:
+            raise ValueError("layer_pattern must be non-empty")
+        if self.num_layers % len(self.layer_pattern) != 0:
+            raise ValueError(
+                f"{self.name}: num_layers={self.num_layers} not divisible by "
+                f"layer_pattern of length {len(self.layer_pattern)}")
+
+    # ---- derived ------------------------------------------------------
+    @property
+    def num_superblocks(self) -> int:
+        return self.num_layers // len(self.layer_pattern)
+
+    def layer_kinds(self) -> Tuple[str, ...]:
+        return tuple(self.layer_pattern) * self.num_superblocks
+
+    def is_moe_layer(self, layer_idx: int) -> bool:
+        if not self.moe.enabled:
+            return False
+        if self.layer_kinds()[layer_idx] == "mamba" and self.arch_type != "hybrid":
+            return False
+        return layer_idx % self.moe.period == self.moe.offset
+
+    def supports_long_context(self) -> bool:
+        """True if decode over very long KV is sub-quadratic / bounded."""
+        kinds = set(self.layer_pattern)
+        if kinds <= {"mamba"}:
+            return True
+        if "mamba" in kinds:            # hybrid: state O(1), attn layers stream cache
+            return True
+        if self.sliding_window > 0:     # local/global alternating (gemma2)
+            return True
+        return False
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embedding + blocks)."""
+        d, hd = self.d_model, self.head_dim
+        n_q, n_kv = self.num_heads, self.num_kv_heads
+        total = self.vocab_size * d
+        if not self.tie_embeddings:
+            total += self.vocab_size * d
+        kinds = self.layer_kinds()
+        for i, kind in enumerate(kinds):
+            if kind in ("attn", "local"):
+                total += d * (n_q * hd) + 2 * d * (n_kv * hd) + (n_q * hd) * d
+                if self.qkv_bias:
+                    total += (n_q + 2 * n_kv) * hd
+            elif kind == "mamba":
+                s = self.ssm
+                d_in = s.expand * d
+                nh = s.num_heads(d)
+                total += d * (2 * d_in + 2 * s.state_dim + nh)   # in_proj
+                total += s.conv_width * (d_in + 2 * s.state_dim)  # conv
+                total += 2 * nh                                    # A_log, D
+                total += d_in * d                                  # out_proj
+            # FFN
+            n_mats = 3 if self.act.endswith("_glu") else 2
+            if self.is_moe_layer(i):
+                total += d * self.moe.num_experts                   # router
+                total += self.moe.num_experts * n_mats * d * self.moe.d_ff
+            elif kind != "mamba":
+                total += n_mats * d * self.d_ff
+            total += 2 * d                                         # norms
+        if self.is_encoder_decoder:
+            # encoder blocks (attn + ffn) + decoder cross-attention
+            n_mats = 3 if self.act.endswith("_glu") else 2
+            enc = self.encoder_layers * (
+                d * (n_q * hd) + 2 * d * (n_kv * hd) + (n_q * hd) * d
+                + n_mats * d * self.d_ff + 2 * d)
+            xattn = self.num_layers * (
+                d * (n_q * hd) + 2 * d * (n_kv * hd) + (n_q * hd) * d + d)
+            total += enc + xattn
+        return total
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: top-k of experts)."""
+        if not self.moe.enabled:
+            return self.param_count()
+        total = self.param_count()
+        moe_layers = sum(self.is_moe_layer(i) for i in range(self.num_layers))
+        n_mats = 3 if self.act.endswith("_glu") else 2
+        expert_p = n_mats * self.d_model * self.moe.d_ff
+        inactive = moe_layers * (self.moe.num_experts - self.moe.experts_per_token) * expert_p
+        return total - inactive
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    mode: str                           # "train" | "prefill" | "decode"
+
+
+INPUT_SHAPES = {
+    "train_4k":    ShapeConfig("train_4k",    4_096,   256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768,   32, "prefill"),
+    "decode_32k":  ShapeConfig("decode_32k",  32_768,  128, "decode"),
+    "long_500k":   ShapeConfig("long_500k",  524_288,    1, "decode"),
+}
+
+
+@dataclass(frozen=True)
+class MeshConfig:
+    shape: Tuple[int, ...] = (16, 16)
+    axes: Tuple[str, ...] = ("data", "model")
+
+    @property
+    def num_devices(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n
+
+    @property
+    def batch_axes(self) -> Tuple[str, ...]:
+        return tuple(a for a in self.axes if a != "model")
+
+    @property
+    def model_size(self) -> int:
+        return self.shape[self.axes.index("model")]
+
+    @property
+    def batch_size(self) -> int:
+        return self.num_devices // self.model_size
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    learning_rate: float = 3e-4
+    weight_decay: float = 0.1
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    seed: int = 0
+    microbatch: int = 0                 # 0 = no gradient accumulation
+
+
+# TPU v5e hardware model (roofline constants).
+@dataclass(frozen=True)
+class HardwareConfig:
+    name: str = "tpu_v5e"
+    peak_flops_bf16: float = 197e12     # per chip
+    hbm_bw: float = 819e9               # bytes/s per chip
+    ici_bw: float = 50e9                # bytes/s per link
+    hbm_bytes: float = 16e9             # capacity per chip
+
+
+TPU_V5E = HardwareConfig()

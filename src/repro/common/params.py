@@ -1,0 +1,93 @@
+"""Parameter declaration machinery.
+
+Model code declares parameters as ``Param`` descriptors carrying shape,
+*logical* sharding axes, and an initializer.  ``init_tree`` materializes the
+arrays; ``axes_tree`` extracts the logical-axes pytree that
+``repro.common.sharding`` maps onto a physical mesh; ``abstract_tree`` builds
+``ShapeDtypeStruct`` stand-ins for the dry-run (no allocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Param:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"        # normal | zeros | ones | scaled | mamba_a | arange
+    scale: float = 1.0
+    dtype: Optional[str] = None  # override param dtype
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_param(x) -> bool:
+    return isinstance(x, Param)
+
+
+def _init_one(p: Param, key, param_dtype: str):
+    dtype = jnp.dtype(p.dtype or param_dtype)
+    if p.init == "zeros":
+        return jnp.zeros(p.shape, dtype)
+    if p.init == "ones":
+        return jnp.ones(p.shape, dtype)
+    if p.init == "arange":  # e.g. mamba A_log init: log(1..n)
+        n = p.shape[-1]
+        base = jnp.log(jnp.arange(1, n + 1, dtype=jnp.float32))
+        return jnp.broadcast_to(base, p.shape).astype(dtype) * p.scale
+    if p.init == "scaled":  # fan-in scaled normal
+        fan_in = p.shape[-2] if len(p.shape) >= 2 else p.shape[-1]
+        std = p.scale / np.sqrt(fan_in)
+        return (jax.random.normal(key, p.shape, jnp.float32) * std).astype(dtype)
+    # default: normal(0, scale*0.02)
+    return (jax.random.normal(key, p.shape, jnp.float32)
+            * (0.02 * p.scale)).astype(dtype)
+
+
+def init_tree(tree, key, param_dtype: str = "float32"):
+    leaves, treedef = jax.tree.flatten(tree, is_leaf=is_param)
+    keys = jax.random.split(key, len(leaves))
+    out = [_init_one(p, k, param_dtype) for p, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, out)
+
+
+def axes_tree(tree):
+    return jax.tree.map(lambda p: p.axes, tree, is_leaf=is_param)
+
+
+def abstract_tree(tree, param_dtype: str = "float32", shardings=None):
+    """ShapeDtypeStructs for the dry-run; optionally attach shardings."""
+    if shardings is None:
+        return jax.tree.map(
+            lambda p: jax.ShapeDtypeStruct(p.shape, jnp.dtype(p.dtype or param_dtype)),
+            tree, is_leaf=is_param)
+    return jax.tree.map(
+        lambda p, s: jax.ShapeDtypeStruct(
+            p.shape, jnp.dtype(p.dtype or param_dtype), sharding=s),
+        tree, shardings, is_leaf=is_param)
+
+
+def stack_params(tree, n: int, axis_name: str = "layers"):
+    """Add a leading scan axis of size n to every Param in the tree."""
+    return jax.tree.map(
+        lambda p: Param((n,) + p.shape, (axis_name,) + p.axes,
+                        init=p.init, scale=p.scale, dtype=p.dtype),
+        tree, is_leaf=is_param)
+
+
+def count_params(tree) -> int:
+    leaves = jax.tree.leaves(tree, is_leaf=is_param)
+    total = 0
+    for l in leaves:
+        n = 1
+        for s in (l.shape if is_param(l) else l.shape):
+            n *= s
+        total += n
+    return total

@@ -1,0 +1,161 @@
+"""Logical-axis sharding rules (MaxText-style).
+
+Every parameter in the model substrate is declared with *logical* axis names;
+``logical_to_pspec`` maps them onto the physical mesh axes of the production
+mesh.  This keeps model code free of mesh details and lets the dry-run swap
+between the single-pod ``(data, model)`` and the multi-pod
+``(pod, data, model)`` meshes without touching model code.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+# Default logical -> physical rules.  ``batch`` picks up the "pod" axis
+# automatically when it exists in the mesh.
+DEFAULT_RULES: Dict[str, MeshAxes] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "seq_shard": "data",          # long-context decode: KV seq sharded
+    "embed": "data",              # d_model dim of weights (ZeRO/FSDP axis)
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "ff": "model",                # dense FFN hidden
+    "expert": "model",            # FSSDP: expert dim over the EP axis
+    "expert_ff": "data",          # FSSDP: intra-expert FSDP axis
+    "ssm_inner": "model",
+    "ssm_state": None,
+    "tokens": ("pod", "data", "model"),   # MoE boundary: fully token-sharded
+    "tokens_batch": ("pod", "data"),      # staging point for the reshard
+    "layers": None,               # scan axis
+    "unsharded": None,
+}
+
+
+def resolve_rules(mesh: Mesh, overrides: Optional[Dict[str, MeshAxes]] = None
+                  ) -> Dict[str, MeshAxes]:
+    rules = dict(DEFAULT_RULES)
+    if overrides:
+        rules.update(overrides)
+    # Drop mesh axes that do not exist (e.g. "pod" on the single-pod mesh).
+    def fix(v: MeshAxes) -> MeshAxes:
+        if v is None:
+            return None
+        if isinstance(v, str):
+            return v if v in mesh.axis_names else None
+        kept = tuple(a for a in v if a in mesh.axis_names)
+        if not kept:
+            return None
+        return kept if len(kept) > 1 else kept[0]
+    return {k: fix(v) for k, v in rules.items()}
+
+
+def logical_to_pspec(logical_axes: Sequence[Optional[str]],
+                     rules: Dict[str, MeshAxes]) -> P:
+    """Map a tuple of logical axis names to a PartitionSpec, avoiding reuse
+    of a physical axis across multiple dims (first occurrence wins)."""
+    used = set()
+    out = []
+    for name in logical_axes:
+        if name is None:
+            out.append(None)
+            continue
+        phys = rules.get(name, None)
+        if phys is None:
+            out.append(None)
+            continue
+        if isinstance(phys, str):
+            phys = (phys,)
+        free = tuple(a for a in phys if a not in used)
+        if not free:
+            out.append(None)
+            continue
+        used.update(free)
+        out.append(free if len(free) > 1 else free[0])
+    return P(*out)
+
+
+def shape_aware_pspec(shape: Sequence[int], logical_axes, rules, mesh: Mesh
+                      ) -> P:
+    """Like logical_to_pspec, but drops mesh axes that do not evenly divide
+    the dimension (e.g. 5 kv-heads over a 16-way model axis -> replicated).
+    For tuple mappings, keeps the longest prefix that still divides."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    used = set()
+    out = []
+    for dim, name in zip(shape, logical_axes):
+        if name is None:
+            out.append(None)
+            continue
+        phys = rules.get(name, None)
+        if phys is None:
+            out.append(None)
+            continue
+        if isinstance(phys, str):
+            phys = (phys,)
+        chosen = []
+        prod = 1
+        for a in phys:
+            if a in used or a not in sizes:
+                continue
+            if dim % (prod * sizes[a]) == 0:
+                chosen.append(a)
+                prod *= sizes[a]
+        if not chosen:
+            out.append(None)
+            continue
+        used.update(chosen)
+        out.append(tuple(chosen) if len(chosen) > 1 else chosen[0])
+    return P(*out)
+
+
+def shape_aware_sharding(shape, logical_axes, rules, mesh: Mesh
+                         ) -> NamedSharding:
+    return NamedSharding(mesh, shape_aware_pspec(shape, logical_axes,
+                                                 rules, mesh))
+
+
+def decl_shardings(decl_tree, mesh: Mesh,
+                   overrides: Optional[Dict[str, MeshAxes]] = None):
+    """Param-descriptor tree -> NamedSharding tree (shape-aware)."""
+    from repro.common.params import is_param
+    rules = resolve_rules(mesh, overrides)
+    return jax.tree.map(
+        lambda p: shape_aware_sharding(p.shape, p.axes, rules, mesh),
+        decl_tree, is_leaf=is_param)
+
+
+def tree_pspecs(logical_tree, rules: Dict[str, MeshAxes]):
+    """Map a pytree of logical-axes tuples to a pytree of PartitionSpecs."""
+    return jax.tree.map(
+        lambda axes: logical_to_pspec(axes, rules),
+        logical_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            a is None or isinstance(a, str) for a in x),
+    )
+
+
+def tree_shardings(logical_tree, mesh: Mesh,
+                   overrides: Optional[Dict[str, MeshAxes]] = None):
+    rules = resolve_rules(mesh, overrides)
+    return jax.tree.map(lambda spec: NamedSharding(mesh, spec),
+                        tree_pspecs(logical_tree, rules))
+
+
+def constrain(x, logical_axes: Sequence[Optional[str]],
+              rules: Optional[Dict[str, MeshAxes]] = None,
+              mesh: Optional[Mesh] = None):
+    """with_sharding_constraint by logical axes (shape-aware)."""
+    if rules is None:
+        return x
+    if mesh is not None:
+        return jax.lax.with_sharding_constraint(
+            x, shape_aware_sharding(x.shape, logical_axes, rules, mesh))
+    return jax.lax.with_sharding_constraint(
+        x, logical_to_pspec(logical_axes, rules))

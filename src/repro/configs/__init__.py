@@ -1,0 +1,43 @@
+"""Architecture registry: the 10 assigned architectures + the paper's own
+MoE models.  ``get(name)`` -> full ModelConfig; ``get_smoke(name)`` -> the
+reduced same-family variant used by CPU smoke tests."""
+from __future__ import annotations
+
+import importlib
+
+ASSIGNED = [
+    "minitron_8b", "mamba2_1p3b", "qwen1p5_110b", "smollm_360m",
+    "jamba_v0p1_52b", "gemma2_9b", "olmoe_1b_7b", "qwen2_vl_72b",
+    "granite_moe_3b_a800m", "whisper_medium",
+]
+PAPER = ["gpt_moe_s", "gpt_moe_l", "bert_moe", "bert_moe_deep"]
+
+ALL = ASSIGNED + PAPER
+
+# CLI ids use dashes (per the assignment table); module names use underscores.
+_ALIASES = {
+    "minitron-8b": "minitron_8b",
+    "mamba2-1.3b": "mamba2_1p3b",
+    "qwen1.5-110b": "qwen1p5_110b",
+    "smollm-360m": "smollm_360m",
+    "jamba-v0.1-52b": "jamba_v0p1_52b",
+    "gemma2-9b": "gemma2_9b",
+    "olmoe-1b-7b": "olmoe_1b_7b",
+    "qwen2-vl-72b": "qwen2_vl_72b",
+    "granite-moe-3b-a800m": "granite_moe_3b_a800m",
+    "whisper-medium": "whisper_medium",
+}
+
+
+def canonical(name: str) -> str:
+    return _ALIASES.get(name, name.replace("-", "_").replace(".", "p"))
+
+
+def get(name: str):
+    mod = importlib.import_module(f"repro.configs.{canonical(name)}")
+    return mod.config()
+
+
+def get_smoke(name: str):
+    mod = importlib.import_module(f"repro.configs.{canonical(name)}")
+    return mod.smoke()

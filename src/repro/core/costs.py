@@ -1,0 +1,95 @@
+"""In-core placement latency model — powers the calibration stage (§4.2)
+and the scheduler's plan selection.
+
+This is deliberately the same three-quantity model the paper's §3.1
+analysis uses (max device compute, max inbound link bytes, spAG volume),
+evaluated for OUR static-slot placements.  The scheduler uses RELATIVE
+costs only (plan A vs plan B under the same loads), so the hardware
+constants cancel out of every decision except overlap-budget sizing.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.common.config import HardwareConfig, ModelConfig, TPU_V5E
+from repro.core.placement import MaterializationPlan
+
+
+@dataclasses.dataclass(frozen=True)
+class CostContext:
+    cfg: ModelConfig
+    tokens_per_step: float              # global tokens routed per MoE layer
+    hw: HardwareConfig = TPU_V5E
+    attn_time_s: float = 0.0            # profiled non-MoE time (overlap
+                                        # budget; 0 = nothing overlappable)
+
+    @property
+    def expert_bytes(self) -> float:
+        from repro.core.moe import chunk_len
+        return chunk_len(self.cfg) * 2.0            # bf16 materialization
+
+    @property
+    def expert_flops_per_token(self) -> float:
+        from repro.core.moe import chunk_len
+        return 2.0 * chunk_len(self.cfg)
+
+
+def device_loads_for(plan: MaterializationPlan, loads: np.ndarray,
+                     layer: int, tokens: float, top_k: int) -> np.ndarray:
+    """Expected tokens per device under even replica splitting (§4.4)."""
+    slot_expert, _ = plan.slot_tables()
+    M = plan.sharding.num_devices
+    E = plan.sharding.num_experts
+    f = np.asarray(loads, np.float64)
+    if f.ndim == 2:                      # (L, E) -> this layer's row
+        f = f[layer]
+    f = f / max(f.sum(), 1e-12) * tokens * top_k
+    n_rep = np.zeros(E)
+    for d in range(M):
+        for e in slot_expert[layer, d]:
+            if e >= 0:
+                n_rep[e] += 1
+    out = np.zeros(M)
+    for d in range(M):
+        for e in slot_expert[layer, d]:
+            if e >= 0:
+                out[d] += f[e] / max(n_rep[e], 1)
+    return out
+
+
+def placement_latency(ctx: CostContext, plan: MaterializationPlan,
+                      loads: np.ndarray, layer: int = 0,
+                      extra_on_path: bool = False) -> float:
+    """Modeled per-layer latency (seconds) for `plan` under `loads`.
+
+    extra_on_path: charge the spAG fully on the critical path (the
+    calibration case — a re-plan issued after the gate cannot overlap)."""
+    cfg = ctx.cfg
+    dev = device_loads_for(plan, loads, layer, ctx.tokens_per_step,
+                           cfg.moe.experts_per_token)
+    comp = dev.max() * ctx.expert_flops_per_token * 3 / ctx.hw.peak_flops_bf16
+    # dispatch: worst inbound link ~ max device load crossing links
+    a2a = 4 * dev.max() * cfg.d_model * 2 / ctx.hw.ici_bw
+    # materialization volume (per device, ring = exact λS)
+    m_extra = int((plan.extra_experts[layer] >= 0).sum()) \
+        / max(plan.sharding.num_devices, 1)
+    spag = 2 * m_extra * ctx.expert_bytes / ctx.hw.ici_bw
+    if extra_on_path:
+        over = spag
+    else:
+        over = max(0.0, spag - ctx.attn_time_s)
+    return comp + a2a + over
+
+
+def calibration_gain(ctx: CostContext, current: MaterializationPlan,
+                     candidate: MaterializationPlan, real_loads: np.ndarray,
+                     layer: int = 0) -> float:
+    """Positive when switching to `candidate` (paying its spAG on the
+    critical path, §4.2) still wins under the REAL loads."""
+    t_cur = placement_latency(ctx, current, real_loads, layer)
+    t_cand = placement_latency(ctx, candidate, real_loads, layer,
+                               extra_on_path=True)
+    return t_cur - t_cand

@@ -1,0 +1,469 @@
+"""FSSDP MoE layer — sparse materialization, dispatch, compute, combine.
+
+The compiled heart of the paper.  One flat *chunk buffer* holds every expert
+of every MoE layer, fully sharded: rows (experts) over the ``model`` mesh
+axis, the flattened parameter vector over the ``("pod","data")`` axes
+(optimizer states share this layout — exactly one global copy, C1).
+
+Per layer, inside a ``shard_map`` over the whole mesh:
+
+  1. **SparseAllGather(P, P′)** materializes compute slots:
+       * ``k_local`` owned slots — local buffer rows (no model-axis comm),
+       * ``m`` extra slots — replicas fetched across the ``model`` axis by
+         one of three interchangeable impls:
+           - ``ring``  : one `ppermute` per slot over a static ring offset;
+                         per-device volume = m·chunk — the paper's λS bound,
+                         hit exactly (beyond-paper optimization),
+           - ``a2a``   : one `all_to_all` per slot (paper-faithful
+                         upper-bound schedule; robust to any ownership),
+           - ``dense`` : all-gather everything (the FSDP baseline §2.4),
+       followed by an all-gather of the slot chunks over ``("pod","data")``
+       (the *fully sharded* half of FSSDP — FSDP-style, overlappable).
+  2. Token **dispatch** to replica devices (local-first, then round-robin —
+     §4.4) through a single capacity-bounded `all_to_all`.
+  3. Grouped expert FFN over the K compute slots (Pallas grouped-GEMM kernel
+     or XLA batched matmul).
+  4. Combine back (reverse `all_to_all`), weighted by gate probabilities.
+
+**SparseReduceScatter(P′, P) is the AD transpose of step 1** — reverse
+ppermute/all_to_all + scatter-add onto the owning rows; JAX derives it, and
+tests check it against the dense reference gradient.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.ad_checkpoint import checkpoint_name
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.common.config import ModelConfig
+from repro.common.params import Param
+from repro.core.placement import MaterializationPlan
+
+
+# ---------------------------------------------------------------------------
+# Parameter layout
+# ---------------------------------------------------------------------------
+def n_mats(cfg: ModelConfig) -> int:
+    return 3 if cfg.act.endswith("_glu") else 2
+
+
+def chunk_len(cfg: ModelConfig) -> int:
+    return n_mats(cfg) * cfg.d_model * cfg.moe.d_ff
+
+
+def num_moe_layers(cfg: ModelConfig) -> int:
+    return sum(cfg.is_moe_layer(i) for i in range(cfg.num_layers))
+
+
+def buffer_rows(cfg: ModelConfig, ep: int) -> int:
+    """Global rows (padded so every device owns the same count)."""
+    per_dev = -(-num_moe_layers(cfg) * cfg.moe.num_experts // ep)
+    return per_dev * ep
+
+
+def moe_buffer_param(cfg: ModelConfig, ep: int) -> Param:
+    return Param((buffer_rows(cfg, ep), chunk_len(cfg)),
+                 ("expert", "expert_ff"), init="normal")
+
+
+def router_param(cfg: ModelConfig) -> Param:
+    # stacked over MoE layers; REPLICATED — it is tiny (d×E) and sharding
+    # its d_model dim makes GSPMD all-gather the full token tensor for the
+    # gate einsum (seen in dry-run HLO: 8.6 GB f32 gathers).
+    return Param((num_moe_layers(cfg), cfg.d_model, cfg.moe.num_experts),
+                 ("layers", None, None), init="scaled")
+
+
+def unpack_chunks(cfg: ModelConfig, chunks: jnp.ndarray):
+    """chunks: (K, chunk_len) -> (wi, wg|None, wo) with shapes
+    (K,d,f), (K,d,f), (K,f,d)."""
+    d, f = cfg.d_model, cfg.moe.d_ff
+    k = chunks.shape[0]
+    if n_mats(cfg) == 3:
+        wi = chunks[:, :d * f].reshape(k, d, f)
+        wg = chunks[:, d * f:2 * d * f].reshape(k, d, f)
+        wo = chunks[:, 2 * d * f:].reshape(k, f, d)
+        return wi, wg, wo
+    wi = chunks[:, :d * f].reshape(k, d, f)
+    wo = chunks[:, d * f:].reshape(k, f, d)
+    return wi, None, wo
+
+
+def pack_expert(cfg: ModelConfig, wi, wg, wo) -> jnp.ndarray:
+    parts = [wi.reshape(-1)] + ([wg.reshape(-1)] if wg is not None else []) \
+        + [wo.reshape(-1)]
+    return jnp.concatenate(parts)
+
+
+# ---------------------------------------------------------------------------
+# Plan -> device arrays
+# ---------------------------------------------------------------------------
+class PlanArrays(NamedTuple):
+    """Per-MoE-layer tables fed to the jitted step (leading dim = L_moe)."""
+    local_rows: jnp.ndarray      # (L, M, k_local) int32
+    local_experts: jnp.ndarray   # (L, M, k_local) int32 (-1 pad)
+    extra_experts: jnp.ndarray   # (L, M, m) int32 (-1 pad)
+    ring_send_rows: jnp.ndarray  # (L, M, m) int32
+    expert_slot: jnp.ndarray     # (L, M, E) int32 (-1 = absent)
+    replicas: jnp.ndarray        # (L, E, r_max) int32
+    n_replicas: jnp.ndarray      # (L, E) int32
+    owner_dev: jnp.ndarray       # (L, E) int32
+    owner_row: jnp.ndarray       # (L, E) int32
+
+
+def plan_to_arrays(plan: MaterializationPlan, r_max: int = 0) -> PlanArrays:
+    sh = plan.sharding
+    r_max = r_max or max(1, plan.m + 1)
+    slot_expert, expert_slot = plan.slot_tables()
+    replicas, n_rep = plan.replica_tables(r_max)
+    return PlanArrays(
+        local_rows=jnp.asarray(plan.local_rows, jnp.int32),
+        local_experts=jnp.asarray(plan.local_experts, jnp.int32),
+        extra_experts=jnp.asarray(plan.extra_experts, jnp.int32),
+        ring_send_rows=jnp.asarray(plan.ring_send_rows, jnp.int32),
+        expert_slot=jnp.asarray(expert_slot, jnp.int32),
+        replicas=jnp.asarray(replicas, jnp.int32),
+        n_replicas=jnp.asarray(n_rep, jnp.int32),
+        owner_dev=jnp.asarray(sh.owner_dev, jnp.int32),
+        owner_row=jnp.asarray(sh.owner_row, jnp.int32),
+    )
+
+
+def plan_arrays_specs(mesh: Mesh, ep_axis: str = "model") -> PlanArrays:
+    """shard_map in_specs for a single layer's slice of PlanArrays."""
+    s = P(ep_axis)          # tables indexed by device on dim 0
+    r = P()                 # replicated
+    return PlanArrays(local_rows=s, local_experts=s, extra_experts=r,
+                      ring_send_rows=s, expert_slot=r, replicas=r,
+                      n_replicas=r, owner_dev=r, owner_row=r)
+
+
+def abstract_plan_arrays(cfg: ModelConfig, ep: int, m: int, k_local: int,
+                         r_max: int = 0) -> PlanArrays:
+    L, E = num_moe_layers(cfg), cfg.moe.num_experts
+    r_max = r_max or max(1, m + 1)
+    sds = partial(jax.ShapeDtypeStruct, dtype=jnp.int32)
+    return PlanArrays(
+        local_rows=sds((L, ep, k_local)), local_experts=sds((L, ep, k_local)),
+        extra_experts=sds((L, ep, m)), ring_send_rows=sds((L, ep, m)),
+        expert_slot=sds((L, ep, E)), replicas=sds((L, E, r_max)),
+        n_replicas=sds((L, E)), owner_dev=sds((L, E)), owner_row=sds((L, E)))
+
+
+class MoEAux(NamedTuple):
+    counts: jnp.ndarray          # (E,) f32 global token counts this layer
+    aux_loss: jnp.ndarray        # scalar load-balance loss
+    z_loss: jnp.ndarray          # scalar router z-loss
+    dropped_frac: jnp.ndarray    # scalar fraction of (token,k) dropped
+    device_loads: jnp.ndarray    # (M,) real tokens processed per EP device
+                                 # (the straggler observable, §1)
+
+
+# ---------------------------------------------------------------------------
+# Gate (GShard top-k) — runs under GSPMD, outside the shard_map region
+# ---------------------------------------------------------------------------
+def gate(cfg: ModelConfig, wr: jnp.ndarray, x: jnp.ndarray,
+         valid: jnp.ndarray, psum_axes=None):
+    """x: (T, D); valid: (T,) bool.  Returns (idx:(T,k), vals:(T,k) f32,
+    counts:(E,), aux_loss, z_loss).  With ``psum_axes`` (inside shard_map)
+    the statistics are globalized with a single (E,)+scalars psum."""
+    k = cfg.moe.experts_per_token
+    e = cfg.moe.num_experts
+    logits = jnp.einsum("td,de->te", x.astype(jnp.float32),
+                        wr.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    vals, idx = jax.lax.top_k(probs, k)
+    vals = vals / jnp.maximum(vals.sum(-1, keepdims=True), 1e-9)
+    vals = vals * valid[:, None]
+    oh = jax.nn.one_hot(idx, e, dtype=jnp.float32) * valid[:, None, None]
+    counts = oh.sum((0, 1))                                   # (E,)
+    prob_sum = (probs * valid[:, None]).sum(0)                # (E,)
+    n_valid = valid.sum().astype(jnp.float32)
+    z_sum = jnp.sum((jax.nn.logsumexp(logits, axis=-1) ** 2) * valid)
+    if psum_axes is not None:
+        counts, prob_sum, n_valid, z_sum = jax.lax.psum(
+            (counts, prob_sum, n_valid, z_sum), psum_axes)
+    n_valid = jnp.maximum(n_valid, 1.0)
+    # GShard aux: E * sum_e frac_e * mean_prob_e
+    frac = counts / jnp.maximum(counts.sum(), 1.0)
+    mean_prob = prob_sum / n_valid
+    aux = e * jnp.sum(jax.lax.stop_gradient(frac) * mean_prob)
+    z = z_sum / n_valid
+    return idx, vals, counts, aux, z
+
+
+# ---------------------------------------------------------------------------
+# SparseAllGather inside shard_map
+# ---------------------------------------------------------------------------
+def _materialize(cfg: ModelConfig, buf, pa: PlanArrays, impl: str,
+                 ep_axis: str, fsdp_axes, m: int):
+    """buf: (rows_local, chunk_loc).  Returns (K, chunk_len) full chunks.
+
+    pa fields here are the PER-LAYER slices with the shard_map-local shapes:
+    local_rows (1,k_local), ring_send_rows (1,m), extra_experts (M,m), ...
+    """
+    me = jax.lax.axis_index(ep_axis)
+    M = jax.lax.axis_size(ep_axis)
+    local_rows = pa.local_rows[0]                 # (k_local,)
+    owned = jnp.take(buf, local_rows, axis=0)     # (k_local, chunk_loc)
+    owned = owned * (pa.local_experts[0][:, None] >= 0).astype(buf.dtype)
+    slots = [owned]
+    if impl == "ring" and m > 0:
+        perms = None
+        for j in range(m):
+            row = pa.ring_send_rows[0, j]
+            chunk = jax.lax.dynamic_slice_in_dim(buf, row, 1, axis=0)
+            perm = [(s, (s - j - 1) % M) for s in range(M)]
+            got = jax.lax.ppermute(chunk, ep_axis, perm)
+            got = got * (pa.extra_experts[me, j] >= 0).astype(buf.dtype)
+            slots.append(got)
+    elif impl == "a2a" and m > 0:
+        for j in range(m):
+            wanted = pa.extra_experts[:, j]                       # (M,)
+            wanted_c = jnp.maximum(wanted, 0)
+            is_mine = (jnp.take(pa.owner_dev, wanted_c) == me) & (wanted >= 0)
+            rows = jnp.take(pa.owner_row, wanted_c)
+            send = jnp.take(buf, rows, axis=0)                    # (M, chunk_loc)
+            send = send * is_mine[:, None].astype(buf.dtype)
+            recv = jax.lax.all_to_all(send, ep_axis, 0, 0,
+                                      tiled=False)                # (M, chunk_loc)
+            my_e = pa.extra_experts[me, j]
+            src = jnp.take(pa.owner_dev, jnp.maximum(my_e, 0))
+            got = jnp.take(recv, src[None], axis=0)               # (1, chunk_loc)
+            got = got * (my_e >= 0).astype(buf.dtype)
+            slots.append(got)
+    elif impl == "dense":
+        # FSDP baseline: everything everywhere (K == k_local + (E - k_local))
+        allbuf = jax.lax.all_gather(buf, ep_axis, tiled=True)     # (rows, chunk_loc)
+        e_ids = pa.extra_experts[me]                              # (m=E-ish,)
+        grow = (jnp.take(pa.owner_dev, jnp.maximum(e_ids, 0)) * buf.shape[0]
+                + jnp.take(pa.owner_row, jnp.maximum(e_ids, 0)))
+        got = jnp.take(allbuf, grow, axis=0)
+        got = got * (e_ids >= 0).astype(buf.dtype)[:, None]
+        slots.append(got)
+    chunks = jnp.concatenate(slots, axis=0)                       # (K, chunk_loc)
+    # FSDP half: gather the sharded parameter vector (overlappable)
+    if fsdp_axes:
+        chunks = jax.lax.all_gather(chunks, fsdp_axes, axis=1, tiled=True)
+    return chunks
+
+
+# ---------------------------------------------------------------------------
+# Expert compute over K slots
+# ---------------------------------------------------------------------------
+def _expert_ffn(cfg: ModelConfig, chunks, xr, use_pallas: bool,
+                group_sizes=None):
+    """chunks: (K, chunk_len); xr: (K, T, D). Returns (K, T, D)."""
+    wi, wg, wo = unpack_chunks(cfg, chunks)
+    dt = xr.dtype
+    if use_pallas:
+        from repro.kernels import ops as kops
+        return kops.grouped_mlp(xr, wi.astype(dt),
+                                None if wg is None else wg.astype(dt),
+                                wo.astype(dt), act=cfg.act)
+    h = jnp.einsum("ktd,kdf->ktf", xr, wi.astype(dt))
+    if wg is not None:
+        from repro.models.layers import glu_fn
+        h = glu_fn(cfg.act)(h) * jnp.einsum("ktd,kdf->ktf", xr, wg.astype(dt))
+    else:
+        h = jax.nn.gelu(h)
+    return jnp.einsum("ktf,kfd->ktd", h, wo.astype(dt))
+
+
+# ---------------------------------------------------------------------------
+# The full FSSDP MoE layer body (inside shard_map)
+# ---------------------------------------------------------------------------
+def _moe_body(cfg: ModelConfig, impl: str, ep_axis: str, fsdp_axes,
+              m: int, capacity: int, use_pallas: bool, local_first: bool,
+              x, valid, wr, buf, pa: PlanArrays):
+    """x: (T_loc, D) local tokens; valid: (T_loc,) padding mask.
+    buf: (rows_local, chunk_loc).  Returns (y, counts, aux, z, dropped).
+
+    The gate lives INSIDE the shard_map: top_k is row-local, so keeping it
+    here avoids GSPMD's full (T, E) gather (seen in dry-run HLO: 268 MB per
+    layer per device).  Global gate statistics come from one (E,) psum.
+    """
+    me = jax.lax.axis_index(ep_axis)
+    M = jax.lax.axis_size(ep_axis)
+    T, D = x.shape
+    all_axes = tuple(fsdp_axes) + (ep_axis,)
+    idx, vals, counts, aux, z = gate(cfg, wr, x, valid,
+                                     psum_axes=all_axes)
+    k = idx.shape[1]
+    K = pa.local_rows.shape[-1] + m if impl != "dense" \
+        else pa.local_rows.shape[-1] + pa.extra_experts.shape[-1]
+
+    chunks = _materialize(cfg, buf, pa, impl, ep_axis, fsdp_axes, m)
+    chunks = checkpoint_name(chunks, "moe_materialized")
+
+    # ---- dispatch plan (§4.4: local replica first, else round-robin) ----
+    e_flat = idx.reshape(-1)                                   # (T*k,)
+    w_flat = vals.reshape(-1)
+    valid = w_flat > 0
+    e_safe = jnp.maximum(e_flat, 0)
+    tk = e_flat.shape[0]
+    my_slot = jnp.take(pa.expert_slot[me], e_safe)             # (T*k,)
+    if impl == "dense":
+        # every expert local: pure data parallelism for the MoE (FSDP)
+        dest = jnp.full((tk,), me, jnp.int32)
+        slot = my_slot
+    else:
+        n_rep = jnp.take(pa.n_replicas, e_safe)
+        # stable per-expert rank for round-robin across replicas
+        oh_e = jax.nn.one_hot(e_safe, cfg.moe.num_experts, dtype=jnp.int32)
+        rank = (jnp.cumsum(oh_e, axis=0) - oh_e)[jnp.arange(tk), e_safe]
+        rr = (rank + me) % jnp.maximum(n_rep, 1)
+        r_max = pa.replicas.shape[-1]
+        dest_rr = pa.replicas[e_safe, jnp.minimum(rr, r_max - 1)]
+        if local_first:
+            # paper §4.4: a local replica absorbs all local tokens.  Best
+            # for network volume; with static per-pair capacity the local
+            # cell must then be sized for the device's own hot load.
+            dest = jnp.where(my_slot >= 0, me, dest_rr)
+        else:
+            # round-robin over ALL replicas: spreads hot-expert tokens
+            # evenly across cells — the static-buffer-friendly adaptation
+            dest = dest_rr
+        slot = pa.expert_slot[dest, e_safe]
+    # position within (dest, slot) cell
+    cap_eff = M * capacity if impl == "dense" else capacity
+    cell = dest * K + slot                                     # (T*k,)
+    oh_c = jax.nn.one_hot(cell, M * K, dtype=jnp.int32)
+    pos = (jnp.cumsum(oh_c, axis=0) - oh_c)[jnp.arange(tk), cell]
+    keep = valid & (pos < cap_eff) & (slot >= 0)
+    dropped = 1.0 - keep.sum() / jnp.maximum(valid.sum(), 1)
+    pos_w = jnp.where(keep, pos, cap_eff)                      # OOB -> dropped
+    xtok = x[jnp.arange(tk) // k]
+
+    if impl == "dense":
+        # no token communication at all — local (K, M*C, D) compute buffer
+        buf_x = jnp.zeros((K, cap_eff, D), x.dtype)
+        buf_x = buf_x.at[slot, pos_w].set(xtok, mode="drop")
+        yr = _expert_ffn(cfg, chunks, buf_x, use_pallas)
+        got = yr[slot, pos_w] * keep[:, None].astype(x.dtype)
+    else:
+        send = jnp.zeros((M, K, capacity, D), x.dtype)
+        send = send.at[dest, slot, pos_w].set(xtok, mode="drop")
+        recv = jax.lax.all_to_all(send, ep_axis, 0, 0, tiled=False)  # (M,K,C,D)
+        xr = recv.transpose(1, 0, 2, 3).reshape(K, M * capacity, D)
+        yr = _expert_ffn(cfg, chunks, xr, use_pallas)
+        yback = yr.reshape(K, M, capacity, D).transpose(1, 0, 2, 3)
+        ret = jax.lax.all_to_all(yback, ep_axis, 0, 0, tiled=False)
+        got = ret[dest, slot, pos_w] * keep[:, None].astype(x.dtype)
+
+    y = (got.reshape(T, k, D)
+         * vals.reshape(T, k, 1).astype(x.dtype)).sum(axis=1)
+    dev_loads = jax.lax.psum(
+        (jax.nn.one_hot(dest, M, dtype=jnp.float32)
+         * keep[:, None]).sum(0), all_axes)
+    return y, counts, aux, z, dropped, dev_loads
+
+
+# ---------------------------------------------------------------------------
+# Public entry points
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class MoERuntime:
+    """Distribution context for the MoE layer."""
+    mesh: Optional[Mesh] = None
+    ep_axis: str = "model"
+    batch_axes: Tuple[str, ...] = ("data",)   # token-sharding axes (w/ pod)
+    impl: str = "ring"                        # ring | a2a | dense
+    m: int = 2
+    k_local: int = 0
+    capacity: int = 0                         # per (pair, slot); 0 = auto
+    r_max: int = 0
+    use_pallas: bool = False
+    local_first: bool = True                  # §4.4 dispatch rule
+
+    @property
+    def fsdp_axes(self):
+        return self.batch_axes
+
+    def ep_size(self) -> int:
+        if self.mesh is None:
+            return 1
+        return self.mesh.shape[self.ep_axis]
+
+
+def auto_capacity(cfg: ModelConfig, t_loc: int, ep: int, k_total: int) -> int:
+    want = cfg.moe.capacity_factor * t_loc * cfg.moe.experts_per_token \
+        / max(ep * k_total, 1)
+    return max(1, int(-(-want // 1)))
+
+
+def moe_layer(cfg: ModelConfig, rt: MoERuntime, x, wr, buf,
+              pa: PlanArrays, valid=None):
+    """Distributed FSSDP MoE layer.
+
+    x: (T, D) tokens, globally sharded over (batch_axes..., ep_axis) on dim 0
+       (T must be divisible by the full device count).
+    wr: (D, E) router weights for THIS layer.
+    buf: the global flat chunk buffer (rows, chunk_len).
+    pa: this layer's PlanArrays slice (leading L dim removed).
+    Returns (y: (T, D), MoEAux).
+    """
+    if valid is None:
+        valid = jnp.ones((x.shape[0],), bool)
+    # mixed precision: materialize/dispatch in the compute dtype; the f32
+    # master buffer stays sharded (AD upcasts the gradient on the way back)
+    buf = buf.astype(x.dtype)
+    if rt.mesh is None:
+        idx, vals, counts, aux, z = gate(cfg, wr, x, valid)
+        y, dropped = moe_layer_ref(cfg, x, idx, vals, buf, pa)
+        return y, MoEAux(counts, aux, z, dropped,
+                         counts.sum()[None])
+
+    from jax.experimental.shard_map import shard_map
+    ep = rt.ep_size()
+    all_axes = tuple(rt.batch_axes) + (rt.ep_axis,)
+    t_loc = x.shape[0] // rt.mesh.shape[rt.ep_axis] // int(
+        np.prod([rt.mesh.shape[a] for a in rt.batch_axes]))
+    k_total = pa.local_rows.shape[-1] + (
+        pa.extra_experts.shape[-1] if rt.impl == "dense" else rt.m)
+    cap = rt.capacity or auto_capacity(cfg, t_loc, ep, k_total)
+
+    body = partial(_moe_body, cfg, rt.impl, rt.ep_axis, rt.fsdp_axes,
+                   rt.m if rt.impl != "dense" else pa.extra_experts.shape[-1],
+                   cap, rt.use_pallas, rt.local_first)
+    pspecs = plan_arrays_specs(rt.mesh, rt.ep_axis)
+    y, counts, aux, z, dropped, dev_loads = shard_map(
+        body, mesh=rt.mesh,
+        in_specs=(P(all_axes, None), P(all_axes), P(),
+                  P(rt.ep_axis, rt.fsdp_axes), pspecs),
+        out_specs=(P(all_axes, None), P(), P(), P(), P(), P()),
+        check_rep=False,
+    )(x, valid, wr, buf, pa)
+    return y, MoEAux(counts, aux, z, dropped, dev_loads)
+
+
+# ---------------------------------------------------------------------------
+# Single-device reference (oracle) — identical routing semantics, no drops
+# ---------------------------------------------------------------------------
+def moe_layer_ref(cfg: ModelConfig, x, idx, vals, buf, pa: PlanArrays):
+    """Dense-compute oracle: every expert applied to every token, combined
+    with the top-k weights.  buf is the UNSHARDED (rows, chunk_len) buffer;
+    expert e's chunk sits at global row owner_dev*rows_per_dev... — for the
+    single-device case rows are owner_row directly (M=1)."""
+    e_count = cfg.moe.num_experts
+    rows = pa.owner_row if pa.owner_row.ndim == 1 else pa.owner_row
+    chunks = jnp.take(buf, rows, axis=0)               # (E, chunk_len)
+    wi, wg, wo = unpack_chunks(cfg, chunks)
+    dt = x.dtype
+    h = jnp.einsum("td,edf->etf", x, wi.astype(dt))
+    if wg is not None:
+        from repro.models.layers import glu_fn
+        h = glu_fn(cfg.act)(h) * jnp.einsum("td,edf->etf", x, wg.astype(dt))
+    else:
+        h = jax.nn.gelu(h)
+    y_all = jnp.einsum("etf,efd->etd", h, wo.astype(dt))  # (E, T, D)
+    comb = jnp.zeros((x.shape[0], e_count), jnp.float32)
+    comb = comb.at[jnp.arange(x.shape[0])[:, None], idx].add(vals)
+    y = jnp.einsum("te,etd->td", comb.astype(dt), y_all)
+    return y, jnp.zeros((), jnp.float32)

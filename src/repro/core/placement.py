@@ -1,0 +1,204 @@
+"""Chunk placements and sharding/materialization plans (host-side, numpy).
+
+Terminology follows the paper (§3.1): a *chunk* is one expert's flattened
+parameter vector; a *chunk placement* P ⊆ C × D says which chunks are present
+on which devices.  The *sharding plan* (pre-condition P) is surjective and
+disjoint — every expert has exactly one owning device, which also holds its
+optimizer state.  The *materialization plan* (post-condition P′ ⊇ P) adds
+ephemeral replicas.
+
+Static-shape contract with the compiled step (TPU adaptation, DESIGN.md §2):
+
+* each device owns a flat buffer of ``rows_per_device`` chunk rows covering
+  **all** MoE layers at once (the paper's "unified memory space across MoE
+  layers", §4.3);
+* per layer, each device exposes ``k_local`` compute slots for experts it
+  owns and ``m`` extra slots for replicas of experts owned elsewhere;
+* extra slot ``j`` of device ``d`` is filled over a **static ring offset**
+  (impl="ring": from device ``(d + j + 1) % M``, one collective_permute per
+  slot — exactly λS volume) or via a q-round all_to_all (impl="a2a",
+  paper-faithful upper bound);
+* all tables below are int32 numpy arrays shipped to the jitted step as
+  ordinary runtime inputs — placements change every iteration with **zero
+  recompilation**.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class ShardingPlan:
+    """Pre-condition P: expert ownership + flat-buffer rows (all MoE layers)."""
+
+    num_layers: int                     # number of MoE layers L
+    num_experts: int                    # experts per layer E
+    num_devices: int                    # EP-axis size M
+    rows_per_device: int                # flat buffer rows per device
+    owner_dev: np.ndarray               # (L, E) int32 — owning device
+    owner_row: np.ndarray               # (L, E) int32 — row in owner's buffer
+    k_local: int                        # max owned experts per (layer, device)
+
+    def validate(self) -> None:
+        L, E, M = self.num_layers, self.num_experts, self.num_devices
+        assert self.owner_dev.shape == (L, E) and self.owner_row.shape == (L, E)
+        assert (0 <= self.owner_dev).all() and (self.owner_dev < M).all()
+        # rows unique per device
+        flat = self.owner_dev.astype(np.int64) * self.rows_per_device + self.owner_row
+        assert len(np.unique(flat)) == L * E, "buffer rows must be unique"
+        assert (self.owner_row < self.rows_per_device).all()
+        # k_local respected
+        for l in range(L):
+            counts = np.bincount(self.owner_dev[l], minlength=M)
+            assert counts.max() <= self.k_local, (l, counts.max(), self.k_local)
+
+    def owned_rows_table(self) -> Tuple[np.ndarray, np.ndarray]:
+        """Per (layer, device): which buffer rows hold its owned experts.
+
+        Returns (rows:(L,M,k_local) int32 buffer-row or 0 for pad,
+                 experts:(L,M,k_local) int32 expert-id or -1 for pad)."""
+        L, E, M = self.num_layers, self.num_experts, self.num_devices
+        rows = np.zeros((L, M, self.k_local), np.int32)
+        experts = np.full((L, M, self.k_local), -1, np.int32)
+        fill = np.zeros((L, M), np.int32)
+        for l in range(L):
+            for e in range(E):
+                d = self.owner_dev[l, e]
+                j = fill[l, d]
+                rows[l, d, j] = self.owner_row[l, e]
+                experts[l, d, j] = e
+                fill[l, d] += 1
+        return rows, experts
+
+
+def homogeneous_sharding(num_layers: int, num_experts: int, num_devices: int,
+                         k_local: Optional[int] = None) -> ShardingPlan:
+    """Trivial even sharding (paper §3.2): expert e of every layer owned by
+    device e // (E/M); buffer rows packed layer-major."""
+    L, E, M = num_layers, num_experts, num_devices
+    per_dev = -(-E // M)                     # ceil
+    k_local = k_local or per_dev
+    owner_dev = np.zeros((L, E), np.int32)
+    owner_row = np.zeros((L, E), np.int32)
+    rows_per_device = L * per_dev
+    next_row = np.zeros((M,), np.int32)
+    for l in range(L):
+        for e in range(E):
+            d = min(e // per_dev, M - 1)
+            owner_dev[l, e] = d
+            owner_row[l, e] = next_row[d]
+            next_row[d] += 1
+    plan = ShardingPlan(L, E, M, rows_per_device, owner_dev, owner_row,
+                        k_local=max(k_local, per_dev))
+    plan.validate()
+    return plan
+
+
+@dataclasses.dataclass
+class MaterializationPlan:
+    """Post-condition P′ for every layer, in static-slot form.
+
+    Compute slots per (layer, device) = k_local owned + m extra.
+    """
+
+    sharding: ShardingPlan
+    m: int                              # extra slots per device
+    impl: str                           # "ring" | "a2a" | "dense" | "none"
+    # (L, M, k_local): buffer row / expert id of owned compute slots
+    local_rows: np.ndarray
+    local_experts: np.ndarray
+    # (L, M, m): expert id materialized in each extra slot (-1 = unused)
+    extra_experts: np.ndarray
+    # ring impl: (L, M, m) buffer row each device SENDS in ring round j
+    # (device s sends, in round j, the chunk destined for (s - j - 1) % M)
+    ring_send_rows: np.ndarray
+    # a2a impl: q rounds; (L, M, q_rounds) row sent by s to dst in round r is
+    # a2a_send_rows[l, s, r, dst]; -1 = zero chunk.  Shape (L, M, q, M).
+    a2a_send_rows: Optional[np.ndarray] = None
+    q_rounds: int = 0
+
+    # ------------------------------------------------------------------
+    @property
+    def k_total(self) -> int:
+        return self.sharding.k_local + self.m
+
+    def slot_tables(self) -> Tuple[np.ndarray, np.ndarray]:
+        """Returns (slot_expert:(L,M,K), expert_slot:(L,M,E)).
+
+        slot_expert: expert id in each compute slot (-1 pad).
+        expert_slot[l,d,e]: local compute-slot of e on d, or -1."""
+        L = self.sharding.num_layers
+        M = self.sharding.num_devices
+        E = self.sharding.num_experts
+        slot_expert = np.concatenate([self.local_experts, self.extra_experts],
+                                     axis=2).astype(np.int32)
+        expert_slot = np.full((L, M, E), -1, np.int32)
+        for l in range(L):
+            for d in range(M):
+                for j, e in enumerate(slot_expert[l, d]):
+                    if e >= 0:
+                        expert_slot[l, d, e] = j
+        return slot_expert, expert_slot
+
+    def replica_tables(self, r_max: int) -> Tuple[np.ndarray, np.ndarray]:
+        """(replicas:(L,E,r_max) device ids padded by repeating,
+            n_replicas:(L,E))."""
+        L, E, M = (self.sharding.num_layers, self.sharding.num_experts,
+                   self.sharding.num_devices)
+        slot_expert, _ = self.slot_tables()
+        replicas = np.zeros((L, E, r_max), np.int32)
+        n_rep = np.zeros((L, E), np.int32)
+        for l in range(L):
+            for d in range(M):
+                for e in slot_expert[l, d]:
+                    if e >= 0 and n_rep[l, e] < r_max:
+                        replicas[l, e, n_rep[l, e]] = d
+                        n_rep[l, e] += 1
+        # pad by cycling existing replicas so modular indexing is safe
+        for l in range(L):
+            for e in range(E):
+                n = n_rep[l, e]
+                assert n >= 1, f"expert {e} of layer {l} has no replica"
+                for j in range(n, r_max):
+                    replicas[l, e, j] = replicas[l, e, j % n]
+        return replicas, n_rep
+
+    def validate(self) -> None:
+        sh = self.sharding
+        L, E, M = sh.num_layers, sh.num_experts, sh.num_devices
+        assert self.extra_experts.shape == (L, M, self.m if self.m else 0) or self.m == 0
+        for l in range(L):
+            for d in range(M):
+                # paper: P′ ⊇ P — owned experts always present (local slots)
+                seen = set(x for x in self.local_experts[l, d] if x >= 0)
+                for j in range(self.m):
+                    e = self.extra_experts[l, d, j]
+                    if e < 0:
+                        continue
+                    assert e not in seen, "duplicate materialization"
+                    seen.add(e)
+                    if self.impl == "ring":
+                        src = (d + j + 1) % M
+                        assert sh.owner_dev[l, e] == src, (
+                            "ring constraint violated")
+                        assert self.ring_send_rows[l, src, j] == sh.owner_row[l, e]
+
+    def sparsity(self) -> float:
+        """λ of Eq. (1): fraction of chunks moved across devices."""
+        moved = int((self.extra_experts >= 0).sum())
+        total = self.sharding.num_layers * self.sharding.num_experts
+        return moved / max(total, 1)
+
+
+def ep_materialization(sharding: ShardingPlan) -> MaterializationPlan:
+    """Expert parallelism: P′ = P (no replicas) — the paper's EP baseline."""
+    L, M = sharding.num_layers, sharding.num_devices
+    rows, experts = sharding.owned_rows_table()
+    return MaterializationPlan(
+        sharding=sharding, m=0, impl="none",
+        local_rows=rows, local_experts=experts,
+        extra_experts=np.zeros((L, M, 0), np.int32),
+        ring_send_rows=np.zeros((L, M, 0), np.int32))

@@ -1,0 +1,332 @@
+"""Hecate scheduler: Algorithms 1 & 2, load prediction, calibration.
+
+All host-side numpy: runs between steps (or overlapped on CPU while the
+accelerators run step *i*), emitting the static-shape tables of
+``repro.core.placement`` that the jitted step consumes.  No recompilation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.placement import (MaterializationPlan, ShardingPlan,
+                                  homogeneous_sharding)
+
+
+# ---------------------------------------------------------------------------
+# Load prediction (paper §3.2: sliding-window average, w = 5)
+# ---------------------------------------------------------------------------
+class LoadPredictor:
+    """Predicts next-iteration expert loads per MoE layer from history."""
+
+    def __init__(self, num_layers: int, num_experts: int, window: int = 5):
+        self.window = window
+        self.history: list[np.ndarray] = []   # each (L, E) token counts
+        self.num_layers = num_layers
+        self.num_experts = num_experts
+
+    def observe(self, loads: np.ndarray) -> None:
+        loads = np.asarray(loads, np.float64)
+        assert loads.shape == (self.num_layers, self.num_experts)
+        self.history.append(loads)
+        if len(self.history) > self.window:
+            self.history.pop(0)
+
+    def predict(self) -> np.ndarray:
+        if not self.history:
+            return np.ones((self.num_layers, self.num_experts))
+        return np.mean(self.history, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Overlap degree (paper §4.2): t = T_nonMoE * bw / expert_size
+# ---------------------------------------------------------------------------
+def overlap_degree(t_non_moe_s: float, bw_bytes_per_s: float,
+                   expert_bytes: float) -> int:
+    if expert_bytes <= 0:
+        return 0
+    return int(t_non_moe_s * bw_bytes_per_s / expert_bytes)
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1 — sparse materialization
+# ---------------------------------------------------------------------------
+def _assign_slots_by_load(load_frac: float, tot_slots: int, remaining: int
+                          ) -> int:
+    """Paper line 9: replicas ∝ load share (at least 1 if selected)."""
+    return max(1, min(remaining, int(round(load_frac * tot_slots))))
+
+
+def sparse_materialization(sharding: ShardingPlan, loads: np.ndarray,
+                           t: int, m: int, *, impl: str = "ring",
+                           node_size: int = 0, q_rounds: int = 0,
+                           ) -> MaterializationPlan:
+    """Algorithm 1, per layer, under the static-slot contract.
+
+    loads: (L, E) predicted token counts.
+    t: overlap degree (max hidden-comm experts); m: extra slots per device.
+    impl:
+      "ring":  extra slot j of device d is fed from static source
+               (d + j + 1) % M — TRUE λS volume (beyond-paper optimized).
+      "a2a":   q-round all_to_all; scheduler enforces ≤ q_rounds chunks per
+               (src, dst) pair (paper-faithful volume upper bound).
+      "dense": all experts on all devices (FSDP baseline; ignores t/m).
+    node_size: devices per node for topology-aware spreading (0 = flat).
+    """
+    sh = sharding
+    L, E, M = sh.num_layers, sh.num_experts, sh.num_devices
+    loads = np.asarray(loads, np.float64).reshape(L, E)
+    rows, local_experts = sh.owned_rows_table()
+
+    if impl == "dense":
+        m_eff = E                       # every expert everywhere
+    else:
+        t = min(t, E)
+        m_eff = min(m, t) if t > 0 else 0
+    extra = np.full((L, M, m_eff), -1, np.int32)
+    ring_rows = np.zeros((L, M, m_eff), np.int32)
+    q = q_rounds or max(1, -(-m_eff // max(M - 1, 1)))
+    a2a_rows = np.full((L, M, q, M), -1, np.int32)
+
+    for l in range(L):
+        f = loads[l]
+        owned_on = [set(local_experts[l, d][local_experts[l, d] >= 0])
+                    for d in range(M)]
+        present = [set(s) for s in owned_on]
+        if impl == "dense":
+            for d in range(M):
+                j = 0
+                for e in range(E):
+                    if e not in present[d]:
+                        extra[l, d, j] = e
+                        j += 1
+            continue
+        if m_eff == 0:
+            continue
+        if impl == "ring":
+            _alg1_ring(sh, l, f, m_eff, extra, ring_rows, present)
+        else:
+            _alg1_a2a(sh, l, f, t, m_eff, q, extra, a2a_rows, present,
+                      node_size)
+
+    plan = MaterializationPlan(
+        sharding=sh, m=m_eff, impl=impl,
+        local_rows=rows, local_experts=local_experts,
+        extra_experts=extra, ring_send_rows=ring_rows,
+        a2a_send_rows=(a2a_rows if impl == "a2a" else None),
+        q_rounds=(q if impl == "a2a" else 0))
+    return plan
+
+
+def _alg1_ring(sh: ShardingPlan, l: int, f: np.ndarray, m: int,
+               extra: np.ndarray, ring_rows: np.ndarray,
+               present: list) -> None:
+    """Ring-constrained Alg 1: slot j of device d must hold an expert owned
+    by (d+j+1) % M; greedily pick the hottest eligible expert."""
+    M = sh.num_devices
+    owned_by = [np.where(sh.owner_dev[l] == d)[0] for d in range(M)]
+    for j in range(m):
+        for d in range(M):
+            src = (d + j + 1) % M
+            cands = [e for e in owned_by[src] if e not in present[d]]
+            if not cands:
+                # nothing new to replicate from src: resend hottest owned
+                # (harmless duplicate — slot marked unused)
+                continue
+            e = max(cands, key=lambda e: f[e])
+            extra[l, d, j] = e
+            ring_rows[l, src, j] = sh.owner_row[l, e]
+            present[d].add(e)
+
+
+def _alg1_a2a(sh: ShardingPlan, l: int, f: np.ndarray, t: int, m: int,
+              q: int, extra: np.ndarray, a2a_rows: np.ndarray,
+              present: list, node_size: int) -> None:
+    """Paper-faithful Algorithm 1 under the q-per-(src,dst) constraint."""
+    M = sh.num_devices
+    order = np.argsort(-f)
+    top_t = list(order[:max(t, 0)]) if t > 0 else list(order)
+    slots_free = np.full(M, m, np.int32)
+    pair_used = np.zeros((M, M), np.int32)       # chunks src -> dst
+    slot_next = np.zeros(M, np.int32)
+    nodes = max(1, M // node_size) if node_size else 1
+    nsz = node_size or M
+
+    if t <= m:
+        # lines 4-5: materialize top-t experts on ALL devices
+        targets = [(e, [d for d in range(M)]) for e in top_t]
+    else:
+        # lines 6-11: replicas ∝ load
+        tot_slots = int(slots_free.sum())
+        targets = []
+        remaining = tot_slots
+        fsum = max(f[top_t].sum(), 1e-9)
+        for e in top_t:
+            n = _assign_slots_by_load(f[e] / fsum, tot_slots, remaining)
+            remaining -= n
+            targets.append((e, n))
+            if remaining <= 0:
+                break
+        # expand counts into device choices below
+        expanded = []
+        for e, n in targets:
+            # node-aware: prefer nodes where e is NOT yet present, then
+            # devices with more free slots
+            devs = sorted(
+                (d for d in range(M)),
+                key=lambda d: (
+                    any(e in present[dd]
+                        for dd in range((d // nsz) * nsz, (d // nsz + 1) * nsz)),
+                    -slots_free[d]))
+            chosen = []
+            for d in devs:
+                if len(chosen) >= n:
+                    break
+                chosen.append(d)
+            expanded.append((e, chosen))
+        targets = expanded
+
+    for e, devs in targets:
+        src = sh.owner_dev[l, e]
+        for d in devs:
+            if (e in present[d] or slots_free[d] <= 0
+                    or pair_used[src, d] >= q or src == d):
+                continue
+            j = slot_next[d]
+            extra[l, d, j] = e
+            a2a_rows[l, src, pair_used[src, d], d] = sh.owner_row[l, e]
+            pair_used[src, d] += 1
+            slot_next[d] += 1
+            slots_free[d] -= 1
+            present[d].add(e)
+
+
+# ---------------------------------------------------------------------------
+# Calibration (paper §4.2): re-run Alg 1 on the REAL gate decision and accept
+# if the modeled latency (incl. the extra on-critical-path spAG) improves.
+# ---------------------------------------------------------------------------
+def calibrate(plan: MaterializationPlan, real_loads: np.ndarray,
+              t: int, m: int, cost_model, *, impl: str = "ring"
+              ) -> MaterializationPlan:
+    cand = sparse_materialization(plan.sharding, real_loads, t, m, impl=impl)
+    base_cost = cost_model(plan, real_loads, extra_on_path=False)
+    cand_cost = cost_model(cand, real_loads, extra_on_path=True)
+    return cand if cand_cost < base_cost else plan
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 2 — heterogeneous sharding (cross-layer, memory balanced)
+# ---------------------------------------------------------------------------
+def heterogeneous_sharding(loads: np.ndarray, num_devices: int, t: int,
+                           *, node_size: int = 0,
+                           k_local: Optional[int] = None) -> ShardingPlan:
+    """Paper Algorithm 2.  loads: (L, E).  Returns a ShardingPlan where the
+    number of owned experts per (layer, device) may vary (0..k_local) while
+    total buffer rows per device stay exactly balanced."""
+    loads = np.asarray(loads, np.float64)
+    L, E = loads.shape
+    M = num_devices
+    assert (L * E) % M == 0 or True
+    rows_per_device = -(-(L * E) // M)
+    k_local = k_local or min(E, 2 * max(1, -(-E // M)))
+    nsz = node_size or M
+
+    # line 1-2: J = top-t per layer (overlappable), J' = rest
+    t = min(max(t, 0), E)
+    hot = np.zeros((L, E), bool)
+    for l in range(L):
+        hot[l, np.argsort(-loads[l])[:t]] = True
+
+    owner_dev = np.full((L, E), -1, np.int32)
+    slots_free = np.full(M, rows_per_device, np.int32)
+    dev_load = np.zeros(M, np.float64)
+    per_layer_count = np.zeros((L, M), np.int32)
+
+    def node_of(d):
+        return d // nsz
+
+    def place(l, e):
+        # least-loaded node, tie-break fewer free slots; then least-loaded
+        # device on that node, same tie-break (paper lines 10-11)
+        node_load = [dev_load[n * nsz:(n + 1) * nsz].sum()
+                     for n in range(max(1, M // nsz))]
+        node_free = [slots_free[n * nsz:(n + 1) * nsz].sum()
+                     for n in range(max(1, M // nsz))]
+        cand_nodes = [n for n in range(len(node_load)) if node_free[n] > 0]
+        cand_nodes.sort(key=lambda n: (node_load[n], node_free[n]))
+        for n in cand_nodes:
+            devs = [d for d in range(n * nsz, min((n + 1) * nsz, M))
+                    if slots_free[d] > 0 and per_layer_count[l, d] < k_local]
+            if not devs:
+                continue
+            devs.sort(key=lambda d: (dev_load[d], slots_free[d]))
+            return devs[0]
+        # fallback: any device with a free slot
+        for d in np.argsort(dev_load):
+            if slots_free[d] > 0 and per_layer_count[l, d] < k_local:
+                return int(d)
+        raise RuntimeError("no free slot — k_local too tight")
+
+    # lines 6-14: place underloaded (non-overlappable) experts first,
+    # layers ordered by their max underloaded expert load, experts desc.
+    cold_sets = [(l, [e for e in range(E) if not hot[l, e]]) for l in range(L)]
+    cold_sets.sort(key=lambda le: -max([loads[le[0], e] for e in le[1]] or [0]))
+    for l, cold in cold_sets:
+        for e in sorted(cold, key=lambda e: -loads[l, e]):
+            d = place(l, e)
+            owner_dev[l, e] = d
+            slots_free[d] -= 1
+            dev_load[d] += loads[l, e]
+            per_layer_count[l, d] += 1
+
+    # line 16: fill remaining slots with hot (overlappable) experts —
+    # they'll be replicated by Alg 1 anyway, so spread arbitrarily (we spread
+    # round-robin over free slots for balance).
+    for l in range(L):
+        for e in range(E):
+            if owner_dev[l, e] >= 0:
+                continue
+            d = place(l, e)
+            owner_dev[l, e] = d
+            slots_free[d] -= 1
+            dev_load[d] += loads[l, e]
+            per_layer_count[l, d] += 1
+
+    # assign buffer rows
+    owner_row = np.zeros((L, E), np.int32)
+    next_row = np.zeros(M, np.int32)
+    for l in range(L):
+        for e in range(E):
+            d = owner_dev[l, e]
+            owner_row[l, e] = next_row[d]
+            next_row[d] += 1
+    # NOTE: k_local is the STATIC compute-slot width of the compiled step —
+    # keep the caller-provided bound (uniform across re-shardings), not the
+    # realized max, so re-sharding never changes compiled shapes.
+    plan = ShardingPlan(L, E, M, rows_per_device, owner_dev, owner_row,
+                        k_local=int(k_local))
+    plan.validate()
+    return plan
+
+
+# ---------------------------------------------------------------------------
+# Re-sharding trigger (paper §5.1: every 100 iters, only when shards change)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class ReshardingPolicy:
+    interval: int = 100
+    t: int = 4
+    node_size: int = 0
+
+    def maybe_reshard(self, step: int, current: ShardingPlan,
+                      predictor: LoadPredictor) -> Tuple[ShardingPlan, bool]:
+        if step == 0 or step % self.interval != 0:
+            return current, False
+        new = heterogeneous_sharding(predictor.predict(),
+                                     current.num_devices, self.t,
+                                     node_size=self.node_size,
+                                     k_local=current.k_local)
+        changed = not np.array_equal(new.owner_dev, current.owner_dev)
+        return (new, True) if changed else (current, False)

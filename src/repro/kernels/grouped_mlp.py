@@ -1,0 +1,94 @@
+"""Pallas TPU kernel: grouped expert FFN (MegaBlocks-style, arXiv:2211.15841).
+
+The MoE hot spot: after dispatch, each materialized expert slot holds a
+padded group of tokens — ``x: (K, T, D)`` with only ``group_sizes[k]`` valid
+rows per slot.  A dense batched matmul wastes FLOPs on padding; this kernel
+**skips whole tiles past the group boundary** (the TPU analogue of
+MegaBlocks' block-sparse GEMM — no token dropping, no padded compute).
+
+Layout: grid (K, T/BT, F/BF), F innermost so the fused
+``y += act(x@wi [* x@wg]) @ wo`` accumulates into a VMEM f32 scratch tile
+and writes once.  All tiles are (128×128)-aligned for the MXU.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BT = 128   # token tile
+BF = 128   # ffn tile
+
+
+def _kernel(gs_ref, x_ref, wi_ref, wg_ref, wo_ref, y_ref, acc_ref,
+            *, act: str, has_gate: bool, bt: int):
+    k = pl.program_id(0)
+    t = pl.program_id(1)
+    f = pl.program_id(2)
+    nf = pl.num_programs(2)
+    size = gs_ref[k]
+
+    @pl.when(f == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(t * bt < size)            # skip tiles wholly past the group end
+    def _compute():
+        x = x_ref[0]                                  # (BT, D)
+        h = jnp.dot(x, wi_ref[0], preferred_element_type=jnp.float32)
+        if has_gate:
+            g = jnp.dot(x, wg_ref[0], preferred_element_type=jnp.float32)
+            h = (jax.nn.silu(h) if act.startswith("silu")
+                 else jax.nn.gelu(h)) * g
+        else:
+            h = jax.nn.gelu(h)
+        acc_ref[...] += jnp.dot(h.astype(x.dtype), wo_ref[0],
+                                preferred_element_type=jnp.float32)
+
+    @pl.when(f == nf - 1)
+    def _write():
+        rows = t * bt + jax.lax.broadcasted_iota(jnp.int32, acc_ref.shape, 0)
+        mask = rows < size                            # partial last tile
+        y_ref[0] = jnp.where(mask, acc_ref[...], 0.0).astype(y_ref.dtype)
+
+
+def grouped_mlp(x, wi, wg, wo, group_sizes=None, *, act: str = "silu_glu",
+                interpret: bool = False):
+    """x: (K,T,D); wi/wg: (K,D,F); wo: (K,F,D); group_sizes: (K,) int32.
+
+    Returns (K,T,D).  Rows >= group_sizes[k] are zero.
+    """
+    k_, t_, d = x.shape
+    f_ = wi.shape[-1]
+    has_gate = wg is not None
+    if group_sizes is None:
+        group_sizes = jnp.full((k_,), t_, jnp.int32)
+    bt = min(BT, t_)
+    bf = min(BF, f_)
+    assert t_ % bt == 0 and f_ % bf == 0, (t_, f_)
+    if not has_gate:
+        wg = wi                                      # placeholder operand
+
+    grid = (k_, t_ // bt, f_ // bf)
+    kern = functools.partial(_kernel, act=act, has_gate=has_gate, bt=bt)
+    return pl.pallas_call(
+        kern,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, bt, d), lambda k, t, f, gs: (k, t, 0)),
+                pl.BlockSpec((1, d, bf), lambda k, t, f, gs: (k, 0, f)),
+                pl.BlockSpec((1, d, bf), lambda k, t, f, gs: (k, 0, f)),
+                pl.BlockSpec((1, bf, d), lambda k, t, f, gs: (k, f, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, bt, d), lambda k, t, f, gs: (k, t, 0)),
+            scratch_shapes=[pltpu.VMEM((bt, d), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((k_, t_, d), x.dtype),
+        interpret=interpret,
+    )(group_sizes.astype(jnp.int32), x, wi, wg, wo)

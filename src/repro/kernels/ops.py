@@ -1,0 +1,38 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+On this CPU container the kernels execute in ``interpret=True`` mode (the
+kernel body runs as traced Python — numerically identical to the TPU
+lowering).  On a real TPU backend ``interpret`` switches off automatically.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import grouped_mlp as _gm
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("act",))
+def grouped_mlp(x, wi, wg, wo, group_sizes=None, *, act: str = "silu_glu"):
+    """Grouped expert FFN: x (K,T,D) -> (K,T,D), skipping padded tiles."""
+    return _gm.grouped_mlp(x, wi, wg, wo, group_sizes, act=act,
+                           interpret=_interpret())
+
+
+@partial(jax.jit, static_argnames=("causal", "window"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0):
+    """Flash attention, q/k/v (B,S,N,H); GQA k/v expanded to N heads here."""
+    nq, nkv = q.shape[2], k.shape[2]
+    if nq != nkv:
+        rep = nq // nkv
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               interpret=_interpret())

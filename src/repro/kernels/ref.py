@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def grouped_mlp_ref(x, wi, wg, wo, act: str = "silu_glu",
+                    group_sizes=None):
+    """x: (K, T, D); wi/wg: (K, D, F); wo: (K, F, D).
+
+    Per-slot FFN.  group_sizes (K,) optionally zeroes rows t >= size (the
+    padded tail of each expert group) — the kernel skips those tiles.
+    """
+    h = jnp.einsum("ktd,kdf->ktf", x, wi)
+    if wg is not None:
+        g = jnp.einsum("ktd,kdf->ktf", x, wg)
+        h = (jax.nn.silu(h) if act.startswith("silu") else jax.nn.gelu(h)) * g
+    else:
+        h = jax.nn.gelu(h)
+    y = jnp.einsum("ktf,kfd->ktd", h, wo)
+    if group_sizes is not None:
+        t = x.shape[1]
+        mask = jnp.arange(t)[None, :] < group_sizes[:, None]
+        y = y * mask[..., None].astype(y.dtype)
+    return y
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q/k/v: (B, S, N, H) (same N — GQA expansion happens in ops.py).
+
+    Standard softmax attention with optional causal + sliding-window mask.
+    """
+    b, s, n, h = q.shape
+    logits = jnp.einsum("bqnh,bknh->bnqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / jnp.sqrt(h)
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(k.shape[1])[None, :]
+    mask = jnp.ones((s, k.shape[1]), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bnqk,bknh->bqnh", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

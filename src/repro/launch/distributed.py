@@ -1,0 +1,81 @@
+"""Multi-host launch glue.
+
+On a real multi-host TPU pod each process sees only its local devices; the
+global mesh spans all of them.  These helpers cover the three things a
+launcher must get right:
+
+  1. runtime init (`jax.distributed.initialize` from standard env vars),
+  2. turning per-host data into GLOBAL jax.Arrays
+     (`jax.make_array_from_process_local_data`),
+  3. agreeing on the Hecate scheduler state across hosts — the plans are
+     pure functions of (sharding, predicted loads); every host observes
+     the same replicated `expert_counts` metric, so the predictors (and
+     hence the plans) stay bit-identical without any extra communication.
+
+Single-process environments (CPU tests, --xla_force_host_platform_*)
+degrade transparently: process_count == 1 and every helper is an identity.
+"""
+from __future__ import annotations
+
+import os
+from typing import Dict, Iterable, Iterator, Optional
+
+import jax
+import numpy as np
+
+
+def maybe_initialize() -> None:
+    """Init jax.distributed when launched by a multi-host runner
+    (JAX_COORDINATOR_ADDRESS / megascale env set by the TPU runtime)."""
+    if jax.process_count() > 1:
+        return                                  # already initialized
+    coord = os.environ.get("JAX_COORDINATOR_ADDRESS")
+    if coord:
+        jax.distributed.initialize(
+            coordinator_address=coord,
+            num_processes=int(os.environ["JAX_NUM_PROCESSES"]),
+            process_id=int(os.environ["JAX_PROCESS_ID"]))
+
+
+def process_info() -> Dict[str, int]:
+    return {"process_index": jax.process_index(),
+            "process_count": jax.process_count(),
+            "local_devices": jax.local_device_count(),
+            "global_devices": jax.device_count()}
+
+
+def globalize_batch(batch: Dict[str, np.ndarray], sharding) -> Dict:
+    """Per-host numpy batch -> global jax.Arrays under `sharding` (a pytree
+    of NamedSharding matching the batch, batch-dim sharded)."""
+    if jax.process_count() == 1:
+        return {k: jax.device_put(v, sharding[k] if isinstance(sharding, dict)
+                                  else sharding)
+                for k, v in batch.items()}
+    return {
+        k: jax.make_array_from_process_local_data(
+            sharding[k] if isinstance(sharding, dict) else sharding, v)
+        for k, v in batch.items()
+    }
+
+
+def host_stream(make_stream_fn, *, vocab_size: int, seq_len: int,
+                global_batch: int, **kw) -> Iterator[Dict[str, np.ndarray]]:
+    """A data stream producing only this host's slice of the global batch
+    (deterministic per-host seeds — see repro.data.pipeline)."""
+    return iter(make_stream_fn(
+        vocab_size, seq_len, global_batch,
+        process_index=jax.process_index(),
+        process_count=jax.process_count(), **kw))
+
+
+def assert_scheduler_coherence(counts: np.ndarray) -> np.ndarray:
+    """The expert-count metric is replicated by construction (psum inside
+    the step).  Guard against accidental per-host divergence before it
+    reaches the predictor: hash-check across hosts in debug mode."""
+    if jax.process_count() == 1 or not os.environ.get("REPRO_DEBUG_COHERENCE"):
+        return counts
+    from jax.experimental import multihost_utils
+    multihost_utils.assert_equal(
+        np.asarray(counts, np.float32),
+        "Hecate predictors diverged across hosts")
+    return counts

@@ -1,0 +1,421 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) combo.
+
+Proves the distribution config is coherent without hardware: sharding
+mismatches, compile-time OOM, or unsupported collectives surface here as
+hard failures.  Emits per-combo JSON records (memory analysis, HLO cost,
+per-collective bytes, scan-corrected totals, roofline terms) under
+``experiments/dryrun/``.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch olmoe-1b-7b \
+      --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from collections import Counter
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+import repro.configs as configs
+from repro.common.config import INPUT_SHAPES, TPU_V5E, TrainConfig
+from repro.launch import inputs as inp
+from repro.launch.mesh import make_production_mesh
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute", "ragged-all-to-all")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    """Sum byte sizes of every dtype[dims] literal in `text`."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))          # iota form: [n_groups, group_size]
+    m = re.search(r"replica_groups=\{\{([0-9, ]+)\}", line)
+    if m:
+        return m.group(1).count(",") + 1
+    return 2
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-device WIRE bytes moved by each collective kind.
+
+    Parses the RESULT shape of every collective op in the (per-device SPMD)
+    module and applies ring wire-volume factors for a group of size g:
+      all-reduce        2(g-1)/g x result   (~2x tensor)
+      all-gather        (g-1)/g x result    (result is the gathered tensor)
+      reduce-scatter    (g-1)   x result    (result is the 1/g shard)
+      all-to-all        (g-1)/g x result
+      collective-permute 1 x result
+    ``-start`` variants are counted once; ``-done`` skipped.
+    """
+    out: Counter = Counter()
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        if "=" not in ls:
+            continue
+        for kind in _COLLECTIVES:
+            if re.search(rf"\b{kind}(-start)?\(", ls):
+                rhs = ls.split("=", 1)[1]
+                op_pos = rhs.find(kind)
+                size = _shape_bytes(rhs[:op_pos])
+                g = _group_size(ls)
+                if kind == "all-reduce":
+                    factor = 2.0 * (g - 1) / g
+                elif kind == "reduce-scatter":
+                    factor = float(g - 1)
+                elif kind == "collective-permute":
+                    factor = 1.0
+                else:                     # all-gather / all-to-all
+                    factor = (g - 1) / g
+                out[kind] += int(size * factor)
+                break
+    return dict(out)
+
+
+def default_microbatches(cfg, shape, mesh) -> int:
+    """Gradient-accumulation depth: bound the rematerialization-saved
+    activation stack (one (B_loc, S, d_model) residual per layer) to ~4 GB
+    per device, while keeping >= 1 batch row per data shard."""
+    from repro.launch.inputs import mesh_batch_size
+    mb = mesh_batch_size(mesh)       # activations shard over batch axes only
+    cap = max(1, shape.global_batch // mb)
+    saved = (cfg.num_layers * shape.global_batch * shape.seq_len
+             * cfg.d_model * 2) / mb
+    want = -(-int(saved) // (4 << 30))
+    want = max(1, min(cap, want))
+    # round up to a divisor of the global batch
+    while shape.global_batch % want:
+        want += 1
+    return int(want)
+
+
+ZERO_RULES = {
+    # "ZeRO-3 attention" alternative sharding (§Perf): dense weights are
+    # FSDP-sharded and gathered per layer; activations are batch-sharded
+    # over EVERY mesh axis, so no tensor-parallel activation psums exist.
+    "heads": None, "kv_heads": None, "ff": None, "ssm_inner": None,
+    "embed": ("data", "model"), "batch": ("pod", "data", "model"),
+}
+
+
+def _lower_one(cfg, shape, mesh, impl: str, unroll: bool,
+               perf_opts=None):
+    """Build + lower the right step for this shape. Returns jax Lowered.
+
+    The unrolled (cost-extrapolation) lowerings use microbatch=1: the math
+    per step is identical with/without accumulation, and the accumulation
+    while-loop would otherwise hide all but one microbatch from
+    cost_analysis.  The scanned (memory) lowering uses the real depth.
+
+    perf_opts (§Perf hillclimbing):
+      grad_constraint: constrain grads to param shardings (reduce-scatter
+                       weight grads instead of all-reduce)
+      sharding_mode:   "tp" (default) | "zero" (see ZERO_RULES)
+      capacity_factor: override the MoE dispatch capacity factor
+    """
+    from repro.serve.engine import build_prefill_step, build_serve_step
+    from repro.train.step import build_train_step
+    import dataclasses as _dc
+
+    po = perf_opts or {}
+    overrides = ZERO_RULES if po.get("sharding_mode") == "zero" else None
+    if po.get("capacity_factor"):
+        cfg = cfg.replace(moe=_dc.replace(
+            cfg.moe, capacity_factor=float(po["capacity_factor"])))
+    rt = inp.make_runtime(cfg, mesh, impl=impl, unroll=unroll,
+                          rules_overrides=overrides)
+    pa = inp.abstract_plan(cfg, mesh)
+    if shape.mode == "train":
+        state = inp.abstract_state(cfg, mesh)
+        batch = inp.abstract_batch(cfg, shape, mesh)
+        micro = 1 if unroll else default_microbatches(cfg, shape, mesh)
+        tc = TrainConfig(microbatch=micro)
+        gs = inp.param_shardings(cfg, mesh) if po.get("grad_constraint") \
+            else None
+        step = build_train_step(cfg, rt, tc,
+                                causal=not cfg.name.startswith("bert"),
+                                grad_shardings=gs)
+        return jax.jit(step).lower(state, batch, pa)
+    params = inp.abstract_params(cfg, mesh)
+    if shape.mode == "prefill":
+        batch = inp.abstract_batch(cfg, shape, mesh)
+        step = build_prefill_step(cfg, rt)
+        return jax.jit(step).lower(params, batch, pa)
+    # decode
+    cache, tokens, pos = inp.abstract_decode_inputs(cfg, shape, mesh)
+    step = build_serve_step(cfg, rt)
+    return jax.jit(step).lower(params, cache, tokens, pos, pa)
+
+
+def analytic_memory(cfg, shape, mesh) -> Dict:
+    """Per-device HBM model for the TPU deployment."""
+    from repro.launch.inputs import mesh_batch_size
+    n_dev = mesh.size
+    mb = mesh_batch_size(mesh)
+    n_params = cfg.param_count()
+    if shape.mode == "train":
+        # f32 master + mu + nu fully sharded + f32 grads + bf16 compute copy
+        weights = n_params * (4 + 4 + 4 + 4 + 2) / n_dev
+        micro = default_microbatches(cfg, shape, mesh)
+        saved = (cfg.num_layers * shape.global_batch * shape.seq_len
+                 * cfg.d_model * 2) / mb / micro
+        work = 2e9  # attention/FFN workspace per layer (flash kernels)
+        total = weights + saved + work
+    else:
+        weights = n_params * 2 / n_dev
+        cache = 0.0
+        s = min(shape.seq_len, cfg.max_decoder_len or shape.seq_len)
+        for kind in cfg.layer_kinds():
+            if kind in ("attn", "local"):
+                eff = min(s, cfg.sliding_window) if kind == "local" else s
+                cache += (shape.global_batch * eff * cfg.num_kv_heads
+                          * cfg.head_dim * 2 * 2)
+            elif kind == "mamba":
+                ss = cfg.ssm
+                nh = ss.num_heads(cfg.d_model)
+                cache += shape.global_batch * nh * ss.state_dim \
+                    * ss.head_dim * 4
+        cache /= n_dev
+        work = 1e9
+        total = weights + cache + work
+    return {"weights_bytes": weights, "total_bytes_est": total,
+            "fits_16g_hbm": bool(total < 16e9)}
+
+
+def _cost_record(compiled) -> Dict:
+    ca = compiled.cost_analysis()
+    txt = compiled.as_text()
+    coll = collective_bytes(txt)
+    return {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+        "collective_bytes": coll,
+        "collective_bytes_total": float(sum(coll.values())),
+        "collective_op_counts": dict(Counter(
+            k for k in _COLLECTIVES
+            for _ in range(len(re.findall(rf"\b{k}(-start)?\(", txt))))),
+    }
+
+
+def _reduced_cfg(cfg, depth: int):
+    """Depth-`depth` (in superblocks) variant for cost extrapolation."""
+    kw = {"num_layers": len(cfg.layer_pattern) * depth}
+    if cfg.is_encoder_decoder:
+        kw["encoder_layers"] = depth
+    return cfg.replace(**kw)
+
+
+def dryrun_combo(arch: str, shape_name: str, *, multi_pod: bool = False,
+                 impl: str = "ring", mesh=None, skip_extrapolation=False,
+                 perf_opts=None) -> Dict:
+    """Full dry-run record for one (arch, shape, mesh)."""
+    cfg = configs.get(arch)
+    shape = INPUT_SHAPES[shape_name]
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    rec: Dict = {"arch": cfg.name, "shape": shape_name, "mesh": mesh_name,
+                 "impl": impl if cfg.moe.enabled else "n/a",
+                 "mode": shape.mode, "parser_version": 2}
+    skip = inp.skip_reason(cfg, shape)
+    if skip:
+        rec.update(status="skipped", reason=skip)
+        return rec
+    note = inp.shape_note(cfg, shape)
+    if note:
+        rec["note"] = note
+    if mesh is None:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.size
+
+    if perf_opts:
+        rec["perf_opts"] = dict(perf_opts)
+    t0 = time.time()
+    lowered = _lower_one(cfg, shape, mesh, impl, unroll=False,
+                         perf_opts=perf_opts)
+    rec["lower_s"] = round(time.time() - t0, 2)
+    t0 = time.time()
+    compiled = lowered.compile()
+    rec["compile_s"] = round(time.time() - t0, 2)
+    ma = compiled.memory_analysis()
+    rec["memory"] = {
+        "argument_bytes_per_device": int(ma.argument_size_in_bytes),
+        "output_bytes_per_device": int(ma.output_size_in_bytes),
+        "temp_bytes_per_device": int(ma.temp_size_in_bytes),
+        "peak_estimate_per_device": int(ma.argument_size_in_bytes
+                                        + ma.temp_size_in_bytes),
+    }
+    # XLA:CPU's buffer assignment differs from TPU (it stores pre-converted
+    # f32 copies of remat-saved residuals and lacks TPU's fusion-aware
+    # reuse), so temp_bytes OVERESTIMATES the TPU footprint.  The analytic
+    # model below is the number the TPU deployment is sized against.
+    rec["memory_model"] = analytic_memory(cfg, shape, mesh)
+    rec["cost_raw"] = _cost_record(compiled)
+
+    # --- scan-aware cost extrapolation (see Runtime.unroll) -------------
+    if not skip_extrapolation:
+        n_sb = cfg.num_superblocks
+        c1 = _cost_record(_lower_one(_reduced_cfg(cfg, 1), shape, mesh,
+                                     impl, unroll=True,
+                                     perf_opts=perf_opts).compile())
+        c2 = _cost_record(_lower_one(_reduced_cfg(cfg, 2), shape, mesh,
+                                     impl, unroll=True,
+                                     perf_opts=perf_opts).compile())
+        def extrap(key):
+            if isinstance(c1[key], dict):
+                keys = set(c1[key]) | set(c2[key])
+                return {k: c1[key].get(k, 0) + (n_sb - 1)
+                        * (c2[key].get(k, 0) - c1[key].get(k, 0))
+                        for k in keys}
+            return c1[key] + (n_sb - 1) * (c2[key] - c1[key])
+        rec["cost"] = {k: extrap(k) for k in
+                       ("flops", "bytes_accessed", "collective_bytes",
+                        "collective_bytes_total")}
+    else:
+        rec["cost"] = {k: rec["cost_raw"][k] for k in
+                       ("flops", "bytes_accessed", "collective_bytes",
+                        "collective_bytes_total")}
+
+    rec["roofline"] = roofline_terms(cfg, shape, rec, n_dev)
+    rec["status"] = "ok"
+    return rec
+
+
+def roofline_terms(cfg, shape, rec, n_dev: int) -> Dict:
+    """Three roofline terms (seconds) from the per-device compiled costs.
+
+    cost_analysis on an SPMD module is PER-DEVICE, so:
+        compute    = flops_per_device / peak
+        memory     = bytes_per_device / hbm_bw
+        collective = collective_bytes_per_device / ici_bw
+    (equivalently: global/(chips×per-chip-rate) — same number).
+    """
+    hw = TPU_V5E
+    c = rec["cost"]
+    compute = c["flops"] / hw.peak_flops_bf16
+    # XLA:CPU reports pre-fusion operand bytes — a structural UPPER bound on
+    # HBM traffic.  The LOWER bound reads every live buffer once (arguments +
+    # outputs, from memory_analysis).  A fused TPU lowering lands between;
+    # we report both and use the geometric mean as the headline term.
+    mem_ub = c["bytes_accessed"] / hw.hbm_bw
+    m = rec["memory"]
+    mem_lb = (m["argument_bytes_per_device"]
+              + m["output_bytes_per_device"]) / hw.hbm_bw
+    memory = (mem_lb * mem_ub) ** 0.5 if mem_lb > 0 else mem_ub
+    coll = c["collective_bytes_total"] / hw.ici_bw
+    dominant = max((("compute", compute), ("memory", memory),
+                    ("collective", coll)), key=lambda kv: kv[1])[0]
+    s = inp.effective_seq(cfg, shape)
+    tokens = shape.global_batch * (s if shape.mode != "decode" else 1)
+    n_active = cfg.active_param_count()
+    mult = 6 if shape.mode == "train" else 2
+    model_flops = mult * n_active * tokens
+    hlo_total = c["flops"] * n_dev
+    return {
+        "compute_s": compute,
+        "memory_s": memory,
+        "memory_s_lower": mem_lb,
+        "memory_s_upper": mem_ub,
+        "collective_s": coll,
+        "dominant": dominant,
+        "model_flops": float(model_flops),
+        "hlo_flops_global": float(hlo_total),
+        "useful_flops_ratio": float(model_flops / hlo_total)
+        if hlo_total else 0.0,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None,
+                    choices=list(INPUT_SHAPES) + [None])
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--impl", default="ring",
+                    choices=["ring", "a2a", "dense", "ep"])
+    ap.add_argument("--all", action="store_true",
+                    help="all assigned archs x all shapes")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--include-paper-models", action="store_true")
+    args = ap.parse_args()
+
+    archs = ([configs.canonical(args.arch)] if args.arch else
+             configs.ASSIGNED + (configs.PAPER
+                                 if args.include_paper_models else []))
+    shapes = [args.shape] if args.shape else list(INPUT_SHAPES)
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = []
+    for multi in meshes:
+        mesh = make_production_mesh(multi_pod=multi)
+        for arch in archs:
+            for shape in shapes:
+                tag = (f"{configs.canonical(arch)}_{shape}_"
+                       f"{'multi' if multi else 'single'}_{args.impl}")
+                try:
+                    rec = dryrun_combo(arch, shape, multi_pod=multi,
+                                       impl=args.impl, mesh=mesh)
+                except Exception as e:  # a failure here is a bug — surface it
+                    rec = {"arch": arch, "shape": shape,
+                           "mesh": "multi" if multi else "single",
+                           "status": "FAILED", "error": str(e),
+                           "traceback": traceback.format_exc()}
+                    failures.append(tag)
+                with open(os.path.join(args.out, tag + ".json"), "w") as f:
+                    json.dump(rec, f, indent=2)
+                status = rec.get("status")
+                extra = ""
+                if status == "ok":
+                    r = rec["roofline"]
+                    extra = (f"compile={rec['compile_s']:.1f}s "
+                             f"dom={r['dominant']} "
+                             f"comp={r['compute_s']*1e3:.2f}ms "
+                             f"mem={r['memory_s']*1e3:.2f}ms "
+                             f"coll={r['collective_s']*1e3:.2f}ms")
+                elif status == "skipped":
+                    extra = rec["reason"][:60]
+                else:
+                    extra = rec.get("error", "")[:120]
+                print(f"[{status:7s}] {tag}: {extra}", flush=True)
+    if failures:
+        print(f"\n{len(failures)} FAILURES: {failures}")
+        raise SystemExit(1)
+    print("\nDry-run complete.")
+
+
+if __name__ == "__main__":
+    main()

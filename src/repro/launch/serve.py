@@ -1,0 +1,68 @@
+"""Serving launcher: load (or init) a model, prefill a batch of prompts,
+decode with the KV/SSM cache engine.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --smoke \
+      --prompt "In the beginning " --steps 32
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--checkpoint-dir", default="")
+    ap.add_argument("--prompt", action="append", default=None)
+    ap.add_argument("--steps", type=int, default=32)
+    ap.add_argument("--max-len", type=int, default=256)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    import jax
+    import numpy as np
+
+    import repro.configs as configs
+    from repro.checkpoint import store
+    from repro.models import model as mdl
+    from repro.serve.engine import Engine
+
+    cfg = (configs.get_smoke(args.arch) if args.smoke
+           else configs.get(args.arch))
+    rt = mdl.Runtime()
+    params = mdl.init_params(cfg, jax.random.PRNGKey(args.seed))
+    if args.checkpoint_dir:
+        step = store.latest_step(args.checkpoint_dir)
+        if step is not None:
+            target = jax.tree.map(
+                lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), params)
+            params = store.restore(args.checkpoint_dir, step,
+                                   {"params": target})["params"]
+            print(f"restored checkpoint step {step}")
+
+    prompts = args.prompt or ["Hello world", "The scheduler said"]
+    maxp = max(len(p) for p in prompts)
+    enc = np.zeros((len(prompts), maxp), np.int32)
+    for i, p in enumerate(prompts):
+        b = np.frombuffer(p.encode(), np.uint8).astype(np.int32)
+        enc[i, :len(b)] = b % cfg.vocab_size
+
+    eng = Engine(cfg, rt, params, max_len=args.max_len)
+    enc_in = None
+    if cfg.is_encoder_decoder:
+        enc_in = np.random.default_rng(0).standard_normal(
+            (len(prompts), cfg.encoder_seq_len, cfg.d_model)).astype(
+            np.float32)
+    out = eng.generate(enc, steps=args.steps,
+                       temperature=args.temperature, seed=args.seed,
+                       encoder_input=enc_in)
+    for i, p in enumerate(prompts):
+        toks = out[i].tolist()
+        text = bytes(t for t in toks if 0 < t < 128).decode(errors="replace")
+        print(f"[{i}] {text!r}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,98 @@
+"""Training launcher.
+
+Single-host CPU demo runs use a debug mesh (set
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``); on a real TPU pod
+the same script runs under multi-process jax.distributed with the
+production mesh.
+
+  PYTHONPATH=src python -m repro.launch.train --arch gpt-moe-s --smoke \
+      --steps 50 --impl ring --mesh-data 2 --mesh-model 4
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced config (CPU-scale)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--impl", default="ring",
+                    choices=["ring", "a2a", "dense", "ep"])
+    ap.add_argument("--mesh-data", type=int, default=0,
+                    help="0 = single device, no mesh")
+    ap.add_argument("--mesh-model", type=int, default=4)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatch", type=int, default=0)
+    ap.add_argument("--resharding-interval", type=int, default=100)
+    ap.add_argument("--checkpoint-dir", default="")
+    ap.add_argument("--checkpoint-every", type=int, default=0)
+    ap.add_argument("--data", default="synthetic",
+                    choices=["synthetic", "bytes"])
+    ap.add_argument("--skew", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-json", default="")
+    args = ap.parse_args()
+
+    if args.mesh_data:
+        want = args.mesh_data * args.mesh_model
+        os.environ.setdefault(
+            "XLA_FLAGS", f"--xla_force_host_platform_device_count={want}")
+
+    import jax
+    import numpy as np
+
+    import repro.configs as configs
+    from repro.checkpoint import store
+    from repro.common.config import TrainConfig
+    from repro.core.schedule import ReshardingPolicy
+    from repro.data.pipeline import make_stream
+    from repro.launch import inputs as inp
+    from repro.launch.mesh import make_debug_mesh
+    from repro.train import step as step_lib
+    from repro.train.trainer import HecateScheduler, train_loop
+
+    cfg = configs.get_smoke(args.arch) if args.smoke else configs.get(args.arch)
+    mesh = None
+    if args.mesh_data:
+        mesh = make_debug_mesh(args.mesh_data, args.mesh_model)
+    rt = inp.make_runtime(cfg, mesh, impl=args.impl)
+    ep = mesh.shape["model"] if mesh is not None else 1
+
+    tc = TrainConfig(learning_rate=args.lr, total_steps=args.steps,
+                     warmup_steps=max(args.steps // 10, 1), seed=args.seed,
+                     microbatch=args.microbatch)
+    stream = make_stream(cfg.vocab_size, args.seq_len, args.global_batch,
+                         kind=args.data, seed=args.seed, skew=args.skew)
+    scheduler = None
+    if cfg.moe.enabled:
+        scheduler = HecateScheduler(
+            cfg, ep=ep, impl=args.impl,
+            resharding=ReshardingPolicy(interval=args.resharding_interval))
+
+    def cb(i, state, metrics):
+        if (args.checkpoint_dir and args.checkpoint_every
+                and i and i % args.checkpoint_every == 0):
+            store.save(args.checkpoint_dir, i,
+                       {"params": state.params, "opt_count": state.opt.count})
+
+    state, history = train_loop(cfg, rt, tc, stream, scheduler=scheduler,
+                                num_steps=args.steps, callback=cb)
+    if args.checkpoint_dir:
+        store.save(args.checkpoint_dir, args.steps,
+                   {"params": state.params, "opt_count": state.opt.count})
+    if args.log_json:
+        with open(args.log_json, "w") as f:
+            json.dump(history, f)
+    print(f"final loss: {history[-1]['loss']:.4f} "
+          f"(start {history[0]['loss']:.4f})")
+
+
+if __name__ == "__main__":
+    main()

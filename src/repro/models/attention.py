@@ -1,0 +1,168 @@
+"""GQA attention with RoPE / M-RoPE, softcap, sliding window, KV cache.
+
+Reference implementation is einsum-based (XLA path used by the distributed
+dry-run); the Pallas flash-attention kernel in ``repro.kernels`` is switched
+in for train/prefill when ``use_pallas=True``.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import ModelConfig
+from repro.common.params import Param
+from repro.models.layers import apply_rope, default_mrope_sections
+
+NEG_INF = -1e30
+
+
+def attn_params(cfg: ModelConfig, cross: bool = False):
+    d, hd = cfg.d_model, cfg.head_dim
+    nq, nkv = cfg.num_heads, cfg.num_kv_heads
+    p = {
+        "wq": Param((d, nq, hd), ("embed", "heads", "head_dim"), init="scaled"),
+        "wk": Param((d, nkv, hd), ("embed", "kv_heads", "head_dim"), init="scaled"),
+        "wv": Param((d, nkv, hd), ("embed", "kv_heads", "head_dim"), init="scaled"),
+        "wo": Param((nq, hd, d), ("heads", "head_dim", "embed"), init="scaled"),
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = Param((nq, hd), ("heads", "head_dim"), init="zeros")
+        p["bk"] = Param((nkv, hd), ("kv_heads", "head_dim"), init="zeros")
+        p["bv"] = Param((nkv, hd), ("kv_heads", "head_dim"), init="zeros")
+    return p
+
+
+def _project_qkv(p, x, xa=None):
+    """xa: cross-attention source (encoder states); else self-attention."""
+    dt = x.dtype
+    src = x if xa is None else xa
+    q = jnp.einsum("bsd,dnh->bsnh", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dnh->bsnh", src, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dnh->bsnh", src, p["wv"].astype(dt))
+    if "bq" in p:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, softcap: float, head_dim: int):
+    """q: (B,Sq,Nq,hd)  k,v: (B,Skv,Nkv,hd)  mask: (B,1,Sq,Skv) bool or None."""
+    nq, nkv = q.shape[2], k.shape[2]
+    group = nq // nkv
+    b, sq = q.shape[0], q.shape[1]
+    qg = q.reshape(b, sq, nkv, group, head_dim)
+    logits = jnp.einsum("bqkgh,bskh->bkgqs",
+                        qg.astype(jnp.float32), k.astype(jnp.float32))
+    logits = logits / jnp.sqrt(head_dim).astype(jnp.float32)
+    if softcap > 0.0:
+        logits = jnp.tanh(logits / softcap) * softcap
+    if mask is not None:
+        logits = jnp.where(mask[:, :, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs, v.astype(jnp.float32))
+    return out.reshape(b, sq, nq, head_dim).astype(q.dtype)
+
+
+def make_mask(sq: int, skv: int, *, causal: bool, window: int = 0,
+              q_offset=0):
+    """(1, 1, Sq, Skv) boolean mask. q_offset: absolute position of q[0]."""
+    qpos = jnp.arange(sq) + q_offset
+    kpos = jnp.arange(skv)
+    m = jnp.ones((sq, skv), bool)
+    if causal:
+        m &= kpos[None, :] <= qpos[:, None]
+    if window > 0:
+        m &= kpos[None, :] > qpos[:, None] - window
+    return m[None, None]
+
+
+def attention(p, cfg: ModelConfig, x, positions, *, kind: str = "attn",
+              causal: bool = True, xa=None, use_pallas: bool = False,
+              return_kv: bool = False):
+    """Full-sequence attention (train / prefill). Returns (B,S,D)
+    (and the rotated (k, v) when ``return_kv`` — prefill cache fill)."""
+    q, k, v = _project_qkv(p, x, xa=xa)
+    mr = default_mrope_sections(cfg.head_dim) if cfg.mrope else None
+    if xa is None:
+        q = apply_rope(q, positions, cfg.rope_theta, mr)
+        k = apply_rope(k, positions, cfg.rope_theta, mr)
+    window = cfg.sliding_window if kind == "local" else 0
+    mask = None
+    if causal or window:
+        mask = make_mask(q.shape[1], k.shape[1], causal=causal, window=window)
+        mask = jnp.broadcast_to(mask, (q.shape[0], 1, q.shape[1], k.shape[1]))
+    if use_pallas and mask is not None and xa is None and cfg.attn_logit_softcap == 0.0:
+        from repro.kernels import ops as kops
+        out = kops.flash_attention(q, k, v, causal=causal, window=window)
+    else:
+        out = _sdpa(q, k, v, mask, cfg.attn_logit_softcap, cfg.head_dim)
+    out = jnp.einsum("bsnh,nhd->bsd", out, p["wo"].astype(x.dtype))
+    if return_kv:
+        return out, {"k": k, "v": v}
+    return out
+
+
+# ------------------------------------------------------------------ decode
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    nkv, hd = cfg.num_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, max_len, nkv, hd), dtype),
+        "v": jnp.zeros((batch, max_len, nkv, hd), dtype),
+    }
+
+
+def abstract_kv_cache(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    nkv, hd = cfg.num_kv_heads, cfg.head_dim
+    sds = jax.ShapeDtypeStruct
+    return {"k": sds((batch, max_len, nkv, hd), dtype),
+            "v": sds((batch, max_len, nkv, hd), dtype)}
+
+
+def kv_cache_axes(batch: int, mesh_batch: int):
+    """Logical axes for the cache: shard batch if it covers the batch axes,
+    else shard the sequence dim (long-context decode, batch=1)."""
+    if batch >= mesh_batch:
+        return {"k": ("batch", None, "kv_heads", None),
+                "v": ("batch", None, "kv_heads", None)}
+    return {"k": (None, "seq_shard", "kv_heads", None),
+            "v": (None, "seq_shard", "kv_heads", None)}
+
+
+def decode_attention(p, cfg: ModelConfig, x, cache, pos, *, kind="attn",
+                     xa=None, update_cache: bool = True):
+    """One-token decode. x: (B,1,D); pos: scalar int32 current position.
+
+    Returns (out, new_cache).  The new K/V is written at ``pos``; attention
+    spans cache[0..pos] (optionally windowed).  For a seq-sharded cache the
+    einsum + softmax reduce over the sharded axis and GSPMD inserts the
+    required AllReduce (flash-decoding-style combine).
+    """
+    q, k_new, v_new = _project_qkv(p, x, xa=xa)
+    mr = default_mrope_sections(cfg.head_dim) if cfg.mrope else None
+    if xa is None:
+        posb = jnp.full((x.shape[0], 1), pos)
+        if cfg.mrope:
+            posb = jnp.broadcast_to(posb[..., None], posb.shape + (3,))
+        q = apply_rope(q, posb, cfg.rope_theta, mr)
+        k_new = apply_rope(k_new, posb, cfg.rope_theta, mr)
+        if update_cache:
+            cache = {
+                "k": jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new, pos, 1),
+                "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new, pos, 1),
+            }
+        k, v = cache["k"], cache["v"]
+        skv = k.shape[1]
+        kpos = jnp.arange(skv)
+        valid = kpos <= pos
+        if kind == "local" and cfg.sliding_window > 0:
+            valid &= kpos > pos - cfg.sliding_window
+        mask = jnp.broadcast_to(valid[None, None, None, :],
+                                (x.shape[0], 1, 1, skv))
+    else:  # cross-attention: static encoder KV, no cache update needed
+        k, v, mask = k_new, v_new, None
+    out = _sdpa(q, k, v, mask, cfg.attn_logit_softcap, cfg.head_dim)
+    out = jnp.einsum("bsnh,nhd->bsd", out, p["wo"].astype(x.dtype))
+    return out, cache

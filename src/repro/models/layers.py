@@ -1,0 +1,134 @@
+"""Common neural-net building blocks (pure JAX, pytree params)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.params import Param
+
+
+# ---------------------------------------------------------------- norms
+def norm_params(d: int):
+    return {"scale": Param((d,), ("unsharded",), init="ones")}
+
+
+def apply_norm(p, x, kind: str = "rms", eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    if kind == "rms":
+        x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    else:  # ln (no bias, whisper-style simplified)
+        x = x - jnp.mean(x, axis=-1, keepdims=True)
+        x = x * jax.lax.rsqrt(jnp.var(x, axis=-1) [..., None] + eps)
+    return (x * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------- embeddings
+def embed_params(vocab: int, d: int, tie: bool):
+    # vocab over "model" only: sharding d_model here would force GSPMD to
+    # all-gather the full activation tensor to contract d (verified in the
+    # olmoe dry-run HLO) — vocab-sharding keeps logits model-parallel with
+    # zero activation gathers.
+    p = {"embedding": Param((vocab, d), ("vocab", None), init="normal")}
+    if not tie:
+        p["unembed"] = Param((d, vocab), (None, "vocab"), init="scaled")
+    return p
+
+
+def embed(p, tokens, dtype=None):
+    """Cast the table BEFORE the take: with vocab sharded over `model`, the
+    lookup is combined by a psum over the model axis — casting first makes
+    that all-reduce bf16 instead of f32 (2x collective bytes saved)."""
+    table = p["embedding"]
+    if dtype is not None:
+        table = table.astype(dtype)
+    return jnp.take(table, tokens, axis=0)
+
+
+def unembed(p, x, softcap: float = 0.0):
+    if "unembed" in p:
+        logits = jnp.einsum("...d,dv->...v", x, p["unembed"].astype(x.dtype))
+    else:
+        logits = jnp.einsum("...d,vd->...v", x, p["embedding"].astype(x.dtype))
+    logits = logits.astype(jnp.float32)
+    if softcap > 0.0:
+        logits = jnp.tanh(logits / softcap) * softcap
+    return logits
+
+
+# ---------------------------------------------------------------- dense FFN
+def is_glu(act: str) -> bool:
+    return act.endswith("_glu")
+
+
+def mlp_params(d: int, d_ff: int, act: str):
+    if is_glu(act):
+        return {
+            "wi": Param((d, d_ff), ("embed", "ff"), init="scaled"),
+            "wg": Param((d, d_ff), ("embed", "ff"), init="scaled"),
+            "wo": Param((d_ff, d), ("ff", "embed"), init="scaled"),
+        }
+    return {
+        "wi": Param((d, d_ff), ("embed", "ff"), init="scaled"),
+        "wo": Param((d_ff, d), ("ff", "embed"), init="scaled"),
+    }
+
+
+def glu_fn(act: str):
+    return jax.nn.silu if act.startswith("silu") else jax.nn.gelu
+
+
+def apply_mlp(p, x, act: str):
+    dt = x.dtype
+    h = jnp.einsum("...d,df->...f", x, p["wi"].astype(dt))
+    if is_glu(act):
+        g = jnp.einsum("...d,df->...f", x, p["wg"].astype(dt))
+        h = glu_fn(act)(h) * g
+    else:
+        h = jax.nn.gelu(h)
+    return jnp.einsum("...f,fd->...d", h, p["wo"].astype(dt))
+
+
+# ---------------------------------------------------------------- RoPE
+def rope_freqs(head_dim: int, theta: float):
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x, positions, theta: float = 10_000.0,
+               mrope_sections: Optional[tuple] = None):
+    """x: (..., S, H, hd); positions: (..., S) or (..., S, 3) for M-RoPE.
+
+    M-RoPE (Qwen2-VL, arXiv:2409.12191): the rotary dims are split into
+    temporal/height/width sections, each rotated by its own position stream.
+    For text tokens the three streams coincide and M-RoPE reduces to RoPE.
+    """
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, theta)                      # (hd/2,)
+    if mrope_sections is None:
+        ang = positions[..., None].astype(jnp.float32) * inv   # (...,S,hd/2)
+    else:
+        assert positions.shape[-1] == 3, "M-RoPE needs (..., S, 3) positions"
+        secs = []
+        start = 0
+        for i, sec in enumerate(mrope_sections):
+            p = positions[..., i].astype(jnp.float32)[..., None]
+            secs.append(p * inv[start:start + sec])
+            start += sec
+        ang = jnp.concatenate(secs, axis=-1)
+    cos = jnp.cos(ang)[..., None, :]                 # (...,S,1,hd/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def default_mrope_sections(head_dim: int):
+    """Qwen2-VL uses [16, 24, 24] for hd=128; scale proportionally."""
+    half = head_dim // 2
+    t = half // 4
+    rest = half - t
+    h = rest // 2
+    return (t, h, rest - h)

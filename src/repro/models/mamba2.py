@@ -1,0 +1,205 @@
+"""Mamba-2 (SSD, state-space duality — arXiv:2405.21060) block.
+
+Chunked SSD forward for train/prefill (sub-quadratic: O(L·Q) with chunk Q),
+single-step recurrence for decode (O(1) per token).  Pure JAX; the chunk
+scan is a ``lax.scan`` over chunks, matching the paper's block decomposition
+(intra-chunk "attention-like" term + inter-chunk recurrent state passing).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import ModelConfig
+from repro.common.params import Param
+
+
+def mamba_params(cfg: ModelConfig):
+    d, s = cfg.d_model, cfg.ssm
+    d_in = s.expand * d
+    nh = s.num_heads(d)
+    conv_ch = d_in + 2 * s.state_dim
+    return {
+        "in_proj": Param((d, 2 * d_in + 2 * s.state_dim + nh),
+                         ("embed", "ssm_inner"), init="scaled"),
+        "conv_w": Param((s.conv_width, conv_ch), (None, "ssm_inner"),
+                        init="scaled"),
+        "conv_b": Param((conv_ch,), ("ssm_inner",), init="zeros"),
+        "A_log": Param((nh,), ("unsharded",), init="arange"),
+        "D": Param((nh,), ("unsharded",), init="ones"),
+        "dt_bias": Param((nh,), ("unsharded",), init="zeros"),
+        "gate_norm": Param((d_in,), ("ssm_inner",), init="ones"),
+        "out_proj": Param((d_in, d), ("ssm_inner", "embed"), init="scaled"),
+    }
+
+
+def _causal_conv(x, w, b):
+    """x: (B,L,C) depthwise causal conv, width K. Returns (B,L,C)."""
+    k = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(k):
+        out = out + pad[:, i:i + x.shape[1], :] * w[i][None, None, :]
+    return out + b[None, None, :]
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt):
+    d_in = cfg.ssm.expand * cfg.d_model
+    n = cfg.ssm.state_dim
+    nh = cfg.ssm.num_heads(cfg.d_model)
+    z = zxbcdt[..., :d_in]
+    xbc = zxbcdt[..., d_in:2 * d_in + 2 * n]
+    dt = zxbcdt[..., 2 * d_in + 2 * n:]
+    assert dt.shape[-1] == nh
+    return z, xbc, dt
+
+
+def _gated_norm(y, z, scale, eps=1e-6):
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = y * jax.lax.rsqrt(jnp.mean(y * y, axis=-1, keepdims=True) + eps)
+    return y * scale.astype(jnp.float32)
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int, initial_state=None):
+    """SSD scan.  x: (B,L,H,P) f32, dt: (B,L,H) f32 (post-softplus),
+    A: (H,) f32 (negative), Bm/Cm: (B,L,N) f32.
+    Returns (y: (B,L,H,P), final_state: (B,H,N,P))."""
+    Bsz, L, H, Pd = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, L)
+    pad = (-L) % Q
+    if pad:
+        padf = lambda a: jnp.pad(a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2))
+        x, dt, Bm, Cm = padf(x), padf(dt), padf(Bm), padf(Cm)
+    Lp = L + pad
+    nc = Lp // Q
+    xc = x.reshape(Bsz, nc, Q, H, Pd)
+    dtc = dt.reshape(Bsz, nc, Q, H)
+    Bc = Bm.reshape(Bsz, nc, Q, N)
+    Cc = Cm.reshape(Bsz, nc, Q, N)
+
+    logdec = dtc * A[None, None, None, :]               # (B,nc,Q,H) <= 0
+    cum = jnp.cumsum(logdec, axis=2)                    # L_t
+    # --- intra-chunk (quadratic within the chunk) ---------------------
+    cb = jnp.einsum("bcqn,bcsn->bcqs", Cc, Bc)          # (B,nc,Q,Q)
+    dec = jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :])  # (B,nc,Q,Q,H)
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    m = cb[..., None] * dec * dtc[:, :, None, :, :]
+    m = jnp.where(tri[None, None, :, :, None], m, 0.0)
+    y_intra = jnp.einsum("bcqsh,bcshp->bcqhp", m, xc)
+    # --- chunk summary states -----------------------------------------
+    dec_end = jnp.exp(cum[:, :, -1:, :] - cum)          # decay from t to chunk end
+    s_chunk = jnp.einsum("bcsh,bcsn,bcshp->bchnp", dtc * dec_end, Bc, xc)
+    tot = jnp.exp(cum[:, :, -1, :])                     # (B,nc,H) whole-chunk decay
+    # --- inter-chunk scan ----------------------------------------------
+    if initial_state is None:
+        init = jnp.zeros((Bsz, H, N, Pd), x.dtype)
+    else:
+        init = initial_state
+    def body(carry, inp):
+        s_c, tot_c = inp                                # (B,H,N,P), (B,H)
+        prev = carry
+        new = prev * tot_c[:, :, None, None] + s_c
+        return new, prev
+    s_swapped = jnp.moveaxis(s_chunk, 1, 0)             # (nc,B,H,N,P)
+    tot_swapped = jnp.moveaxis(tot, 1, 0)               # (nc,B,H)
+    final, prev_states = jax.lax.scan(body, init, (s_swapped, tot_swapped))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)       # (B,nc,H,N,P)
+    y_inter = jnp.einsum("bcqn,bcqh,bchnp->bcqhp",
+                         Cc, jnp.exp(cum), prev_states)
+    y = (y_intra + y_inter).reshape(Bsz, Lp, H, Pd)
+    return y[:, :L], final
+
+
+def mamba_forward(p, cfg: ModelConfig, x, return_state: bool = False):
+    """x: (B,L,D). Returns (B,L,D) (and the decode cache — conv tail +
+    final SSM state — when ``return_state``, for prefill)."""
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    nh = s.num_heads(cfg.d_model)
+    dt_ = x.dtype
+    zxbcdt = jnp.einsum("bld,de->ble", x, p["in_proj"].astype(dt_))
+    z, xbc, dt = _split_proj(cfg, zxbcdt)
+    xbc_raw = xbc.astype(jnp.float32)
+    xbc = jax.nn.silu(_causal_conv(xbc_raw,
+                                   p["conv_w"].astype(jnp.float32),
+                                   p["conv_b"].astype(jnp.float32)))
+    xs = xbc[..., :d_in]
+    Bm = xbc[..., d_in:d_in + s.state_dim]
+    Cm = xbc[..., d_in + s.state_dim:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = xs.reshape(*xs.shape[:2], nh, s.head_dim)
+    y, state = ssd_chunked(xh, dt, A, Bm, Cm, s.chunk)
+    y = y + p["D"].astype(jnp.float32)[None, None, :, None] * xh
+    y = y.reshape(*xs.shape[:2], d_in)
+    y = _gated_norm(y, z, p["gate_norm"])
+    out = jnp.einsum("ble,ed->bld", y.astype(dt_), p["out_proj"].astype(dt_))
+    if return_state:
+        kw = s.conv_width - 1
+        tail = xbc_raw[:, -kw:, :]
+        pad = kw - tail.shape[1]
+        if pad > 0:
+            tail = jnp.pad(tail, ((0, 0), (pad, 0), (0, 0)))
+        return out, {"conv": tail, "ssm": state}
+    return out
+
+
+# ---------------------------------------------------------------- decode
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    nh = s.num_heads(cfg.d_model)
+    conv_ch = d_in + 2 * s.state_dim
+    return {
+        "conv": jnp.zeros((batch, s.conv_width - 1, conv_ch), jnp.float32),
+        "ssm": jnp.zeros((batch, nh, s.state_dim, s.head_dim), jnp.float32),
+    }
+
+
+def abstract_mamba_cache(cfg: ModelConfig, batch: int, dtype):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    nh = s.num_heads(cfg.d_model)
+    conv_ch = d_in + 2 * s.state_dim
+    sds = jax.ShapeDtypeStruct
+    return {"conv": sds((batch, s.conv_width - 1, conv_ch), jnp.float32),
+            "ssm": sds((batch, nh, s.state_dim, s.head_dim), jnp.float32)}
+
+
+def mamba_cache_axes():
+    return {"conv": ("batch", None, "ssm_inner"),
+            "ssm": ("batch", "ssm_inner", None, None)}
+
+
+def mamba_decode_step(p, cfg: ModelConfig, x, cache):
+    """x: (B,1,D). O(1) recurrent update. Returns (out, new_cache)."""
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    nh = s.num_heads(cfg.d_model)
+    dt_ = x.dtype
+    zxbcdt = jnp.einsum("bld,de->ble", x, p["in_proj"].astype(dt_))
+    z, xbc, dt = _split_proj(cfg, zxbcdt)
+    xbc = xbc[:, 0].astype(jnp.float32)                 # (B,C)
+    hist = jnp.concatenate([cache["conv"], xbc[:, None]], axis=1)  # (B,K,C)
+    w = p["conv_w"].astype(jnp.float32)                 # (K,C)
+    conv_out = jnp.einsum("bkc,kc->bc", hist, w) + p["conv_b"].astype(jnp.float32)
+    conv_out = jax.nn.silu(conv_out)
+    new_conv = hist[:, 1:]
+    xs = conv_out[:, :d_in]
+    Bm = conv_out[:, d_in:d_in + s.state_dim]
+    Cm = conv_out[:, d_in + s.state_dim:]
+    dt1 = jax.nn.softplus(dt[:, 0].astype(jnp.float32)
+                          + p["dt_bias"].astype(jnp.float32))       # (B,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    a = jnp.exp(dt1 * A[None, :])                        # (B,H)
+    xh = xs.reshape(-1, nh, s.head_dim)                  # (B,H,P)
+    # state: (B,H,N,P)
+    upd = jnp.einsum("bh,bn,bhp->bhnp", dt1, Bm, xh)
+    new_ssm = cache["ssm"] * a[:, :, None, None] + upd
+    y = jnp.einsum("bn,bhnp->bhp", Cm, new_ssm)
+    y = y + p["D"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(-1, 1, d_in)
+    y = _gated_norm(y, z, p["gate_norm"])
+    out = jnp.einsum("ble,ed->bld", y.astype(dt_), p["out_proj"].astype(dt_))
+    return out, {"conv": new_conv, "ssm": new_ssm}

@@ -1,0 +1,462 @@
+"""Model assembly: config -> params / forward / decode, scan over superblocks.
+
+A model is a stack of ``num_superblocks`` identical *superblocks* (one tile
+of ``cfg.layer_pattern``), executed with ``jax.lax.scan`` so HLO size is
+O(1) in depth (512-device compiles stay fast).  MoE FFNs read from the
+single cross-layer FSSDP chunk buffer (``repro.core.moe``); everything else
+is plain pytree params stacked along the scan axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.common.config import ModelConfig
+from repro.common import sharding as shd
+from repro.common.params import Param, axes_tree, init_tree, stack_params
+from repro.core import moe as moe_core
+from repro.core.moe import MoERuntime, PlanArrays
+from repro.models import attention as attn
+from repro.models import layers as ly
+from repro.models import mamba2 as mb
+
+
+@dataclasses.dataclass
+class Runtime:
+    """Distribution context threaded through the model."""
+    mesh: Optional[Mesh] = None
+    rules: Optional[Dict[str, Any]] = None
+    moe: MoERuntime = dataclasses.field(default_factory=MoERuntime)
+    use_pallas: bool = False
+    # Unroll the superblock scan into a Python loop.  Used by the dry-run's
+    # cost extrapolation: XLA cost_analysis counts a while-loop body ONCE
+    # (verified on this jax build), so the roofline lowers depth-1 and
+    # depth-2 unrolled variants and extrapolates exactly (blocks are
+    # homogeneous by construction).
+    unroll: bool = False
+
+    @property
+    def num_devices(self) -> int:
+        return self.mesh.size if self.mesh is not None else 1
+
+    def constrain(self, x, axes):
+        if self.mesh is None or self.rules is None:
+            return x
+        return shd.constrain(x, axes, self.rules, self.mesh)
+
+
+def _scan(rt: Runtime, body, carry, xs):
+    """lax.scan or an unrolled Python loop (see Runtime.unroll)."""
+    if not rt.unroll:
+        return jax.lax.scan(body, carry, xs)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        carry, y = body(carry, jax.tree.map(lambda a: a[i], xs))
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    else:
+        ys = None
+    return carry, ys
+
+
+def _moe_positions(cfg: ModelConfig) -> Tuple[int, ...]:
+    """Positions within a superblock that carry an MoE FFN (must be
+    consistent across superblocks — validated)."""
+    pl = len(cfg.layer_pattern)
+    pos = tuple(j for j in range(pl) if cfg.is_moe_layer(j))
+    for sb in range(cfg.num_superblocks):
+        got = tuple(j for j in range(pl) if cfg.is_moe_layer(sb * pl + j))
+        assert got == pos, (
+            f"{cfg.name}: MoE period {cfg.moe.period} incompatible with "
+            f"layer_pattern length {pl} — expand the pattern")
+    return pos
+
+
+# ---------------------------------------------------------------------------
+# Parameter declaration
+# ---------------------------------------------------------------------------
+def _sublayer_decl(cfg: ModelConfig, kind: str, is_moe: bool, cross: bool):
+    d = cfg.d_model
+    p: Dict[str, Any] = {"ln1": ly.norm_params(d)}
+    if kind in ("attn", "local"):
+        p["attn"] = attn.attn_params(cfg)
+    elif kind == "mamba":
+        p["mamba"] = mb.mamba_params(cfg)
+    else:
+        raise ValueError(kind)
+    if cross:
+        p["lnx"] = ly.norm_params(d)
+        p["xattn"] = attn.attn_params(cfg, cross=True)
+    if kind != "mamba":
+        p["ln2"] = ly.norm_params(d)
+        if not is_moe:
+            p["mlp"] = ly.mlp_params(d, cfg.d_ff, cfg.act)
+    elif is_moe:  # hybrid: mamba layer followed by MoE FFN (jamba)
+        p["ln2"] = ly.norm_params(d)
+    return p
+
+
+def param_decls(cfg: ModelConfig, ep: int = 1):
+    """Full parameter declaration tree (Param descriptors)."""
+    moe_pos = _moe_positions(cfg) if cfg.moe.enabled else ()
+    sb = {}
+    for j, kind in enumerate(cfg.layer_pattern):
+        sb[f"l{j}"] = _sublayer_decl(cfg, kind, j in moe_pos,
+                                     cross=cfg.is_encoder_decoder)
+    decls: Dict[str, Any] = {
+        "embed": ly.embed_params(cfg.vocab_size, cfg.d_model,
+                                 cfg.tie_embeddings),
+        "blocks": stack_params(sb, cfg.num_superblocks),
+        "final_norm": ly.norm_params(cfg.d_model),
+    }
+    if cfg.moe.enabled:
+        decls["router"] = moe_core.router_param(cfg)
+        decls["moe_buffer"] = moe_core.moe_buffer_param(cfg, ep)
+    if cfg.is_encoder_decoder:
+        enc_sb = {"l0": _sublayer_decl(cfg, "attn", False, cross=False)}
+        decls["encoder"] = {
+            "blocks": stack_params(enc_sb, cfg.encoder_layers),
+            "final_norm": ly.norm_params(cfg.d_model),
+        }
+    return decls
+
+
+def param_logical_axes(cfg: ModelConfig, ep: int = 1):
+    return axes_tree(param_decls(cfg, ep))
+
+
+def init_params(cfg: ModelConfig, key, ep: int = 1):
+    return init_tree(param_decls(cfg, ep), key, cfg.param_dtype)
+
+
+# ---------------------------------------------------------------------------
+# MoE FFN wrapper: flatten tokens, pad to device count, run the FSSDP core
+# ---------------------------------------------------------------------------
+def _moe_ffn(cfg: ModelConfig, rt: Runtime, x, wr, buf, pa: PlanArrays):
+    b, s, d = x.shape
+    t = b * s
+    n_dev = rt.num_devices
+    pad = (-t) % max(n_dev, 1)
+    xt = x.reshape(t, d)
+    # Stage the reshard explicitly: batch-sharded -> token-sharded is a
+    # local SPLIT over the model axis; the return path gathers over the
+    # model axis only, WITHIN each data group.  Without the intermediate
+    # ("tokens_batch") constraint GSPMD lowers the boundary as a full
+    # replicate-gather of the global token tensor (8.6 GB/layer/device in
+    # the olmoe dry-run).
+    xt = rt.constrain(xt, ("tokens_batch", None))
+    valid = jnp.ones((t,), bool)
+    if pad:
+        xt = jnp.concatenate([xt, jnp.zeros((pad, d), x.dtype)])
+        valid = jnp.concatenate([valid, jnp.zeros((pad,), bool)])
+    xt = rt.constrain(xt, ("tokens", None))
+    y, aux = moe_core.moe_layer(cfg, rt.moe, xt, wr, buf, pa, valid)
+    y = rt.constrain(y, ("tokens", None))
+    if pad:
+        y = y[:t]
+    y = rt.constrain(y, ("tokens_batch", None))
+    return y.reshape(b, s, d), aux
+
+
+# ---------------------------------------------------------------------------
+# Superblock forward (full-sequence: train / prefill)
+# ---------------------------------------------------------------------------
+def _superblock(cfg: ModelConfig, rt: Runtime, params_sb, x, positions,
+                moe_xs, enc_out=None, causal: bool = True,
+                collect_cache: bool = False):
+    """moe_xs: (routers:(c,d,E), plan arrays with leading c, buffer) or None.
+    collect_cache: also return the per-sublayer decode cache (prefill)."""
+    moe_pos = _moe_positions(cfg) if cfg.moe.enabled else ()
+    aux_list = []
+    cache = {}
+    mi = 0
+    for j, kind in enumerate(cfg.layer_pattern):
+        p = params_sb[f"l{j}"]
+        h = ly.apply_norm(p["ln1"], x, cfg.norm)
+        if kind == "mamba":
+            y = mb.mamba_forward(p["mamba"], cfg, h,
+                                 return_state=collect_cache)
+            if collect_cache:
+                y, cache[f"l{j}"] = y
+            x = x + y
+        else:
+            y = attn.attention(p["attn"], cfg, h, positions, kind=kind,
+                               causal=causal, use_pallas=rt.use_pallas,
+                               return_kv=collect_cache)
+            if collect_cache:
+                y, cache[f"l{j}"] = y
+            x = x + y
+            if enc_out is not None:
+                hx = ly.apply_norm(p["lnx"], x, cfg.norm)
+                x = x + attn.attention(p["xattn"], cfg, hx, positions,
+                                       causal=False, xa=enc_out)
+        x = rt.constrain(x, ("batch", None, None))
+        if j in moe_pos:
+            routers, pa_c, buf = moe_xs
+            pa_j = jax.tree.map(lambda a: a[mi], pa_c)
+            h = ly.apply_norm(p["ln2"], x, cfg.norm)
+            y, aux = _moe_ffn(cfg, rt, h, routers[mi], buf, pa_j)
+            x = x + y
+            aux_list.append(aux)
+            mi += 1
+        elif kind != "mamba":
+            h = ly.apply_norm(p["ln2"], x, cfg.norm)
+            x = x + ly.apply_mlp(p["mlp"], h, cfg.act)
+        x = rt.constrain(x, ("batch", None, None))
+    aux_acc = (jax.tree.map(lambda *xs: jnp.stack(xs), *aux_list)
+               if aux_list else None)
+    if collect_cache:
+        return x, (aux_acc, cache)
+    return x, aux_acc
+
+
+def _reshape_moe_xs(cfg: ModelConfig, routers, pa: PlanArrays):
+    """(L_moe, ...) -> (n_sb, c, ...) for scanning."""
+    n_sb = cfg.num_superblocks
+    c = moe_core.num_moe_layers(cfg) // n_sb
+    r = routers.reshape(n_sb, c, *routers.shape[1:])
+    pa_r = PlanArrays(*[a.reshape(n_sb, c, *a.shape[1:]) for a in pa])
+    return r, pa_r
+
+
+def forward(cfg: ModelConfig, rt: Runtime, params, tokens=None, *,
+            embeds=None, positions=None, pa: Optional[PlanArrays] = None,
+            encoder_input=None, causal: bool = True,
+            collect_cache: bool = False, return_hidden: bool = False):
+    """Returns (logits, aux_tree) — or (logits, aux, cache) when
+    ``collect_cache`` (prefill: the cache holds rotated K/V per layer, SSM
+    states, and cross-attention K/V for enc-dec models).
+
+    tokens: (B, S) int32 — or embeds: (B, S, D) for frontend-stub archs.
+    encoder_input: (B, S_enc, D) frame/patch embeddings (whisper).
+    pa: stacked PlanArrays (L_moe leading dim) for MoE archs.
+    """
+    dt = jnp.dtype(cfg.dtype)
+    if embeds is None:
+        x = ly.embed(params["embed"], tokens, dt)
+        x = x * math.sqrt(cfg.d_model)
+    else:
+        x = embeds.astype(dt)
+    b, s = x.shape[:2]
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+        if cfg.mrope:
+            positions = jnp.broadcast_to(positions[..., None], (b, s, 3))
+    x = rt.constrain(x, ("batch", None, None))
+
+    enc_out = None
+    if cfg.is_encoder_decoder:
+        assert encoder_input is not None
+        enc_out = _encode(cfg, rt, params["encoder"], encoder_input.astype(dt))
+
+    moe_xs = None
+    if cfg.moe.enabled:
+        assert pa is not None, "MoE arch needs PlanArrays"
+        routers_r, pa_r = _reshape_moe_xs(cfg, params["router"], pa)
+        moe_xs = (routers_r, pa_r, params["moe_buffer"])
+
+    def body(carry, xs):
+        params_sb = xs[0]
+        m_xs = None
+        if moe_xs is not None:
+            m_xs = (xs[1][0], xs[1][1], moe_xs[2])
+        def blk(params_sb_, x_, positions_, m_xs_, enc_out_):
+            return _superblock(cfg, rt, params_sb_, x_, positions_, m_xs_,
+                               enc_out_, causal, collect_cache)
+        if cfg.remat:
+            policy = (jax.checkpoint_policies.nothing_saveable
+                      if cfg.moe.rematerialize else
+                      jax.checkpoint_policies.save_only_these_names(
+                          "moe_materialized"))
+            blk = jax.checkpoint(blk, policy=policy)
+        x, ys = blk(params_sb, carry, positions, m_xs, enc_out)
+        return x, ys
+
+    xs = (params["blocks"],)
+    if moe_xs is not None:
+        xs = (params["blocks"], (moe_xs[0], moe_xs[1]))
+    x, ys = _scan(rt, body, x, xs)
+    x = ly.apply_norm(params["final_norm"], x, cfg.norm)
+    if return_hidden:
+        # loss is computed chunked from the hidden states (train path):
+        # materializing full (B, S, V) f32 logits costs tens of GB/device
+        # for 150k-vocab models (seen in the qwen-110b dry-run).
+        return x, ys
+    logits = ly.unembed(params["embed"], x, cfg.final_logit_softcap)
+    if collect_cache:
+        aux_stack, cache = ys if ys is not None else (None, {})
+        if cfg.is_encoder_decoder:
+            cache = dict(cache)
+            cache["xk"], cache["xv"] = precompute_cross_kv(cfg, params,
+                                                           enc_out)
+        return logits, aux_stack, cache
+    return logits, ys
+
+
+def _encode(cfg: ModelConfig, rt: Runtime, enc_params, enc_in):
+    b, s = enc_in.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    enc_cfg = cfg  # same dims
+
+    def body(carry, params_sb):
+        def blk(params_sb_, x_):
+            return _superblock(enc_cfg, rt, params_sb_, x_, positions,
+                               None, None, False)
+        if cfg.remat:
+            blk = jax.checkpoint(blk)
+        x, _ = blk(params_sb, carry)
+        return x, None
+
+    x, _ = _scan(rt, body, enc_in, enc_params["blocks"])
+    return ly.apply_norm(enc_params["final_norm"], x, cfg.norm)
+
+
+# ---------------------------------------------------------------------------
+# Decode (one token against a cache)
+# ---------------------------------------------------------------------------
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, *,
+               abstract: bool = False, mesh_batch: int = 1):
+    """Stacked cache pytree with leading num_superblocks axis per sublayer."""
+    dt = jnp.dtype(cfg.dtype)
+    n_sb = cfg.num_superblocks
+
+    def one(kind):
+        if kind == "mamba":
+            c = (mb.abstract_mamba_cache(cfg, batch, dt) if abstract
+                 else mb.init_mamba_cache(cfg, batch, dt))
+        else:
+            c = (attn.abstract_kv_cache(cfg, batch, max_len, dt) if abstract
+                 else attn.init_kv_cache(cfg, batch, max_len, dt))
+        return c
+
+    def stack(c):
+        if abstract:
+            return jax.tree.map(lambda a: jax.ShapeDtypeStruct(
+                (n_sb,) + a.shape, a.dtype), c)
+        return jax.tree.map(lambda a: jnp.broadcast_to(
+            a[None], (n_sb,) + a.shape).copy(), c)
+
+    cache = {f"l{j}": stack(one(kind))
+             for j, kind in enumerate(cfg.layer_pattern)}
+    if cfg.is_encoder_decoder:
+        # cached encoder output + per-layer cross K/V
+        nkv, hd = cfg.num_kv_heads, cfg.head_dim
+        se = cfg.encoder_seq_len
+        shp = (n_sb, batch, se, nkv, hd)
+        if abstract:
+            cache["xk"] = jax.ShapeDtypeStruct(shp, dt)
+            cache["xv"] = jax.ShapeDtypeStruct(shp, dt)
+        else:
+            cache["xk"] = jnp.zeros(shp, dt)
+            cache["xv"] = jnp.zeros(shp, dt)
+    return cache
+
+
+def cache_logical_axes(cfg: ModelConfig, batch: int, mesh_batch: int):
+    ax = {}
+    for j, kind in enumerate(cfg.layer_pattern):
+        if kind == "mamba":
+            a = mb.mamba_cache_axes()
+        else:
+            a = attn.kv_cache_axes(batch, mesh_batch)
+        ax[f"l{j}"] = jax.tree.map(lambda t: ("layers",) + t, a,
+                                   is_leaf=lambda t: isinstance(t, tuple))
+    if cfg.is_encoder_decoder:
+        ax["xk"] = ("layers", "batch", None, "kv_heads", None)
+        ax["xv"] = ("layers", "batch", None, "kv_heads", None)
+    return ax
+
+
+def decode_step(cfg: ModelConfig, rt: Runtime, params, cache, tokens, pos,
+                pa: Optional[PlanArrays] = None):
+    """tokens: (B, 1) int32; pos: scalar — position being written.
+    Returns (logits: (B,1,V), new_cache)."""
+    dt = jnp.dtype(cfg.dtype)
+    x = ly.embed(params["embed"], tokens, dt) * math.sqrt(cfg.d_model)
+    x = rt.constrain(x, ("batch", None, None))
+
+    moe_xs = None
+    if cfg.moe.enabled:
+        assert pa is not None
+        routers_r, pa_r = _reshape_moe_xs(cfg, params["router"], pa)
+        moe_xs = (routers_r, pa_r, params["moe_buffer"])
+
+    moe_pos = _moe_positions(cfg) if cfg.moe.enabled else ()
+
+    def body(x, xs):
+        if moe_xs is not None:
+            params_sb, cache_sb, (routers_c, pa_c) = xs
+        else:
+            params_sb, cache_sb = xs
+        new_cache = dict(cache_sb)
+        mi = 0
+        for j, kind in enumerate(cfg.layer_pattern):
+            p = params_sb[f"l{j}"]
+            h = ly.apply_norm(p["ln1"], x, cfg.norm)
+            if kind == "mamba":
+                y, nc = mb.mamba_decode_step(p["mamba"], cfg, h,
+                                             cache_sb[f"l{j}"])
+                x = x + y
+                new_cache[f"l{j}"] = nc
+            else:
+                y, nc = attn.decode_attention(p["attn"], cfg, h,
+                                              cache_sb[f"l{j}"], pos,
+                                              kind=kind)
+                x = x + y
+                new_cache[f"l{j}"] = nc
+                if cfg.is_encoder_decoder:
+                    hx = ly.apply_norm(p["lnx"], x, cfg.norm)
+                    y = _cross_decode(p["xattn"], cfg, hx,
+                                      cache_sb["xk"], cache_sb["xv"])
+                    x = x + y
+            if j in moe_pos:
+                h = ly.apply_norm(p["ln2"], x, cfg.norm)
+                pa_j = jax.tree.map(lambda a: a[mi], pa_c)
+                y, _ = _moe_ffn(cfg, rt, h, routers_c[mi], moe_xs[2], pa_j)
+                x = x + y
+                mi += 1
+            elif kind != "mamba":
+                h = ly.apply_norm(p["ln2"], x, cfg.norm)
+                x = x + ly.apply_mlp(p["mlp"], h, cfg.act)
+        return x, new_cache
+
+    xs = [params["blocks"],
+          {k: v for k, v in cache.items() if k.startswith("l")}]
+    if moe_xs is not None:
+        xs.append((moe_xs[0], moe_xs[1]))
+    if cfg.is_encoder_decoder:
+        xs[1] = dict(xs[1], xk=cache["xk"], xv=cache["xv"])
+    x, new_cache = _scan(rt, body, x, tuple(xs))
+    x = ly.apply_norm(params["final_norm"], x, cfg.norm)
+    logits = ly.unembed(params["embed"], x, cfg.final_logit_softcap)
+    out_cache = dict(new_cache)
+    if cfg.is_encoder_decoder:  # static across steps
+        out_cache["xk"], out_cache["xv"] = cache["xk"], cache["xv"]
+    return logits, out_cache
+
+
+def _cross_decode(p, cfg: ModelConfig, x, xk, xv):
+    """Cross-attention against precomputed encoder K/V."""
+    dt = x.dtype
+    q = jnp.einsum("bsd,dnh->bsnh", x, p["wq"].astype(dt))
+    out = attn._sdpa(q, xk, xv, None, cfg.attn_logit_softcap, cfg.head_dim)
+    return jnp.einsum("bsnh,nhd->bsd", out, p["wo"].astype(dt))
+
+
+def precompute_cross_kv(cfg: ModelConfig, params, enc_out):
+    """Fill the xk/xv cache entries from encoder output (per decoder layer)."""
+    def one(p_attn):
+        dt = enc_out.dtype
+        k = jnp.einsum("bsd,dnh->bsnh", enc_out, p_attn["wk"].astype(dt))
+        v = jnp.einsum("bsd,dnh->bsnh", enc_out, p_attn["wv"].astype(dt))
+        return k, v
+    return jax.vmap(one)(params["blocks"]["l0"]["xattn"])

@@ -1,0 +1,75 @@
+"""AdamW with mixed-precision-style state layout, implemented natively.
+
+Master params, first and second moments are f32 (the paper's "optimizer
+states ≥ 6× parameter bytes" accounting under mixed precision); compute
+casts to ``cfg.dtype`` inside the model.  States inherit the parameter
+sharding — for the FSSDP chunk buffer that means exactly one globally
+sharded copy of m/v per expert, living with its owning shard (C1).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import TrainConfig
+
+
+class OptState(NamedTuple):
+    mu: Any
+    nu: Any
+    count: jnp.ndarray
+
+
+def init(params) -> OptState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return OptState(mu=jax.tree.map(zeros, params),
+                    nu=jax.tree.map(zeros, params),
+                    count=jnp.zeros((), jnp.int32))
+
+
+def lr_schedule(tc: TrainConfig, step):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(tc.warmup_steps, 1), 1.0)
+    total = jnp.maximum(tc.total_steps - tc.warmup_steps, 1)
+    frac = jnp.clip((step - tc.warmup_steps) / total, 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    return tc.learning_rate * warm * (0.1 + 0.9 * cos)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves))
+
+
+def update(grads, state: OptState, params, tc: TrainConfig):
+    """Returns (new_params, new_state, metrics)."""
+    count = state.count + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, tc.grad_clip / jnp.maximum(gnorm, 1e-9)) \
+        if tc.grad_clip > 0 else jnp.ones(())
+    lr = lr_schedule(tc, count)
+    b1, b2 = tc.beta1, tc.beta2
+    c1 = 1 - b1 ** count.astype(jnp.float32)
+    c2 = 1 - b2 ** count.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        step_ = (m / c1) / (jnp.sqrt(v / c2) + tc.eps)
+        newp = p.astype(jnp.float32) - lr * (step_ + tc.weight_decay
+                                             * p.astype(jnp.float32))
+        return newp.astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.mu)
+    flat_v = treedef.flatten_up_to(state.nu)
+    out = [upd(g, m, v, p) for g, m, v, p in
+           zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, OptState(new_m, new_v, count), {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,92 @@
+"""Serving: batched prefill + decode against KV/SSM caches.
+
+``build_serve_step`` is the function the decode-shape dry-runs lower: ONE
+new token per sequence against a ``max_len`` cache.  The demo engine does
+loop-based prefill (adequate for example-scale models; production prefill
+would fill the cache in one forward pass).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.config import ModelConfig
+from repro.core.moe import PlanArrays
+from repro.models import model as mdl
+
+
+def build_serve_step(cfg: ModelConfig, rt: mdl.Runtime):
+    """fn(params, cache, tokens:(B,1), pos, pa) -> (logits:(B,1,V), cache)."""
+    def serve_step(params, cache, tokens, pos, pa: Optional[PlanArrays]):
+        return mdl.decode_step(cfg, rt, params, cache, tokens, pos, pa)
+    return serve_step
+
+
+def build_prefill_step(cfg: ModelConfig, rt: mdl.Runtime):
+    """fn(params, batch, pa) -> (last-position logits (B,1,V), cache).
+
+    The cache holds every layer's rotated K/V (or SSM state) for the whole
+    prompt — the real production prefill, not a loop of decode steps.
+    """
+    def prefill_step(params, batch, pa: Optional[PlanArrays]):
+        kwargs: Dict[str, Any] = {}
+        if "embeds" in batch:
+            kwargs["embeds"] = batch["embeds"]
+        else:
+            kwargs["tokens"] = batch["tokens"]
+        if cfg.is_encoder_decoder:
+            kwargs["encoder_input"] = batch["encoder_input"]
+        logits, _, cache = mdl.forward(cfg, rt, params, pa=pa,
+                                       collect_cache=True, **kwargs)
+        return logits[:, -1:], cache
+    return prefill_step
+
+
+class Engine:
+    """Minimal batched greedy/sampling decode engine for the examples."""
+
+    def __init__(self, cfg: ModelConfig, rt: mdl.Runtime, params,
+                 max_len: int = 512, pa: Optional[PlanArrays] = None):
+        self.cfg, self.rt, self.params, self.pa = cfg, rt, params, pa
+        self.max_len = max_len
+        self.step_fn = jax.jit(build_serve_step(cfg, rt))
+
+    def generate(self, prompts: np.ndarray, steps: int,
+                 temperature: float = 0.0, seed: int = 0,
+                 encoder_input=None) -> np.ndarray:
+        """prompts: (B, P) int32 (left-aligned, no padding). Returns
+        (B, P+steps)."""
+        b, p = prompts.shape
+        cache = mdl.init_cache(self.cfg, b, self.max_len)
+        if self.cfg.is_encoder_decoder:
+            assert encoder_input is not None
+            enc = mdl._encode(self.cfg, self.rt, self.params["encoder"],
+                              jnp.asarray(encoder_input,
+                                          jnp.dtype(self.cfg.dtype)))
+            xk, xv = mdl.precompute_cross_kv(self.cfg, self.params, enc)
+            cache["xk"], cache["xv"] = xk, xv
+        key = jax.random.PRNGKey(seed)
+        toks = jnp.asarray(prompts, jnp.int32)
+        out = [toks]
+        logits = None
+        for i in range(p):                       # loop prefill
+            logits, cache = self.step_fn(self.params, cache, toks[:, i:i + 1],
+                                         jnp.int32(i), self.pa)
+        cur = None
+        for s in range(steps):
+            key, sub = jax.random.split(key)
+            nxt = _sample(logits[:, -1], temperature, sub)[:, None]
+            out.append(nxt)
+            logits, cache = self.step_fn(self.params, cache, nxt,
+                                         jnp.int32(p + s), self.pa)
+        return np.asarray(jnp.concatenate(out, axis=1))
+
+
+def _sample(logits, temperature, key):
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(key, logits / temperature).astype(jnp.int32)

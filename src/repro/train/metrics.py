@@ -1,0 +1,73 @@
+"""Training metrics: JSONL sink, moving averages, throughput, and the
+FSSDP load-balance observables (expert counts entropy, device-load
+imbalance) that the paper's Figure 3 tracks."""
+from __future__ import annotations
+
+import json
+import os
+import time
+from collections import deque
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+
+def expert_stats(counts: np.ndarray) -> Dict[str, float]:
+    """counts: (L, E) tokens per expert per layer."""
+    counts = np.asarray(counts, np.float64)
+    p = counts / np.maximum(counts.sum(axis=1, keepdims=True), 1e-9)
+    ent = -(p * np.log(np.maximum(p, 1e-12))).sum(1)
+    e = counts.shape[1]
+    return {
+        "expert_entropy_frac": float((ent / np.log(e)).mean()),
+        "expert_imbalance_max": float(
+            (counts.max(1) / np.maximum(counts.mean(1), 1e-9)).max()),
+    }
+
+
+def device_stats(loads: np.ndarray) -> Dict[str, float]:
+    """loads: (L, M) real tokens per EP device (MoEAux.device_loads)."""
+    loads = np.asarray(loads, np.float64)
+    return {
+        "device_straggler_factor": float(
+            (loads.max(1) / np.maximum(loads.mean(1), 1e-9)).max()),
+    }
+
+
+class MetricLogger:
+    def __init__(self, path: Optional[str] = None, window: int = 20,
+                 tokens_per_step: float = 0.0):
+        self.path = path
+        self._fh = None
+        if path:
+            os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+            self._fh = open(path, "a")
+        self.window = deque(maxlen=window)
+        self.tokens_per_step = tokens_per_step
+        self._t_last = time.perf_counter()
+
+    def log(self, step: int, metrics: Dict[str, Any]) -> Dict[str, Any]:
+        now = time.perf_counter()
+        dt = now - self._t_last
+        self._t_last = now
+        rec: Dict[str, Any] = {"step": step, "time_s": dt}
+        for k, v in metrics.items():
+            a = np.asarray(v)
+            if a.ndim == 0:
+                rec[k] = float(a)
+        if "expert_counts" in metrics:
+            rec.update(expert_stats(np.asarray(metrics["expert_counts"])))
+        if "device_loads" in metrics:
+            rec.update(device_stats(np.asarray(metrics["device_loads"])))
+        if self.tokens_per_step:
+            rec["tokens_per_s"] = self.tokens_per_step / max(dt, 1e-9)
+        self.window.append(rec.get("loss", 0.0))
+        rec["loss_avg"] = float(np.mean(self.window))
+        if self._fh:
+            self._fh.write(json.dumps(rec) + "\n")
+            self._fh.flush()
+        return rec
+
+    def close(self):
+        if self._fh:
+            self._fh.close()

@@ -1,0 +1,201 @@
+"""Hecate training driver: the FSSDP control loop.
+
+Per iteration (paper Fig. 5):
+  1. predictor estimates next-iteration expert loads (sliding window, w=5);
+  2. Algorithm 1 emits the materialization plan (runtime tables — no
+     recompile);
+  3. the jitted train step runs: spAG materializes the placement, tokens are
+     dispatched to replicas, spRS (AD transpose) reduces gradients onto the
+     owning shards, AdamW updates shard-resident optimizer state;
+  4. observed per-layer expert counts feed back into the predictor;
+  5. every ``resharding.interval`` steps Algorithm 2 re-shards the unified
+     chunk buffer (cross-layer heterogeneous sharding) — the only data
+     movement on the critical path, amortized (paper §4.3).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Iterable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.config import ModelConfig, TrainConfig
+from repro.core import moe as moe_core
+from repro.core.placement import (MaterializationPlan, ShardingPlan,
+                                  ep_materialization, homogeneous_sharding)
+from repro.core.schedule import (LoadPredictor, ReshardingPolicy,
+                                 sparse_materialization)
+from repro.train import step as step_lib
+
+
+def placement_latency_safe(ctx, plan, loads, layer):
+    from repro.core.costs import placement_latency
+    try:
+        return placement_latency(ctx, plan, loads, layer)
+    except Exception:
+        return 0.0
+
+
+def reshard_perm(old: ShardingPlan, new: ShardingPlan) -> np.ndarray:
+    """perm[new_global_row] = old_global_row (identity on pad rows)."""
+    rows = old.rows_per_device * old.num_devices
+    perm = np.arange(rows, dtype=np.int32)
+    old_g = old.owner_dev.astype(np.int64) * old.rows_per_device + old.owner_row
+    new_g = new.owner_dev.astype(np.int64) * new.rows_per_device + new.owner_row
+    perm[new_g.reshape(-1)] = old_g.reshape(-1)
+    return perm
+
+
+@dataclasses.dataclass
+class HecateScheduler:
+    """Owns the sharding plan, predictor, per-step materialization, and the
+    calibration stage (§4.2).
+
+    Calibration adaptation (DESIGN.md): under XLA's static graphs a plan
+    cannot change mid-step (the paper re-plans after the gate, before
+    dispatch).  We calibrate at the ITERATION BOUNDARY instead: when the
+    freshly observed loads show the window-averaged plan would have lost
+    more than ``calibration_margin`` of modeled latency vs a plan built on
+    the latest loads, the next step uses the re-planned placement
+    immediately (still zero recompiles — plans are runtime tables).
+    """
+
+    cfg: ModelConfig
+    ep: int
+    t: int = 8                      # overlap degree (profiled in prod)
+    impl: str = "ring"              # ring | a2a | dense | ep
+    resharding: Optional[ReshardingPolicy] = None
+    window: int = 5
+    calibrate: bool = True
+    calibration_margin: float = 0.05
+    tokens_per_step: float = 0.0    # for the latency model; 0 = est later
+
+    def __post_init__(self):
+        L = moe_core.num_moe_layers(self.cfg)
+        E = self.cfg.moe.num_experts
+        self.predictor = LoadPredictor(L, E, self.window)
+        self.sharding = homogeneous_sharding(L, E, self.ep)
+        self._calibrated: Optional[MaterializationPlan] = None
+        self._last_plan: Optional[MaterializationPlan] = None
+        self.calibration_events = 0
+
+    def plan(self) -> MaterializationPlan:
+        if self.impl == "ep":
+            plan = ep_materialization(self.sharding)
+        elif self._calibrated is not None:
+            plan, self._calibrated = self._calibrated, None
+        else:
+            plan = sparse_materialization(
+                self.sharding, self.predictor.predict(), t=self.t,
+                m=self.cfg.moe.slots_per_device, impl=self.impl)
+        self._last_plan = plan
+        return plan
+
+    def plan_arrays(self) -> moe_core.PlanArrays:
+        return moe_core.plan_to_arrays(self.plan())
+
+    def observe(self, counts: np.ndarray) -> None:
+        counts = np.asarray(counts, np.float64)
+        self.predictor.observe(counts)
+        if (self.calibrate and self.impl in ("ring", "a2a")
+                and self._last_plan is not None):
+            self._maybe_calibrate(counts)
+
+    def _maybe_calibrate(self, real_loads: np.ndarray) -> None:
+        from repro.core.costs import CostContext, calibration_gain
+        tokens = self.tokens_per_step or float(real_loads[0].sum()
+                                               / max(self.cfg.moe.experts_per_token, 1))
+        ctx = CostContext(self.cfg, tokens_per_step=tokens)
+        cand = sparse_materialization(
+            self.sharding, real_loads, t=self.t,
+            m=self.cfg.moe.slots_per_device, impl=self.impl)
+        # evaluate on the most imbalanced layer (cheap, representative)
+        layer = int(np.argmax(real_loads.max(1) / real_loads.mean(1)))
+        base = placement_latency_safe(ctx, self._last_plan, real_loads,
+                                      layer)
+        gain = calibration_gain(ctx, self._last_plan, cand, real_loads,
+                                layer)
+        if base > 0 and gain / base > self.calibration_margin:
+            self._calibrated = cand
+            self.calibration_events += 1
+
+    def maybe_reshard(self, step: int):
+        """Returns perm (np.ndarray) to apply to buffer rows, or None."""
+        if self.resharding is None or self.impl in ("ep", "dense"):
+            return None
+        new, changed = self.resharding.maybe_reshard(
+            step, self.sharding, self.predictor)
+        if not changed:
+            return None
+        perm = reshard_perm(self.sharding, new)
+        self.sharding = new
+        return perm
+
+
+def apply_reshard(state: step_lib.TrainState, perm: np.ndarray
+                  ) -> step_lib.TrainState:
+    """Physically move chunk rows (params + optimizer moments) to their new
+    owners.  jitted gather over the global row dim — GSPMD emits the
+    required point-to-point collectives."""
+    perm = jnp.asarray(perm)
+
+    @jax.jit
+    def go(params, opt):
+        def move(tree):
+            new = dict(tree)
+            new["moe_buffer"] = jnp.take(tree["moe_buffer"], perm, axis=0)
+            return new
+        return move(params), opt._replace(mu=move(opt.mu), nu=move(opt.nu))
+
+    new_params, new_opt = go(state.params, state.opt)
+    return step_lib.TrainState(new_params, new_opt, state.step)
+
+
+def train_loop(cfg: ModelConfig, rt, tc: TrainConfig,
+               stream: Iterable[Dict[str, np.ndarray]],
+               *, scheduler: Optional[HecateScheduler] = None,
+               train_step_fn: Optional[Callable] = None,
+               state: Optional[step_lib.TrainState] = None,
+               num_steps: Optional[int] = None,
+               log_every: int = 10,
+               callback: Optional[Callable] = None,
+               metric_logger=None):
+    """Single-host training driver (used by examples + e2e tests)."""
+    num_steps = num_steps or tc.total_steps
+    if state is None:
+        state = step_lib.init_state(cfg, jax.random.PRNGKey(tc.seed),
+                                    scheduler.ep if scheduler else 1)
+    if train_step_fn is None:
+        train_step_fn = jax.jit(step_lib.build_train_step(cfg, rt, tc))
+    history = []
+    it = iter(stream)
+    for i in range(num_steps):
+        batch = {k: jnp.asarray(v) for k, v in next(it).items()}
+        pa = None
+        if scheduler is not None and cfg.moe.enabled:
+            perm = scheduler.maybe_reshard(i)
+            if perm is not None:
+                state = apply_reshard(state, perm)
+            pa = scheduler.plan_arrays()
+        t0 = time.perf_counter()
+        state, metrics = train_step_fn(state, batch, pa)
+        metrics = jax.tree.map(np.asarray, metrics)
+        dt = time.perf_counter() - t0
+        if scheduler is not None and "expert_counts" in metrics:
+            scheduler.observe(metrics["expert_counts"])
+        rec = {"step": i, "loss": float(metrics["loss"]),
+               "xent": float(metrics["xent"]), "time_s": dt}
+        if "dropped_frac" in metrics:
+            rec["dropped_frac"] = float(metrics["dropped_frac"])
+        if metric_logger is not None:
+            rec.update(metric_logger.log(i, metrics))
+        history.append(rec)
+        if callback:
+            callback(i, state, metrics)
+        if log_every and i % log_every == 0:
+            print(f"step {i:5d}  loss {rec['loss']:.4f}  "
+                  f"xent {rec['xent']:.4f}  {dt*1e3:.0f} ms")
+    return state, history

@@ -1,0 +1,30 @@
+"""Test configuration.
+
+NOTE: no XLA_FLAGS here on purpose — smoke tests and benches must see ONE
+device.  Distributed tests spawn subprocesses that set
+--xla_force_host_platform_device_count themselves (see tests/dist_util.py).
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+def run_distributed(script: str, n_devices: int = 8, timeout: int = 560):
+    """Run a python snippet in a subprocess with n host devices."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    r = subprocess.run([sys.executable, "-c", script], env=env,
+                       capture_output=True, text=True, timeout=timeout)
+    if r.returncode != 0:
+        raise AssertionError(
+            f"distributed subprocess failed:\nSTDOUT:{r.stdout[-3000:]}\n"
+            f"STDERR:{r.stderr[-3000:]}")
+    return r.stdout
+
+
+@pytest.fixture(scope="session")
+def dist():
+    return run_distributed

@@ -1,0 +1,83 @@
+"""Eq. (1)/(2) of the paper: communication-volume accounting.
+
+Counts the bytes the sparse collectives move (from the compiled HLO of the
+shard_map'd MoE layer on 8 host devices) and checks them against the
+closed-form bounds:
+
+  ring impl:  per-device spAG volume == m · chunk_bytes       (exactly λS)
+  a2a impl:   per-device spAG volume == m · (M) · chunk_bytes  (upper bound)
+  EP (m=0):   zero materialization traffic over the expert axis
+"""
+import numpy as np
+import pytest
+
+
+SCRIPT = r"""
+import os
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P, NamedSharding
+import repro.configs as C
+from repro.core.placement import homogeneous_sharding, ep_materialization
+from repro.core.schedule import sparse_materialization
+from repro.core import moe as M
+from repro.core.moe import PlanArrays
+from repro.launch.dryrun import collective_bytes
+
+cfg = C.get_smoke("olmoe-1b-7b").replace(dtype="float32")
+EP = 4
+mesh = jax.make_mesh((2, EP), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+L = M.num_moe_layers(cfg)
+E = cfg.moe.num_experts
+sh = homogeneous_sharding(L, E, EP)
+loads = np.linspace(2, 1, E)[None].repeat(L, 0)
+key = jax.random.PRNGKey(0)
+buf = jax.random.normal(key, (M.buffer_rows(cfg, EP), M.chunk_len(cfg)))
+wr = jax.random.normal(key, (cfg.d_model, E)) * 0.1
+T = 64
+x = jax.random.normal(key, (T, cfg.d_model))
+chunk_bytes_local = M.chunk_len(cfg) * 4 // 2   # data axis shards cols by 2
+
+results = {}
+for impl, mm in [("ring", 2), ("a2a", 2), ("none", 0)]:
+    if impl == "none":
+        plan = ep_materialization(sh)
+    else:
+        plan = sparse_materialization(sh, loads, t=E, m=mm, impl=impl)
+    pa = M.plan_to_arrays(plan)
+    pa_l = PlanArrays(**jax.tree.map(lambda a: a[0], pa._asdict()))
+    rt = M.MoERuntime(mesh=mesh, batch_axes=("data",), impl=plan.impl,
+                      m=plan.m, capacity=8)
+    xs = jax.device_put(x, NamedSharding(mesh, P(("data","model"), None)))
+    bufs = jax.device_put(buf, NamedSharding(mesh, P("model", "data")))
+    # forward only — isolate spAG (spRS is its transpose, same volume)
+    comp = jax.jit(lambda xx, bb: M.moe_layer(cfg, rt, xx, wr, bb, pa_l)[0]
+                   ).lower(xs, bufs).compile()
+    cb = collective_bytes(comp.as_text())
+    results[impl] = cb
+    print(impl, cb)
+
+ring = results["ring"]; a2a = results["a2a"]; ep = results["none"]
+m, EPg = 2, 4
+# ring: m ppermutes of one chunk (per-device), f32, cols sharded by data=2
+expect_ring = m * chunk_bytes_local
+got_ring = ring.get("collective-permute", 0)
+assert abs(got_ring - expect_ring) <= 0.25 * expect_ring, (got_ring, expect_ring)
+# a2a spAG: m rounds of (M, chunk_local) all_to_all; wire volume
+# m*(M-1)*chunk_local.  PLUS the token-dispatch a2a (present in every
+# impl incl. EP) — subtract the EP baseline.
+dispatch_a2a = ep.get("all-to-all", 0)
+expect_a2a = m * (EPg - 1) * chunk_bytes_local
+got_a2a = a2a.get("all-to-all", 0) - dispatch_a2a
+assert abs(got_a2a - expect_a2a) <= 0.3 * expect_a2a, (got_a2a, expect_a2a)
+# EP: no expert-axis materialization traffic at all
+assert ep.get("collective-permute", 0) == 0
+# paper Eq.1: ring volume (true λS) strictly below the a2a upper bound
+assert got_ring < got_a2a
+print("VOLUME CHECKS PASSED")
+"""
+
+
+def test_sparse_collective_volumes(dist):
+    out = dist(SCRIPT, n_devices=8)
+    assert "VOLUME CHECKS PASSED" in out

@@ -1,0 +1,108 @@
+"""Property tests for the Hecate scheduler (Algorithms 1 & 2) and the
+placement invariants of §3.1 — hypothesis-driven."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.placement import (ep_materialization, homogeneous_sharding)
+from repro.core.schedule import (LoadPredictor, heterogeneous_sharding,
+                                 sparse_materialization)
+
+sizes = st.tuples(
+    st.integers(1, 4),            # L layers
+    st.sampled_from([4, 8, 16, 40, 64]),   # E experts
+    st.sampled_from([2, 4, 8, 16]),        # M devices
+)
+
+
+@st.composite
+def problem(draw):
+    L, E, M = draw(sizes)
+    loads = draw(st.lists(st.floats(0.0, 1000.0),
+                          min_size=L * E, max_size=L * E))
+    return L, E, M, np.asarray(loads).reshape(L, E) + 1e-3
+
+
+@settings(max_examples=40, deadline=None)
+@given(problem())
+def test_homogeneous_sharding_invariants(p):
+    L, E, M, loads = p
+    sh = homogeneous_sharding(L, E, M)
+    sh.validate()
+    # surjective: every expert owned exactly once (validate checks unique
+    # rows); ownership in range
+    assert sh.owner_dev.shape == (L, E)
+
+
+@settings(max_examples=40, deadline=None)
+@given(problem(), st.integers(0, 8), st.integers(0, 6),
+       st.sampled_from(["ring", "a2a"]))
+def test_alg1_invariants(p, t, m, impl):
+    L, E, M, loads = p
+    sh = homogeneous_sharding(L, E, M)
+    plan = sparse_materialization(sh, loads, t=t, m=m, impl=impl)
+    plan.validate()                      # P' ⊇ P, no dup, ring constraint
+    assert plan.m <= max(m, 0)
+    # slot budget respected per device
+    for l in range(L):
+        for d in range(M):
+            extras = plan.extra_experts[l, d]
+            assert (extras >= -1).all() and (extras < E).all()
+    # every expert still has >= 1 replica and owner is among replicas
+    replicas, n_rep = plan.replica_tables(r_max=plan.m + 1)
+    assert (n_rep >= 1).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(problem(), st.integers(0, 8))
+def test_alg2_memory_balance(p, t):
+    L, E, M, loads = p
+    sh = heterogeneous_sharding(loads, M, t)
+    sh.validate()
+    # unified memory space: rows per device differ by construction <= cap
+    rows_used = np.zeros(M, np.int64)
+    for l in range(L):
+        for e in range(E):
+            rows_used[sh.owner_dev[l, e]] += 1
+    assert rows_used.max() <= sh.rows_per_device
+    # memory balance: max/min spread bounded by 1 row slot (pad rows aside)
+    assert rows_used.max() - rows_used.min() <= max(1, M - (L * E) % M)
+
+
+@settings(max_examples=25, deadline=None)
+@given(problem())
+def test_alg1_hot_experts_replicated_more(p):
+    """Paper line 9: hotter experts get at least as many replicas."""
+    L, E, M, loads = p
+    if E < M:
+        return
+    sh = homogeneous_sharding(L, E, M)
+    plan = sparse_materialization(sh, loads, t=E, m=2, impl="a2a")
+    replicas, n_rep = plan.replica_tables(r_max=M)
+    for l in range(L):
+        order = np.argsort(-loads[l])
+        hot, cold = order[0], order[-1]
+        if loads[l, hot] > 2.0 * loads[l, cold]:   # strict imbalance only
+            assert n_rep[l, hot] >= n_rep[l, cold]
+
+
+def test_ep_materialization_is_identity():
+    sh = homogeneous_sharding(2, 8, 4)
+    plan = ep_materialization(sh)
+    assert plan.m == 0
+    assert plan.sparsity() == 0.0
+
+
+def test_predictor_sliding_window():
+    pred = LoadPredictor(1, 4, window=3)
+    for i in range(5):
+        pred.observe(np.full((1, 4), float(i)))
+    np.testing.assert_allclose(pred.predict(), np.full((1, 4), 3.0))
+
+
+def test_hetero_sharding_respects_k_local():
+    loads = np.random.default_rng(0).random((4, 16))
+    sh = heterogeneous_sharding(loads, 4, t=4, k_local=8)
+    for l in range(4):
+        counts = np.bincount(sh.owner_dev[l], minlength=4)
+        assert counts.max() <= 8
