@@ -15,6 +15,8 @@ import json
 SCRIPT = r"""
 import json
 import numpy as np, jax, jax.numpy as jnp
+from repro.common.compat import install_axis_type_shim
+install_axis_type_shim()
 from jax.sharding import PartitionSpec as P, NamedSharding
 from repro.common.config import ModelConfig, MoEConfig
 from repro.core.placement import homogeneous_sharding, ep_materialization

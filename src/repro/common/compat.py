@@ -1,0 +1,59 @@
+"""Version-tolerance shims for the supported JAX range.
+
+``jax.sharding.AxisType`` (and the ``axis_types=`` kwarg of
+``jax.make_mesh``) only exist on newer JAX releases; on older ones every
+mesh axis is implicitly ``Auto``, which is exactly what this codebase
+requests everywhere.  ``make_mesh`` below passes ``axis_types`` through
+when the running JAX understands it and silently drops it otherwise.
+
+``install_axis_type_shim()`` goes one step further for scripts written
+against the new API (the distributed test snippets, examples and
+benchmarks): it patches a minimal ``AxisType`` enum into ``jax.sharding``
+and wraps ``jax.make_mesh`` to swallow the kwarg.  It is a no-op on JAX
+versions that already provide the real thing.
+"""
+from __future__ import annotations
+
+import enum
+import functools
+import inspect
+from typing import Optional, Sequence
+
+import jax
+
+_HAS_AXIS_TYPES = hasattr(jax.sharding, "AxisType") and \
+    "axis_types" in inspect.signature(jax.make_mesh).parameters
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str],
+              axis_types: Optional[Sequence] = None):
+    """``jax.make_mesh`` that tolerates JAX versions without axis_types."""
+    if _HAS_AXIS_TYPES:
+        if axis_types is None:
+            axis_types = (jax.sharding.AxisType.Auto,) * len(tuple(axes))
+        return jax.make_mesh(tuple(shape), tuple(axes),
+                             axis_types=tuple(axis_types))
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def install_axis_type_shim() -> None:
+    """Make new-API callers run on old JAX (idempotent, no-op on new JAX)."""
+    if _HAS_AXIS_TYPES:
+        return
+    if not hasattr(jax.sharding, "AxisType"):
+        class AxisType(enum.Enum):
+            Auto = "auto"
+            Explicit = "explicit"
+            Manual = "manual"
+        jax.sharding.AxisType = AxisType
+    orig = jax.make_mesh
+    if getattr(orig, "_repro_axis_type_shim", False):
+        return
+
+    @functools.wraps(orig)
+    def _make_mesh(axis_shapes, axis_names, *args, axis_types=None, **kw):
+        del axis_types  # old JAX: every axis is implicitly Auto
+        return orig(axis_shapes, axis_names, *args, **kw)
+
+    _make_mesh._repro_axis_type_shim = True
+    jax.make_mesh = _make_mesh

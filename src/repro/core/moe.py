@@ -28,6 +28,34 @@ Per layer, inside a ``shard_map`` over the whole mesh:
 **SparseReduceScatter(P′, P) is the AD transpose of step 1** — reverse
 ppermute/all_to_all + scatter-add onto the owning rows; JAX derives it, and
 tests check it against the dense reference gradient.
+
+Hot path
+--------
+The compiled layer body is tuned around three costs (see
+``benchmarks/dispatch_microbench.py`` for measurements):
+
+* **Sort-based dispatch.**  Per-expert arrival ranks, destinations, cell
+  positions and per-slot group sizes all come from ONE stable argsort of
+  the flat (T·k,) assignments (``segment_ranks`` / ``replica_dispatch``)
+  — O(T·k log T·k) time, O(T·k) memory, replacing the O(T·k·E) +
+  O(T·k · M·K) one-hot/cumsum tensors the naive formulation builds.  No
+  second sort is needed for positions: each cell holds one expert whose
+  entries arrive at a fixed destination in a strict cycle.
+* **Batched sparse collectives.**  ``_materialize`` issues ONE stacked
+  (M, m, chunk) all_to_all for the a2a impl (previously m sequential
+  (M, chunk) calls) and a single batched row-gather + m data-independent
+  single-hop ppermutes for the ring impl (a collective-permute op carries
+  exactly one source→target map per offset, so ring keeps m ops — but with
+  no dependence between them they overlap, and the λS = m·chunk volume is
+  unchanged).  On the CPU backend batching auto-disables (XLA's host
+  collective emulation degrades with message size; same wire volume).
+  Materialization is issued BEFORE the gate so its collectives overlap
+  with gate + dispatch arithmetic (§4.2).
+* **Group-size-aware compute.**  The kept-token counts fall out of the
+  dispatch sort for free and ride a tiny (M, K) int all_to_all to the
+  receiving device; after a validity compaction the Pallas grouped GEMM
+  (``repro.kernels.grouped_mlp``) skips every token tile past each slot's
+  real group size instead of computing the full padded buffer.
 """
 from __future__ import annotations
 
@@ -163,6 +191,9 @@ class MoEAux(NamedTuple):
     dropped_frac: jnp.ndarray    # scalar fraction of (token,k) dropped
     device_loads: jnp.ndarray    # (M,) real tokens processed per EP device
                                  # (the straggler observable, §1)
+    pad_frac: jnp.ndarray        # scalar fraction of expert-compute rows
+                                 # that are padding (what group_sizes lets
+                                 # the grouped GEMM skip)
 
 
 # ---------------------------------------------------------------------------
@@ -201,43 +232,76 @@ def gate(cfg: ModelConfig, wr: jnp.ndarray, x: jnp.ndarray,
 # ---------------------------------------------------------------------------
 # SparseAllGather inside shard_map
 # ---------------------------------------------------------------------------
+def _axis_size(name) -> int:
+    """Static size of a shard_map axis.  ``jax.lax.axis_size`` is missing on
+    older JAX; ``psum`` of a literal folds to a static int there."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(name)
+    return jax.lax.psum(1, name)
+
+
 def _materialize(cfg: ModelConfig, buf, pa: PlanArrays, impl: str,
-                 ep_axis: str, fsdp_axes, m: int):
+                 ep_axis: str, fsdp_axes, m: int, batch: bool = True):
     """buf: (rows_local, chunk_loc).  Returns (K, chunk_len) full chunks.
 
     pa fields here are the PER-LAYER slices with the shard_map-local shapes:
     local_rows (1,k_local), ring_send_rows (1,m), extra_experts (M,m), ...
+
+    With ``batch`` (the accelerator default) the collectives are BATCHED:
+    the a2a impl issues one stacked (M, m, chunk) all_to_all instead of m
+    sequential (M, chunk) calls; the ring impl gathers all m outgoing rows
+    with a single take and issues m data-independent single-hop ppermutes
+    (one collective-permute op can carry only one source→target map, so
+    the m distinct ring offsets cannot fuse further — but with no
+    dependence between them they overlap, and the per-device λS = m·chunk
+    volume is unchanged).  ``batch=False`` keeps the m-round sequential
+    schedule: XLA's CPU host-collective emulation degrades sharply with
+    message size (measured 2–7x in benchmarks/dispatch_microbench.py), so
+    the CPU backend prefers it; wire volume is identical either way.
     """
     me = jax.lax.axis_index(ep_axis)
-    M = jax.lax.axis_size(ep_axis)
+    M = _axis_size(ep_axis)
     local_rows = pa.local_rows[0]                 # (k_local,)
     owned = jnp.take(buf, local_rows, axis=0)     # (k_local, chunk_loc)
     owned = owned * (pa.local_experts[0][:, None] >= 0).astype(buf.dtype)
     slots = [owned]
     if impl == "ring" and m > 0:
-        perms = None
+        if batch:
+            send = jnp.take(buf, pa.ring_send_rows[0], axis=0)  # (m, chunk)
+        else:
+            send = None
+        got = []
         for j in range(m):
-            row = pa.ring_send_rows[0, j]
-            chunk = jax.lax.dynamic_slice_in_dim(buf, row, 1, axis=0)
-            perm = [(s, (s - j - 1) % M) for s in range(M)]
-            got = jax.lax.ppermute(chunk, ep_axis, perm)
-            got = got * (pa.extra_experts[me, j] >= 0).astype(buf.dtype)
-            slots.append(got)
+            chunk = send[j:j + 1] if batch else jax.lax.dynamic_slice_in_dim(
+                buf, pa.ring_send_rows[0, j], 1, axis=0)
+            got.append(jax.lax.ppermute(
+                chunk, ep_axis, [(s, (s - j - 1) % M) for s in range(M)]))
+        extra = jnp.concatenate(got, axis=0)                 # (m, chunk_loc)
+        slots.append(extra * (pa.extra_experts[me][:, None] >= 0
+                              ).astype(buf.dtype))
     elif impl == "a2a" and m > 0:
-        for j in range(m):
-            wanted = pa.extra_experts[:, j]                       # (M,)
-            wanted_c = jnp.maximum(wanted, 0)
-            is_mine = (jnp.take(pa.owner_dev, wanted_c) == me) & (wanted >= 0)
-            rows = jnp.take(pa.owner_row, wanted_c)
-            send = jnp.take(buf, rows, axis=0)                    # (M, chunk_loc)
-            send = send * is_mine[:, None].astype(buf.dtype)
+        wanted = pa.extra_experts                            # (M, m)
+        wanted_c = jnp.maximum(wanted, 0)
+        is_mine = (jnp.take(pa.owner_dev, wanted_c) == me) & (wanted >= 0)
+        rows = jnp.take(pa.owner_row, wanted_c)              # (M, m)
+        my_e = pa.extra_experts[me]                          # (m,)
+        src = jnp.take(pa.owner_dev, jnp.maximum(my_e, 0))
+        if batch:
+            send = jnp.take(buf, rows.reshape(-1), axis=0) \
+                .reshape(M, m, buf.shape[1])
+            send = send * is_mine[..., None].astype(buf.dtype)
             recv = jax.lax.all_to_all(send, ep_axis, 0, 0,
-                                      tiled=False)                # (M, chunk_loc)
-            my_e = pa.extra_experts[me, j]
-            src = jnp.take(pa.owner_dev, jnp.maximum(my_e, 0))
-            got = jnp.take(recv, src[None], axis=0)               # (1, chunk_loc)
-            got = got * (my_e >= 0).astype(buf.dtype)
-            slots.append(got)
+                                      tiled=False)           # (M, m, chunk)
+            got = recv[src, jnp.arange(m)]                   # (m, chunk_loc)
+        else:
+            per = []
+            for j in range(m):
+                sj = jnp.take(buf, rows[:, j], axis=0) \
+                    * is_mine[:, j, None].astype(buf.dtype)
+                rj = jax.lax.all_to_all(sj, ep_axis, 0, 0, tiled=False)
+                per.append(jnp.take(rj, src[j][None], axis=0))
+            got = jnp.concatenate(per, axis=0)               # (m, chunk_loc)
+        slots.append(got * (my_e[:, None] >= 0).astype(buf.dtype))
     elif impl == "dense":
         # FSDP baseline: everything everywhere (K == k_local + (E - k_local))
         allbuf = jax.lax.all_gather(buf, ep_axis, tiled=True)     # (rows, chunk_loc)
@@ -255,25 +319,104 @@ def _materialize(cfg: ModelConfig, buf, pa: PlanArrays, impl: str,
 
 
 # ---------------------------------------------------------------------------
+# Sort-based dispatch primitives (the hot path; see module docstring)
+# ---------------------------------------------------------------------------
+def segment_ranks(keys: jnp.ndarray) -> jnp.ndarray:
+    """rank[i] = |{j < i : keys[j] == keys[i]}| — O(N log N) / O(N) memory.
+
+    Replaces the one-hot + cumsum rank computation (an O(N·B) tensor for B
+    buckets): stable-argsort the keys, subtract a running maximum over
+    equal-key segment starts from iota, scatter back to flat order.
+    """
+    n = keys.shape[0]
+    iota = jnp.arange(n, dtype=jnp.int32)
+    order = jnp.argsort(keys, stable=True)
+    sk = jnp.take(keys, order)
+    is_start = jnp.concatenate([jnp.ones((1,), bool), sk[1:] != sk[:-1]])
+    seg_start = jax.lax.cummax(jnp.where(is_start, iota, 0))
+    return jnp.zeros((n,), jnp.int32).at[order].set(iota - seg_start)
+
+
+def replica_dispatch(e_safe: jnp.ndarray, valid: jnp.ndarray,
+                     expert_slot: jnp.ndarray, replicas: jnp.ndarray,
+                     n_replicas: jnp.ndarray, me, K: int, capacity,
+                     local_first: bool):
+    """Sort-based §4.4 dispatch: destinations, cell positions, keep mask and
+    per-cell group sizes from ONE stable argsort of the flat assignments.
+
+    The one-hot formulation this replaces materialized an O(N·E) rank
+    tensor plus an O(N·M·K) position tensor.  Here a single argsort yields
+    per-expert arrival ranks; positions need NO second sort because every
+    (device, slot) cell holds exactly one expert, and one expert's entries
+    land on a fixed destination in a strict cycle — every entry for a
+    local-first (or dense) cell, every ``n_rep``-th entry under
+    round-robin — so the in-cell arrival position is ``rank // cycle``,
+    with first-come-first-kept semantics identical to the cumsum.
+
+    e_safe: (N,) int32 expert per flat (token, k) entry (clamped >= 0).
+    valid: (N,) bool gate mask.  Invalid entries consume NO positions (the
+      rank sort shunts them to an overflow key), so the kept entries of
+      every cell occupy exactly the position prefix [0, counts) — the
+      invariant the group-size masking and the post-a2a compaction rely
+      on.  Over-capacity entries still follow first-come-first-kept.
+    expert_slot: (M, E); replicas: (E, r_max); n_replicas: (E,).
+    me: this device's EP index (traced).
+
+    Returns (dest, slot, pos, keep, counts) with counts (M, K) int32 —
+    KEPT entries per destination cell (= the grouped-GEMM group sizes,
+    emitted as a byproduct of the dispatch sort).
+    """
+    M = expert_slot.shape[0]
+    E = expert_slot.shape[1]
+    my_slot = jnp.take(expert_slot[me], e_safe)
+    rank = segment_ranks(jnp.where(valid, e_safe, E))
+    # clamp to the replica table width so the cycle invariant (each dest
+    # gets every cycle-th arrival) holds even for inconsistent inputs
+    n_rep = jnp.clip(jnp.take(n_replicas, e_safe), 1, replicas.shape[-1])
+    rr = (rank + me) % n_rep
+    dest_rr = replicas[e_safe, rr]
+    if local_first:
+        # paper §4.4: a local replica absorbs all local tokens.  Best for
+        # network volume; with static per-pair capacity the local cell must
+        # then be sized for the device's own hot load.
+        dest = jnp.where(my_slot >= 0, me, dest_rr)
+        cycle = jnp.where(my_slot >= 0, 1, n_rep)
+    else:
+        # round-robin over ALL replicas: spreads hot-expert tokens evenly
+        # across cells — the static-buffer-friendly adaptation
+        dest, cycle = dest_rr, n_rep
+    slot = expert_slot[dest, e_safe]
+    pos = rank // cycle
+    keep = valid & (pos < capacity) & (slot >= 0)
+    cell = jnp.where(keep, dest * K + slot, M * K)    # overflow bucket
+    counts = jnp.zeros((M * K + 1,), jnp.int32).at[cell].add(1)[:M * K]
+    return dest, slot, pos, keep, counts.reshape(M, K)
+
+
+# ---------------------------------------------------------------------------
 # Expert compute over K slots
 # ---------------------------------------------------------------------------
 def _expert_ffn(cfg: ModelConfig, chunks, xr, use_pallas: bool,
                 group_sizes=None):
-    """chunks: (K, chunk_len); xr: (K, T, D). Returns (K, T, D)."""
+    """chunks: (K, chunk_len); xr: (K, T, D). Returns (K, T, D).
+
+    group_sizes (K,) marks the valid-row PREFIX of each slot: the Pallas
+    kernel skips whole token tiles past the boundary (MegaBlocks-style);
+    the XLA path masks input AND output rows so both values and gradients
+    match the kernel's custom VJP exactly.
+    """
     wi, wg, wo = unpack_chunks(cfg, chunks)
     dt = xr.dtype
     if use_pallas:
         from repro.kernels import ops as kops
         return kops.grouped_mlp(xr, wi.astype(dt),
                                 None if wg is None else wg.astype(dt),
-                                wo.astype(dt), act=cfg.act)
-    h = jnp.einsum("ktd,kdf->ktf", xr, wi.astype(dt))
-    if wg is not None:
-        from repro.models.layers import glu_fn
-        h = glu_fn(cfg.act)(h) * jnp.einsum("ktd,kdf->ktf", xr, wg.astype(dt))
-    else:
-        h = jax.nn.gelu(h)
-    return jnp.einsum("ktf,kfd->ktd", h, wo.astype(dt))
+                                wo.astype(dt), group_sizes, act=cfg.act)
+    from repro.kernels.ref import grouped_mlp_ref
+    return grouped_mlp_ref(xr, wi.astype(dt),
+                           None if wg is None else wg.astype(dt),
+                           wo.astype(dt), act=cfg.act,
+                           group_sizes=group_sizes)
 
 
 # ---------------------------------------------------------------------------
@@ -281,88 +424,111 @@ def _expert_ffn(cfg: ModelConfig, chunks, xr, use_pallas: bool,
 # ---------------------------------------------------------------------------
 def _moe_body(cfg: ModelConfig, impl: str, ep_axis: str, fsdp_axes,
               m: int, capacity: int, use_pallas: bool, local_first: bool,
+              batch_coll: bool,
               x, valid, wr, buf, pa: PlanArrays):
     """x: (T_loc, D) local tokens; valid: (T_loc,) padding mask.
-    buf: (rows_local, chunk_loc).  Returns (y, counts, aux, z, dropped).
+    buf: (rows_local, chunk_loc).
+    Returns (y, counts, aux, z, dropped, dev_loads, pad_frac).
 
     The gate lives INSIDE the shard_map: top_k is row-local, so keeping it
     here avoids GSPMD's full (T, E) gather (seen in dry-run HLO: 268 MB per
     layer per device).  Global gate statistics come from one (E,) psum.
     """
     me = jax.lax.axis_index(ep_axis)
-    M = jax.lax.axis_size(ep_axis)
+    M = _axis_size(ep_axis)
     T, D = x.shape
     all_axes = tuple(fsdp_axes) + (ep_axis,)
-    idx, vals, counts, aux, z = gate(cfg, wr, x, valid,
-                                     psum_axes=all_axes)
-    k = idx.shape[1]
     K = pa.local_rows.shape[-1] + m if impl != "dense" \
         else pa.local_rows.shape[-1] + pa.extra_experts.shape[-1]
 
-    chunks = _materialize(cfg, buf, pa, impl, ep_axis, fsdp_axes, m)
+    # SparseAllGather FIRST (§4.2 overlap): the expert-chunk collectives
+    # (ring/a2a over the EP axis + the FSDP-axis all-gather) have no data
+    # dependence on the gate, so issuing them before the gate / dispatch
+    # arithmetic lets an async-collective scheduler hide their latency
+    # behind that compute — first use is in _expert_ffn, after dispatch.
+    chunks = _materialize(cfg, buf, pa, impl, ep_axis, fsdp_axes, m,
+                          batch=batch_coll)
     chunks = checkpoint_name(chunks, "moe_materialized")
+
+    idx, vals, counts, aux, z = gate(cfg, wr, x, valid,
+                                     psum_axes=all_axes)
+    k = idx.shape[1]
 
     # ---- dispatch plan (§4.4: local replica first, else round-robin) ----
     e_flat = idx.reshape(-1)                                   # (T*k,)
     w_flat = vals.reshape(-1)
-    valid = w_flat > 0
+    valid_w = w_flat > 0
     e_safe = jnp.maximum(e_flat, 0)
     tk = e_flat.shape[0]
-    my_slot = jnp.take(pa.expert_slot[me], e_safe)             # (T*k,)
-    if impl == "dense":
-        # every expert local: pure data parallelism for the MoE (FSDP)
-        dest = jnp.full((tk,), me, jnp.int32)
-        slot = my_slot
-    else:
-        n_rep = jnp.take(pa.n_replicas, e_safe)
-        # stable per-expert rank for round-robin across replicas
-        oh_e = jax.nn.one_hot(e_safe, cfg.moe.num_experts, dtype=jnp.int32)
-        rank = (jnp.cumsum(oh_e, axis=0) - oh_e)[jnp.arange(tk), e_safe]
-        rr = (rank + me) % jnp.maximum(n_rep, 1)
-        r_max = pa.replicas.shape[-1]
-        dest_rr = pa.replicas[e_safe, jnp.minimum(rr, r_max - 1)]
-        if local_first:
-            # paper §4.4: a local replica absorbs all local tokens.  Best
-            # for network volume; with static per-pair capacity the local
-            # cell must then be sized for the device's own hot load.
-            dest = jnp.where(my_slot >= 0, me, dest_rr)
-        else:
-            # round-robin over ALL replicas: spreads hot-expert tokens
-            # evenly across cells — the static-buffer-friendly adaptation
-            dest = dest_rr
-        slot = pa.expert_slot[dest, e_safe]
-    # position within (dest, slot) cell
     cap_eff = M * capacity if impl == "dense" else capacity
-    cell = dest * K + slot                                     # (T*k,)
-    oh_c = jax.nn.one_hot(cell, M * K, dtype=jnp.int32)
-    pos = (jnp.cumsum(oh_c, axis=0) - oh_c)[jnp.arange(tk), cell]
-    keep = valid & (pos < cap_eff) & (slot >= 0)
-    dropped = 1.0 - keep.sum() / jnp.maximum(valid.sum(), 1)
+    if impl == "dense":
+        # every expert local: pure data parallelism for the MoE (FSDP).
+        # Cells are slots; one expert per slot, so pos = per-expert rank
+        # (counting valid entries only — kept rows stay a cell prefix).
+        dest = jnp.full((tk,), me, jnp.int32)
+        slot = jnp.take(pa.expert_slot[me], e_safe)
+        pos = segment_ranks(jnp.where(valid_w, e_safe,
+                                      cfg.moe.num_experts))
+        keep = valid_w & (pos < cap_eff) & (slot >= 0)
+        cnt = jnp.zeros((K + 1,), jnp.int32).at[
+            jnp.where(keep, slot, K)].add(1)[:K]
+    else:
+        dest, slot, pos, keep, send_cnt = replica_dispatch(
+            e_safe, valid_w, pa.expert_slot, pa.replicas, pa.n_replicas,
+            me, K, cap_eff, local_first)
+    dropped = 1.0 - keep.sum() / jnp.maximum(valid_w.sum(), 1)
     pos_w = jnp.where(keep, pos, cap_eff)                      # OOB -> dropped
     xtok = x[jnp.arange(tk) // k]
 
     if impl == "dense":
-        # no token communication at all — local (K, M*C, D) compute buffer
+        # no token communication at all — local (K, M*C, D) compute buffer;
+        # positions are a per-slot valid prefix, so the kept counts are the
+        # group sizes directly
+        gs = cnt                                               # (K,)
         buf_x = jnp.zeros((K, cap_eff, D), x.dtype)
         buf_x = buf_x.at[slot, pos_w].set(xtok, mode="drop")
-        yr = _expert_ffn(cfg, chunks, buf_x, use_pallas)
+        yr = _expert_ffn(cfg, chunks, buf_x, use_pallas, group_sizes=gs)
         got = yr[slot, pos_w] * keep[:, None].astype(x.dtype)
+        dev_loads_l = jnp.zeros((M,), jnp.float32).at[me].set(
+            gs.sum().astype(jnp.float32))
+        rows_per_dev = K * cap_eff
     else:
         send = jnp.zeros((M, K, capacity, D), x.dtype)
         send = send.at[dest, slot, pos_w].set(xtok, mode="drop")
         recv = jax.lax.all_to_all(send, ep_axis, 0, 0, tiled=False)  # (M,K,C,D)
         xr = recv.transpose(1, 0, 2, 3).reshape(K, M * capacity, D)
-        yr = _expert_ffn(cfg, chunks, xr, use_pallas)
+        if use_pallas:
+            # group sizes ride a tiny (M, K) int all_to_all; a validity
+            # compaction packs each slot's real rows into one prefix so the
+            # grouped GEMM skips every tile past the boundary
+            recv_cnt = jax.lax.all_to_all(send_cnt, ep_axis, 0, 0,
+                                          tiled=False)         # (M, K)
+            gs = recv_cnt.sum(0)                               # (K,)
+            r_src = jnp.arange(M * capacity, dtype=jnp.int32) // capacity
+            r_off = jnp.arange(M * capacity, dtype=jnp.int32) % capacity
+            valid_row = r_off[None, :] < recv_cnt.T[:, r_src]  # (K, M*C)
+            perm = jnp.argsort(~valid_row, axis=1, stable=True)
+            # inverse permutation by linear scatter (no second sort)
+            inv = jnp.zeros_like(perm).at[
+                jnp.arange(K)[:, None], perm].set(
+                jnp.arange(M * capacity, dtype=perm.dtype)[None, :])
+            xr_c = jnp.take_along_axis(xr, perm[..., None], axis=1)
+            yr_c = _expert_ffn(cfg, chunks, xr_c, True, group_sizes=gs)
+            yr = jnp.take_along_axis(yr_c, inv[..., None], axis=1)
+        else:
+            yr = _expert_ffn(cfg, chunks, xr, False)
         yback = yr.reshape(K, M, capacity, D).transpose(1, 0, 2, 3)
         ret = jax.lax.all_to_all(yback, ep_axis, 0, 0, tiled=False)
         got = ret[dest, slot, pos_w] * keep[:, None].astype(x.dtype)
+        dev_loads_l = send_cnt.sum(1).astype(jnp.float32)
+        rows_per_dev = K * M * capacity
 
     y = (got.reshape(T, k, D)
          * vals.reshape(T, k, 1).astype(x.dtype)).sum(axis=1)
-    dev_loads = jax.lax.psum(
-        (jax.nn.one_hot(dest, M, dtype=jnp.float32)
-         * keep[:, None]).sum(0), all_axes)
-    return y, counts, aux, z, dropped, dev_loads
+    dev_loads = jax.lax.psum(dev_loads_l, all_axes)
+    n_dev = jax.lax.psum(1, all_axes)
+    pad_frac = 1.0 - dev_loads.sum() / float(rows_per_dev * n_dev)
+    return y, counts, aux, z, dropped, dev_loads, pad_frac
 
 
 # ---------------------------------------------------------------------------
@@ -381,6 +547,11 @@ class MoERuntime:
     r_max: int = 0
     use_pallas: bool = False
     local_first: bool = True                  # §4.4 dispatch rule
+    # batch the m materialization collectives into stacked ops.  None =
+    # auto: on for accelerators, off on the CPU backend, whose host
+    # collective emulation slows down sharply with message size (measured
+    # in benchmarks/dispatch_microbench.py; wire volume is identical)
+    batch_collectives: Optional[bool] = None
 
     @property
     def fsdp_axes(self):
@@ -418,7 +589,7 @@ def moe_layer(cfg: ModelConfig, rt: MoERuntime, x, wr, buf,
         idx, vals, counts, aux, z = gate(cfg, wr, x, valid)
         y, dropped = moe_layer_ref(cfg, x, idx, vals, buf, pa)
         return y, MoEAux(counts, aux, z, dropped,
-                         counts.sum()[None])
+                         counts.sum()[None], jnp.zeros(()))
 
     from jax.experimental.shard_map import shard_map
     ep = rt.ep_size()
@@ -429,18 +600,20 @@ def moe_layer(cfg: ModelConfig, rt: MoERuntime, x, wr, buf,
         pa.extra_experts.shape[-1] if rt.impl == "dense" else rt.m)
     cap = rt.capacity or auto_capacity(cfg, t_loc, ep, k_total)
 
+    batch_coll = rt.batch_collectives if rt.batch_collectives is not None \
+        else jax.default_backend() != "cpu"
     body = partial(_moe_body, cfg, rt.impl, rt.ep_axis, rt.fsdp_axes,
                    rt.m if rt.impl != "dense" else pa.extra_experts.shape[-1],
-                   cap, rt.use_pallas, rt.local_first)
+                   cap, rt.use_pallas, rt.local_first, batch_coll)
     pspecs = plan_arrays_specs(rt.mesh, rt.ep_axis)
-    y, counts, aux, z, dropped, dev_loads = shard_map(
+    y, counts, aux, z, dropped, dev_loads, pad_frac = shard_map(
         body, mesh=rt.mesh,
         in_specs=(P(all_axes, None), P(all_axes), P(),
                   P(rt.ep_axis, rt.fsdp_axes), pspecs),
-        out_specs=(P(all_axes, None), P(), P(), P(), P(), P()),
+        out_specs=(P(all_axes, None), P(), P(), P(), P(), P(), P()),
         check_rep=False,
     )(x, valid, wr, buf, pa)
-    return y, MoEAux(counts, aux, z, dropped, dev_loads)
+    return y, MoEAux(counts, aux, z, dropped, dev_loads, pad_frac)
 
 
 # ---------------------------------------------------------------------------
@@ -452,8 +625,7 @@ def moe_layer_ref(cfg: ModelConfig, x, idx, vals, buf, pa: PlanArrays):
     expert e's chunk sits at global row owner_dev*rows_per_dev... — for the
     single-device case rows are owner_row directly (M=1)."""
     e_count = cfg.moe.num_experts
-    rows = pa.owner_row if pa.owner_row.ndim == 1 else pa.owner_row
-    chunks = jnp.take(buf, rows, axis=0)               # (E, chunk_len)
+    chunks = jnp.take(buf, pa.owner_row, axis=0)       # (E, chunk_len)
     wi, wg, wo = unpack_chunks(cfg, chunks)
     dt = x.dtype
     h = jnp.einsum("td,edf->etf", x, wi.astype(dt))

@@ -8,7 +8,14 @@ MegaBlocks' block-sparse GEMM — no token dropping, no padded compute).
 
 Layout: grid (K, T/BT, F/BF), F innermost so the fused
 ``y += act(x@wi [* x@wg]) @ wo`` accumulates into a VMEM f32 scratch tile
-and writes once.  All tiles are (128×128)-aligned for the MXU.
+and writes once.  Tiles are (128×128)-aligned for the MXU; T and F are
+padded up to tile multiples (padded rows sit past every group boundary,
+so they cost no compute).
+
+The op carries a custom VJP: the forward is the Pallas kernel, and the
+backward masks both the saved input and the incoming cotangent at the
+group boundary, so padded rows contribute exactly zero to dx/dwi/dwg/dwo
+— matching ``repro.kernels.ref.grouped_mlp_ref`` under autodiff.
 """
 from __future__ import annotations
 
@@ -22,6 +29,12 @@ from jax.experimental.pallas import tpu as pltpu
 
 BT = 128   # token tile
 BF = 128   # ffn tile
+
+
+def act_fn(act: str):
+    """The kernel's activation — single source of truth shared by the
+    forward kernel, the custom VJP, and the jnp oracle in ref.py."""
+    return jax.nn.silu if act.startswith("silu") else jax.nn.gelu
 
 
 def _kernel(gs_ref, x_ref, wi_ref, wg_ref, wo_ref, y_ref, acc_ref,
@@ -42,8 +55,7 @@ def _kernel(gs_ref, x_ref, wi_ref, wg_ref, wo_ref, y_ref, acc_ref,
         h = jnp.dot(x, wi_ref[0], preferred_element_type=jnp.float32)
         if has_gate:
             g = jnp.dot(x, wg_ref[0], preferred_element_type=jnp.float32)
-            h = (jax.nn.silu(h) if act.startswith("silu")
-                 else jax.nn.gelu(h)) * g
+            h = act_fn(act)(h) * g
         else:
             h = jax.nn.gelu(h)
         acc_ref[...] += jnp.dot(h.astype(x.dtype), wo_ref[0],
@@ -56,26 +68,32 @@ def _kernel(gs_ref, x_ref, wi_ref, wg_ref, wo_ref, y_ref, acc_ref,
         y_ref[0] = jnp.where(mask, acc_ref[...], 0.0).astype(y_ref.dtype)
 
 
-def grouped_mlp(x, wi, wg, wo, group_sizes=None, *, act: str = "silu_glu",
-                interpret: bool = False):
-    """x: (K,T,D); wi/wg: (K,D,F); wo: (K,F,D); group_sizes: (K,) int32.
-
-    Returns (K,T,D).  Rows >= group_sizes[k] are zero.
-    """
+def _forward(x, wi, wg, wo, group_sizes, *, act: str, interpret: bool):
     k_, t_, d = x.shape
     f_ = wi.shape[-1]
     has_gate = wg is not None
-    if group_sizes is None:
-        group_sizes = jnp.full((k_,), t_, jnp.int32)
+    # Pad T and F up to tile multiples rather than shrinking tiles (group
+    # buffers are (M·capacity) rows — often odd/prime; a shrunken tile
+    # explodes the grid and loses MXU alignment).  Padded token rows sit
+    # past every group boundary so the kernel never computes them; padded
+    # F columns produce act(0)[*0] @ 0 = 0 and are sliced off below.
     bt = min(BT, t_)
     bf = min(BF, f_)
-    assert t_ % bt == 0 and f_ % bf == 0, (t_, f_)
+    tp = -(-t_ // bt) * bt
+    fp = -(-f_ // bf) * bf
+    if tp != t_:
+        x = jnp.pad(x, ((0, 0), (0, tp - t_), (0, 0)))
+    if fp != f_:
+        wi = jnp.pad(wi, ((0, 0), (0, 0), (0, fp - f_)))
+        if has_gate:
+            wg = jnp.pad(wg, ((0, 0), (0, 0), (0, fp - f_)))
+        wo = jnp.pad(wo, ((0, 0), (0, fp - f_), (0, 0)))
     if not has_gate:
         wg = wi                                      # placeholder operand
 
-    grid = (k_, t_ // bt, f_ // bf)
+    grid = (k_, tp // bt, fp // bf)
     kern = functools.partial(_kernel, act=act, has_gate=has_gate, bt=bt)
-    return pl.pallas_call(
+    out = pl.pallas_call(
         kern,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
@@ -89,6 +107,97 @@ def grouped_mlp(x, wi, wg, wo, group_sizes=None, *, act: str = "silu_glu",
             out_specs=pl.BlockSpec((1, bt, d), lambda k, t, f, gs: (k, t, 0)),
             scratch_shapes=[pltpu.VMEM((bt, d), jnp.float32)],
         ),
-        out_shape=jax.ShapeDtypeStruct((k_, t_, d), x.dtype),
+        out_shape=jax.ShapeDtypeStruct((k_, tp, d), x.dtype),
         interpret=interpret,
     )(group_sizes.astype(jnp.int32), x, wi, wg, wo)
+    return out[:, :t_] if tp != t_ else out
+
+
+def _bwd_math(x, wi, wg, wo, group_sizes, dy, act: str):
+    """Group-aware VJP: rows >= group_sizes[k] contribute exactly zero to
+    every gradient (the forward masks them), so both the input cotangent
+    and the incoming one are masked before the matmuls.  f32 accumulation
+    mirrors the kernel."""
+    t_ = x.shape[1]
+    mask = (jnp.arange(t_)[None, :] < group_sizes[:, None])[..., None]
+    xm = (x * mask.astype(x.dtype)).astype(jnp.float32)
+    g = (dy * mask.astype(dy.dtype)).astype(jnp.float32)
+    wi32, wo32 = wi.astype(jnp.float32), wo.astype(jnp.float32)
+    h1 = jnp.einsum("ktd,kdf->ktf", xm, wi32)
+    dh = jnp.einsum("ktd,kfd->ktf", g, wo32)
+    if wg is not None:
+        a, act_vjp = jax.vjp(act_fn(act), h1)
+        wg32 = wg.astype(jnp.float32)
+        h2 = jnp.einsum("ktd,kdf->ktf", xm, wg32)
+        h = a * h2
+        dh1 = act_vjp(dh * h2)[0]
+        dh2 = dh * a
+        dx = jnp.einsum("ktf,kdf->ktd", dh1, wi32) \
+            + jnp.einsum("ktf,kdf->ktd", dh2, wg32)
+        dwi = jnp.einsum("ktd,ktf->kdf", xm, dh1)
+        dwg = jnp.einsum("ktd,ktf->kdf", xm, dh2)
+    else:
+        h = jax.nn.gelu(h1)
+        dh1 = jax.vjp(jax.nn.gelu, h1)[1](dh)[0]
+        dx = jnp.einsum("ktf,kdf->ktd", dh1, wi32)
+        dwi = jnp.einsum("ktd,ktf->kdf", xm, dh1)
+        dwg = None
+    dwo = jnp.einsum("ktf,ktd->kfd", h, g)
+    dx = dx.astype(x.dtype)
+    dwi = dwi.astype(wi.dtype)
+    dwo = dwo.astype(wo.dtype)
+    if wg is not None:
+        return dx, dwi, dwg.astype(wg.dtype), dwo
+    return dx, dwi, dwo
+
+
+@functools.lru_cache(maxsize=None)
+def _make_grouped_mlp(act: str, has_gate: bool, interpret: bool):
+    """custom_vjp wrapper per static config: the Pallas kernel runs the
+    forward; the backward respects the same group boundaries."""
+    if has_gate:
+        @jax.custom_vjp
+        def f(x, wi, wg, wo, gs):
+            return _forward(x, wi, wg, wo, gs, act=act, interpret=interpret)
+
+        def f_fwd(x, wi, wg, wo, gs):
+            return (_forward(x, wi, wg, wo, gs, act=act, interpret=interpret),
+                    (x, wi, wg, wo, gs))
+
+        def f_bwd(res, dy):
+            x, wi, wg, wo, gs = res
+            dx, dwi, dwg, dwo = _bwd_math(x, wi, wg, wo, gs, dy, act)
+            return dx, dwi, dwg, dwo, None
+    else:
+        @jax.custom_vjp
+        def f(x, wi, wo, gs):
+            return _forward(x, wi, None, wo, gs, act=act, interpret=interpret)
+
+        def f_fwd(x, wi, wo, gs):
+            return (_forward(x, wi, None, wo, gs, act=act,
+                             interpret=interpret),
+                    (x, wi, wo, gs))
+
+        def f_bwd(res, dy):
+            x, wi, wo, gs = res
+            dx, dwi, dwo = _bwd_math(x, wi, None, wo, gs, dy, act)
+            return dx, dwi, dwo, None
+    f.defvjp(f_fwd, f_bwd)
+    return f
+
+
+def grouped_mlp(x, wi, wg, wo, group_sizes=None, *, act: str = "silu_glu",
+                interpret: bool = False):
+    """x: (K,T,D); wi/wg: (K,D,F); wo: (K,F,D); group_sizes: (K,) int32.
+
+    Returns (K,T,D).  Rows >= group_sizes[k] are zero — the kernel skips
+    those tiles entirely, and the custom VJP keeps them at exactly zero
+    gradient too.
+    """
+    k_, t_, _ = x.shape
+    if group_sizes is None:
+        group_sizes = jnp.full((k_,), t_, jnp.int32)
+    fn = _make_grouped_mlp(act, wg is not None, interpret)
+    if wg is not None:
+        return fn(x, wi, wg, wo, group_sizes)
+    return fn(x, wi, wo, group_sizes)

@@ -21,7 +21,13 @@ def _interpret() -> bool:
 
 @partial(jax.jit, static_argnames=("act",))
 def grouped_mlp(x, wi, wg, wo, group_sizes=None, *, act: str = "silu_glu"):
-    """Grouped expert FFN: x (K,T,D) -> (K,T,D), skipping padded tiles."""
+    """Grouped expert FFN: x (K,T,D) -> (K,T,D).
+
+    group_sizes (K,) int32 marks each slot's valid-row prefix (the real
+    tokens the MoE dispatch routed there): the kernel skips token tiles
+    past the boundary and the custom VJP zeroes their gradients, so padded
+    capacity costs neither forward nor backward FLOPs.  None = all rows.
+    """
     return _gm.grouped_mlp(x, wi, wg, wo, group_sizes, act=act,
                            interpret=_interpret())
 

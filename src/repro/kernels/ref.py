@@ -4,25 +4,34 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.grouped_mlp import act_fn
+
 
 def grouped_mlp_ref(x, wi, wg, wo, act: str = "silu_glu",
                     group_sizes=None):
     """x: (K, T, D); wi/wg: (K, D, F); wo: (K, F, D).
 
-    Per-slot FFN.  group_sizes (K,) optionally zeroes rows t >= size (the
-    padded tail of each expert group) — the kernel skips those tiles.
+    Per-slot FFN.  group_sizes (K,) zeroes rows t >= size (the padded tail
+    of each expert group) — the kernel skips those tiles.  The mask is
+    applied on BOTH sides (input and output) so autodiff through this
+    reference also respects the group boundary exactly: padded rows get
+    zero cotangent and contribute zero to every weight gradient, matching
+    the kernel's custom VJP.
     """
+    mask = None
+    if group_sizes is not None:
+        t = x.shape[1]
+        mask = (jnp.arange(t)[None, :] < group_sizes[:, None])[..., None]
+        x = x * mask.astype(x.dtype)
     h = jnp.einsum("ktd,kdf->ktf", x, wi)
     if wg is not None:
         g = jnp.einsum("ktd,kdf->ktf", x, wg)
-        h = (jax.nn.silu(h) if act.startswith("silu") else jax.nn.gelu(h)) * g
+        h = act_fn(act)(h) * g
     else:
         h = jax.nn.gelu(h)
     y = jnp.einsum("ktf,kfd->ktd", h, wo)
-    if group_sizes is not None:
-        t = x.shape[1]
-        mask = jnp.arange(t)[None, :] < group_sizes[:, None]
-        y = y * mask[..., None].astype(y.dtype)
+    if mask is not None:
+        y = y * mask.astype(y.dtype)
     return y
 
 

@@ -7,8 +7,7 @@ from __future__ import annotations
 
 from typing import Optional
 
-import jax
-
+from repro.common.compat import make_mesh
 from repro.common.config import MeshConfig
 
 
@@ -16,23 +15,16 @@ def make_production_mesh(*, multi_pod: bool = False):
     """16x16 single-pod (256 chips of v5e) or 2x16x16 two-pod (512 chips)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_mesh_from_config(mc: MeshConfig):
-    return jax.make_mesh(
-        mc.shape, mc.axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(mc.axes))
+    return make_mesh(mc.shape, mc.axes)
 
 
 def make_debug_mesh(data: int = 2, model: int = 4, pod: int = 0):
     """Small host-device mesh for tests (requires
     --xla_force_host_platform_device_count to already be set)."""
     if pod:
-        return jax.make_mesh(
-            (pod, data, model), ("pod", "data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 3)
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        return make_mesh((pod, data, model), ("pod", "data", "model"))
+    return make_mesh((data, model), ("data", "model"))

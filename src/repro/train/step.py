@@ -98,7 +98,10 @@ def loss_fn(cfg: ModelConfig, rt: mdl.Runtime, params, batch,
             aux_loss=aux_l, z_loss=z_l,
             expert_counts=jax.lax.stop_gradient(aux.counts),
             device_loads=jax.lax.stop_gradient(aux.device_loads),
-            dropped_frac=aux.dropped_frac.mean())
+            dropped_frac=aux.dropped_frac.mean(),
+            # fraction of expert-compute rows that are padding — the work
+            # the group-size-aware grouped GEMM skips (mean over layers)
+            pad_frac=jax.lax.stop_gradient(aux.pad_frac).mean())
     metrics["loss"] = loss
     return loss, metrics
 

@@ -190,6 +190,8 @@ def train_loop(cfg: ModelConfig, rt, tc: TrainConfig,
                "xent": float(metrics["xent"]), "time_s": dt}
         if "dropped_frac" in metrics:
             rec["dropped_frac"] = float(metrics["dropped_frac"])
+        if "pad_frac" in metrics:
+            rec["pad_frac"] = float(metrics["pad_frac"])
         if metric_logger is not None:
             rec.update(metric_logger.log(i, metrics))
         history.append(rec)

@@ -10,14 +10,24 @@ import sys
 
 import pytest
 
+# The distributed snippets are written against the newer mesh API
+# (jax.make_mesh(..., axis_types=(jax.sharding.AxisType.Auto, ...))).  On
+# JAX versions without AxisType this prelude installs a tolerant shim; on
+# newer JAX it is a no-op (see repro.common.compat).
+_COMPAT_PRELUDE = (
+    "from repro.common.compat import install_axis_type_shim\n"
+    "install_axis_type_shim()\n"
+)
+
 
 def run_distributed(script: str, n_devices: int = 8, timeout: int = 560):
     """Run a python snippet in a subprocess with n host devices."""
     env = dict(os.environ)
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
     env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
-    r = subprocess.run([sys.executable, "-c", script], env=env,
-                       capture_output=True, text=True, timeout=timeout)
+    r = subprocess.run([sys.executable, "-c", _COMPAT_PRELUDE + script],
+                       env=env, capture_output=True, text=True,
+                       timeout=timeout)
     if r.returncode != 0:
         raise AssertionError(
             f"distributed subprocess failed:\nSTDOUT:{r.stdout[-3000:]}\n"

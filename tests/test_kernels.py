@@ -49,6 +49,44 @@ def test_grouped_mlp_zero_group_is_skipped():
     assert np.abs(y[1, :100]).max() > 0
 
 
+@pytest.mark.parametrize("act", ["silu_glu", "gelu"])
+def test_grouped_mlp_ragged_grad_matches_ref(act):
+    """Forward AND gradient with ragged group_sizes vs the jnp oracle —
+    the custom VJP must zero every contribution past the group boundary."""
+    K, T, D, F = 3, 256, 128, 128
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.standard_normal((K, T, D)) * 0.3, jnp.float32)
+    wi = jnp.asarray(rng.standard_normal((K, D, F)) * 0.05, jnp.float32)
+    wg = jnp.asarray(rng.standard_normal((K, D, F)) * 0.05, jnp.float32) \
+        if act.endswith("_glu") else None
+    wo = jnp.asarray(rng.standard_normal((K, F, D)) * 0.05, jnp.float32)
+    gs = jnp.asarray([0, 100, 256], jnp.int32)
+
+    y_k = ops.grouped_mlp(x, wi, wg, wo, gs, act=act)
+    y_r = grouped_mlp_ref(x, wi, wg, wo, act=act, group_sizes=gs)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_r),
+                               atol=1e-5, rtol=1e-4)
+
+    def loss_kernel(a, b, c, d):
+        return jnp.sum(ops.grouped_mlp(a, b, c, d, gs, act=act) ** 2)
+
+    def loss_ref(a, b, c, d):
+        return jnp.sum(grouped_mlp_ref(a, b, c, d, act=act,
+                                       group_sizes=gs) ** 2)
+
+    argnums = (0, 1, 2, 3) if wg is not None else (0, 1, 3)
+    g_k = jax.grad(loss_kernel, argnums=argnums)(x, wi, wg, wo)
+    g_r = jax.grad(loss_ref, argnums=argnums)(x, wi, wg, wo)
+    for got, want in zip(g_k, g_r):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-5, rtol=1e-4)
+    # padded rows get exactly zero input gradient
+    dx = np.asarray(g_k[0])
+    assert (dx[0] == 0).all()
+    assert (dx[1, 100:] == 0).all()
+    assert np.abs(dx[1, :100]).max() > 0
+
+
 @pytest.mark.parametrize("B,S,NQ,NKV,H", [
     (1, 128, 4, 4, 64), (2, 256, 4, 2, 64), (1, 384, 8, 1, 128)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])

@@ -2,6 +2,7 @@
 placement invariants of §3.1 — hypothesis-driven."""
 import numpy as np
 import pytest
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.placement import (ep_materialization, homogeneous_sharding)
