@@ -18,7 +18,10 @@ Two measurements, results recorded to ``BENCH_dispatch.json``:
    — this table is what motivates the backend-dependent default.
 
 Run: ``PYTHONPATH=src python benchmarks/dispatch_microbench.py``
+Smoke (CI): ``... dispatch_microbench.py --smoke`` — reduced cases and
+reps, parity checks only, no JSON write and no speedup assertion.
 """
+import argparse
 import json
 import os
 import subprocess
@@ -31,9 +34,10 @@ OUT_PATH = os.path.join(HERE, "..", "BENCH_dispatch.json")
 # Part 1: dispatch bookkeeping, old vs new (runs on ONE device)
 # -------------------------------------------------------------------------
 DISPATCH_SCRIPT = r"""
-import json, time
+import json, os, time
 import numpy as np, jax, jax.numpy as jnp
 from repro.core.moe import replica_dispatch
+SMOKE = os.environ.get("DISPATCH_SMOKE") == "1"
 
 def onehot_dispatch(e_safe, valid, expert_slot, replicas, n_replicas, me,
                     K, capacity, n_experts):
@@ -108,6 +112,8 @@ CASES = [
     (8192, 2, 128, 16, 32),
     (16384, 2, 128, 16, 32),
 ]
+if SMOKE:
+    CASES = CASES[:2]
 rows = []
 for (T, k, E, M, K) in CASES:
     tk = T * k
@@ -130,8 +136,10 @@ for (T, k, E, M, K) in CASES:
     assert (keep == r_n[3]).all() and (r_o[4] == r_n[4]).all()
     assert (r_o[2][keep] == r_n[2][keep]).all()
     assert (r_o[5] == r_n[5]).all()
-    t_old = bench(f_old, *args)
-    t_new = bench(f_new, *args)
+    t_old = bench(f_old, *args, reps=2, iters=2) if SMOKE \
+        else bench(f_old, *args)
+    t_new = bench(f_new, *args, reps=2, iters=2) if SMOKE \
+        else bench(f_new, *args)
     rows.append({"T": T, "k": k, "E": E, "M": M, "K": K,
                  "capacity": cap, "onehot_ms": round(t_old, 4),
                  "sort_ms": round(t_new, 4),
@@ -143,11 +151,12 @@ print("RESULT " + json.dumps(rows))
 # Part 2: materialization collectives, sequential vs batched (8 devices)
 # -------------------------------------------------------------------------
 MATERIALIZE_SCRIPT = r"""
-import json, time
+import json, os, time
 import numpy as np, jax, jax.numpy as jnp
 from functools import partial
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P, NamedSharding
+SMOKE = os.environ.get("DISPATCH_SMOKE") == "1"
 
 M_DEV = 8
 mesh = jax.make_mesh((M_DEV,), ("model",))
@@ -193,7 +202,9 @@ def bench(fn, *args, reps=5, iters=5):
     return best * 1e3
 
 rows_out = []
-for (m, chunk) in [(4, 1 << 14), (4, 1 << 16), (6, 1 << 18)]:
+SIZES = [(2, 1 << 10)] if SMOKE else [(4, 1 << 14), (4, 1 << 16),
+                                      (6, 1 << 18)]
+for (m, chunk) in SIZES:
     buf = jax.device_put(
         jax.random.normal(jax.random.PRNGKey(0), (8 * M_DEV, chunk)),
         NamedSharding(mesh, P("model", None)))
@@ -217,10 +228,12 @@ print("RESULT " + json.dumps(rows_out))
 """
 
 
-def _run(script: str, n_devices: int) -> list:
+def _run(script: str, n_devices: int, smoke: bool = False) -> list:
     env = dict(os.environ)
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
     env["PYTHONPATH"] = os.path.join(HERE, "..", "src")
+    if smoke:
+        env["DISPATCH_SMOKE"] = "1"
     r = subprocess.run([sys.executable, "-c", script], env=env,
                        capture_output=True, text=True, timeout=560)
     if r.returncode != 0:
@@ -229,10 +242,12 @@ def _run(script: str, n_devices: int) -> list:
     return json.loads(line[len("RESULT "):])
 
 
-def run() -> dict:
+def run(smoke: bool = False) -> dict:
     res = {"backend": "cpu",
-           "dispatch": _run(DISPATCH_SCRIPT, 1),
-           "materialize": _run(MATERIALIZE_SCRIPT, 8)}
+           "dispatch": _run(DISPATCH_SCRIPT, 1, smoke),
+           "materialize": _run(MATERIALIZE_SCRIPT, 8, smoke)}
+    if smoke:
+        return res
     big = [r for r in res["dispatch"]
            if r["T"] * r["k"] >= 8192 and r["E"] >= 64
            and r["M"] * r["K"] >= 256]
@@ -246,6 +261,15 @@ def run() -> dict:
 
 
 if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced cases, parity only, no JSON write")
+    args = ap.parse_args()
+    if args.smoke:
+        out = run(smoke=True)
+        print(json.dumps(out, indent=2))
+        print("SMOKE PASSED")
+        sys.exit(0)
     out = run()
     with open(OUT_PATH, "w") as f:
         json.dump(out, f, indent=2)

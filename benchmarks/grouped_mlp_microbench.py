@@ -1,0 +1,228 @@
+"""Grouped expert FFN microbenchmark: Pallas fwd + bwd kernels vs the XLA
+reference, swept over padding fraction.
+
+What this measures (results to ``BENCH_grouped_mlp.json``):
+
+* **Tile skipping, forward AND backward.**  The kernels (fwd, dgrad,
+  wgrad in ``repro.kernels.grouped_mlp``) visit only token tiles with a
+  valid row; sweeping ``pad_frac`` 0 -> 0.9 at fixed shapes, the fraction
+  of tiles the backward computes (``active_tile_frac``, derived from the
+  kernels' own scalar-prefetch skip table) falls to 0.25 — the backward
+  is ~2x the forward FLOPs and was dense XLA einsums over the full
+  padded buffers before the dgrad/wgrad kernels landed.
+* **A measured wall-clock proxy for the skip** that is valid on CPU:
+  ``ref_active_fwdbwd_ms`` times the XLA reference over ONLY the active
+  rows (``active_tile_frac * T``) — i.e. the compute the kernel actually
+  performs — against ``ref_fwdbwd_ms`` on the full padded buffer (what
+  the pre-kernel backward paid).  Their ratio per pad_frac is the
+  padded-compute skip, measured.
+
+CAVEAT on the kernel's own wall-clock here: this container has no TPU,
+so the kernels run in Pallas **interpret mode**, which (a) adds
+per-grid-step dispatch overhead that makes the kernel slower than fused
+XLA in absolute terms, and (b) executes ``pl.when``-guarded tile bodies
+as *masked* compute (measured: group_sizes=0 runs as slow as
+group_sizes=T), so ``kernel_*_ms`` is flat across pad_frac BY
+CONSTRUCTION on CPU.  On a real TPU the guard is scalar predication and
+the kernel wall-clock follows ``active_tile_frac`` — re-run this same
+script there (the JSON records backend + mode).
+
+Shapes mirror ``configs/gpt_moe_s.py`` (d_model=768, d_ffn=2*d_model,
+gelu, slots_per_device=4) plus a smaller sweep shape, so later
+accelerator runs land on a comparable grid.
+
+Run: ``PYTHONPATH=src python benchmarks/grouped_mlp_microbench.py``
+Smoke (CI): ``... grouped_mlp_microbench.py --smoke`` — tiny shapes,
+correctness only (kernel vs oracle under jax.grad), no JSON write.
+"""
+import argparse
+import json
+import os
+import sys
+import time
+import zlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+sys.path.insert(0, os.path.join(HERE, "..", "src"))
+
+from repro.kernels import grouped_mlp as gm            # noqa: E402
+from repro.kernels.ref import grouped_mlp_ref          # noqa: E402
+
+OUT_PATH = os.path.join(HERE, "..", "BENCH_grouped_mlp.json")
+
+# (name, K, T, D, F, act) — gpt_moe_s: 4 slots/device, d_model=768,
+# d_ffn=1536, gelu experts; T=512 ≈ an M·capacity materialized group at
+# the paper's 8-device scale (T_loc=2048·B/M tokens, top-2, cf 1.25).
+SHAPES = [
+    ("sweep_small", 4, 512, 256, 512, "silu_glu"),
+    ("gpt_moe_s", 4, 512, 768, 1536, "gelu"),
+]
+PAD_FRACS = [0.0, 0.3, 0.5, 0.7, 0.9]
+
+
+def _bench(fn, *args, reps=3, iters=2):
+    out = fn(*args)
+    jax.block_until_ready(out)                  # compile + warm
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            out = fn(*args)
+        jax.block_until_ready(out)
+        best = min(best, (time.perf_counter() - t0) / iters)
+    return best * 1e3                           # ms
+
+
+def _make(rng, K, T, D, F, act, dtype=jnp.float32):
+    x = jnp.asarray(rng.standard_normal((K, T, D)) * 0.3, dtype)
+    wi = jnp.asarray(rng.standard_normal((K, D, F)) * 0.05, dtype)
+    wg = jnp.asarray(rng.standard_normal((K, D, F)) * 0.05, dtype) \
+        if act.endswith("_glu") else None
+    wo = jnp.asarray(rng.standard_normal((K, F, D)) * 0.05, dtype)
+    return x, wi, wg, wo
+
+
+def _fns(act, interpret=True):
+    """jitted (kernel_fwd, kernel_fwdbwd, ref_fwd, ref_fwdbwd).  gs is a
+    traced argument: ONE compile per shape serves the whole pad sweep
+    (the skip table has static shape, dynamic contents) — exactly how the
+    training step uses the kernel across steps with changing loads."""
+    def kf(x, wi, wg, wo, gs):
+        return gm.grouped_mlp(x, wi, wg, wo, gs, act=act,
+                              interpret=interpret)
+
+    def rf(x, wi, wg, wo, gs):
+        return grouped_mlp_ref(x, wi, wg, wo, act=act, group_sizes=gs)
+
+    def loss(f):
+        def g(x, wi, wg, wo, gs):
+            return jnp.sum(f(x, wi, wg, wo, gs).astype(jnp.float32) ** 2)
+        return g
+
+    k_fwd = jax.jit(kf)
+    r_fwd = jax.jit(rf)
+    k_fb = jax.jit(jax.value_and_grad(loss(kf), argnums=(0, 1, 3)))
+    r_fb = jax.jit(jax.value_and_grad(loss(rf), argnums=(0, 1, 3)))
+    return k_fwd, k_fb, r_fwd, r_fb
+
+
+def _active_tile_frac(gs, T):
+    """FLOP model: fraction of (BT-row) token tiles the kernels visit."""
+    bt = min(gm.BT, T)
+    nt = -(-T // bt)
+    active = sum(min(nt, -(-int(g) // bt)) for g in np.asarray(gs))
+    return active / (len(gs) * nt)
+
+
+def run(reps=2, iters=1):
+    rows = []
+    for name, K, T, D, F, act in SHAPES:
+        rng = np.random.default_rng(zlib.crc32(name.encode()))
+        x, wi, wg, wo = _make(rng, K, T, D, F, act)
+        k_fwd, k_fb, r_fwd, r_fb = _fns(act)
+        bt = min(gm.BT, T)
+        for pad in PAD_FRACS:
+            gs = jnp.full((K,), int(round(T * (1.0 - pad))), jnp.int32)
+            # parity first — a benchmark of wrong code is worthless
+            yk = np.asarray(k_fwd(x, wi, wg, wo, gs), np.float32)
+            yr = np.asarray(r_fwd(x, wi, wg, wo, gs), np.float32)
+            np.testing.assert_allclose(yk, yr, atol=1e-4, rtol=1e-3)
+            # interpret-mode kernel calls are expensive (seconds) and flat
+            # across pads on CPU — time them lightly; the cheap XLA refs
+            # carry the measured skip ratio, so time those carefully
+            t_kf = _bench(k_fwd, x, wi, wg, wo, gs, reps=reps, iters=iters)
+            t_kb = _bench(k_fb, x, wi, wg, wo, gs, reps=reps, iters=iters)
+            t_rb = _bench(r_fb, x, wi, wg, wo, gs, reps=5, iters=3)
+            # measured skip proxy: the XLA reference over ONLY the rows in
+            # active tiles — the compute the kernel's grid actually visits
+            # (valid on CPU, where interpret-mode pl.when masks instead of
+            # skipping; on TPU the kernel itself follows this curve)
+            frac = _active_tile_frac(gs, T)
+            t_act = max(bt, int(round(frac * T / bt)) * bt)
+            xa = x[:, :t_act]
+            gsa = jnp.minimum(gs, t_act)
+            t_ra = _bench(r_fb, xa, wi, wg, wo, gsa, reps=5, iters=3)
+            row = {
+                "shape": name, "K": K, "T": T, "D": D, "F": F, "act": act,
+                "pad_frac": pad,
+                "active_tile_frac": round(frac, 4),
+                "kernel_fwd_ms": round(t_kf, 3),
+                "kernel_fwdbwd_ms": round(t_kb, 3),
+                "ref_fwdbwd_ms": round(t_rb, 3),
+                "ref_active_fwdbwd_ms": round(t_ra, 3),
+                "measured_bwd_skip": round(t_rb / t_ra, 3),
+            }
+            rows.append(row)
+            print(f"{name} pad={pad:.1f} tiles={frac:.2f}"
+                  f" kfwd+bwd={t_kb:.1f}ms rfwd+bwd={t_rb:.1f}ms"
+                  f" r_active={t_ra:.1f}ms"
+                  f" skip={row['measured_bwd_skip']:.2f}x")
+    res = {
+        "backend": jax.default_backend(),
+        "mode": "pallas-interpret" if jax.default_backend() != "tpu"
+                else "pallas-compiled",
+        "tile": {"BT": gm.BT, "BF": gm.BF, "BD": gm.BD},
+        "pad_fracs": PAD_FRACS,
+        "rows": rows,
+        "note": ("active_tile_frac is the exact fwd+bwd FLOP fraction the "
+                 "kernels execute (from their own skip table); "
+                 "measured_bwd_skip = ref_fwdbwd_ms / ref_active_fwdbwd_ms "
+                 "is the padded-compute skip measured as XLA wall-clock on "
+                 "active rows vs the full padded buffer.  kernel_*_ms here "
+                 "is interpret mode, which executes pl.when-guarded tiles "
+                 "as MASKED compute (so it is flat across pad_frac on CPU "
+                 "by construction) and adds per-grid-step overhead — on a "
+                 "TPU the guard is real predication and kernel wall-clock "
+                 "follows active_tile_frac; re-run this script there."),
+    }
+    # the headline: backward padded compute skipped (FLOP + measured proxy)
+    for name, *_ in SHAPES:
+        hi = [r for r in rows if r["shape"] == name
+              and r["pad_frac"] == PAD_FRACS[-1]][0]
+        res[f"{name}_flop_skip_at_pad{PAD_FRACS[-1]}"] = round(
+            1.0 / hi["active_tile_frac"], 2)
+        res[f"{name}_measured_skip_at_pad{PAD_FRACS[-1]}"] = \
+            hi["measured_bwd_skip"]
+    return res
+
+
+def smoke():
+    """CI: tiny shapes, correctness only (fwd + grad vs the oracle)."""
+    for act in ("silu_glu", "gelu"):
+        rng = np.random.default_rng(0)
+        K, T, D, F = 2, 256, 64, 128
+        x, wi, wg, wo = _make(rng, K, T, D, F, act)
+        k_fwd, k_fb, r_fwd, r_fb = _fns(act)
+        for pad in (0.0, 0.5):
+            gs = jnp.full((K,), int(round(T * (1.0 - pad))), jnp.int32)
+            np.testing.assert_allclose(
+                np.asarray(k_fwd(x, wi, wg, wo, gs), np.float32),
+                np.asarray(r_fwd(x, wi, wg, wo, gs), np.float32),
+                atol=1e-4, rtol=1e-3)
+            _, gk = k_fb(x, wi, wg, wo, gs)
+            _, gr = r_fb(x, wi, wg, wo, gs)
+            for a, b in zip(gk, gr):
+                np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                           atol=1e-4, rtol=1e-3)
+            print(f"smoke {act} pad={pad}: fwd+grad parity OK")
+    print("SMOKE PASSED")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny correctness-only run, no JSON write")
+    args = ap.parse_args()
+    if args.smoke:
+        smoke()
+        sys.exit(0)
+    out = run()
+    with open(OUT_PATH, "w") as f:
+        json.dump(out, f, indent=2)
+        f.write("\n")
+    print(json.dumps({k: v for k, v in out.items() if k != "rows"},
+                     indent=2))

@@ -51,11 +51,33 @@ The compiled layer body is tuned around three costs (see
   collective emulation degrades with message size; same wire volume).
   Materialization is issued BEFORE the gate so its collectives overlap
   with gate + dispatch arithmetic (§4.2).
-* **Group-size-aware compute.**  The kept-token counts fall out of the
-  dispatch sort for free and ride a tiny (M, K) int all_to_all to the
-  receiving device; after a validity compaction the Pallas grouped GEMM
-  (``repro.kernels.grouped_mlp``) skips every token tile past each slot's
-  real group size instead of computing the full padded buffer.
+* **Validity-aware compute, forward AND backward, with no compaction
+  copies.**  The kept-token counts fall out of the dispatch sort for free
+  and ride a tiny (M, K) int all_to_all to the receiving device.  The
+  dispatch lands each source device's kept tokens in a valid *prefix* of
+  its capacity stripe, so per-row validity of the (K, M·C, D) compute
+  buffer is pure metadata: ``row_valid[k, r·C + i] = i < recv_cnt[r, k]``.
+  That mask goes straight into the Pallas grouped GEMM
+  (``repro.kernels.grouped_mlp``), whose forward, dgrad and wgrad kernels
+  all skip token tiles containing no valid row (a per-tile count table
+  rides the kernels' scalar-prefetch operand).  The previous formulation
+  compacted valid rows into one prefix with a ``take_along_axis`` gather
+  before the kernel and scattered back after it — two full (K, T, D)
+  copies per layer per direction (four counting AD transposes); both are
+  gone, and the backward is two Pallas kernels (dgrad + wgrad reducing
+  only valid token tiles into f32 VMEM accumulators) instead of dense XLA
+  einsums over the padded buffers — in training the backward is ~2x the
+  forward FLOPs, so this is where most of the padding skip pays off.
+
+Decode reuse
+------------
+``materialize_chunks`` runs step 1 alone for every MoE layer and returns
+the stacked compute-slot chunks; ``moe_layer(..., premat=...)`` then skips
+the SparseAllGather entirely.  Between decode steps the plan (and the
+buffer) is unchanged, so the serving engine materializes once per plan and
+reuses the slots every step — the double-buffering groundwork: a next-plan
+materialization can proceed in the background while decode steps consume
+the current slots.
 """
 from __future__ import annotations
 
@@ -397,13 +419,15 @@ def replica_dispatch(e_safe: jnp.ndarray, valid: jnp.ndarray,
 # Expert compute over K slots
 # ---------------------------------------------------------------------------
 def _expert_ffn(cfg: ModelConfig, chunks, xr, use_pallas: bool,
-                group_sizes=None):
+                group_sizes=None, row_valid=None):
     """chunks: (K, chunk_len); xr: (K, T, D). Returns (K, T, D).
 
-    group_sizes (K,) marks the valid-row PREFIX of each slot: the Pallas
-    kernel skips whole token tiles past the boundary (MegaBlocks-style);
-    the XLA path masks input AND output rows so both values and gradients
-    match the kernel's custom VJP exactly.
+    Validity is either group_sizes (K,) — the valid-row PREFIX of each
+    slot — or row_valid (K, T) bool for arbitrary rows (the fused dispatch
+    layout): the Pallas kernels skip whole token tiles with no valid row
+    (MegaBlocks-style), forward and backward; the XLA path masks input AND
+    output rows so both values and gradients match the kernels' custom
+    VJP exactly.
     """
     wi, wg, wo = unpack_chunks(cfg, chunks)
     dt = xr.dtype
@@ -411,12 +435,13 @@ def _expert_ffn(cfg: ModelConfig, chunks, xr, use_pallas: bool,
         from repro.kernels import ops as kops
         return kops.grouped_mlp(xr, wi.astype(dt),
                                 None if wg is None else wg.astype(dt),
-                                wo.astype(dt), group_sizes, act=cfg.act)
+                                wo.astype(dt), group_sizes, row_valid,
+                                act=cfg.act)
     from repro.kernels.ref import grouped_mlp_ref
     return grouped_mlp_ref(xr, wi.astype(dt),
                            None if wg is None else wg.astype(dt),
                            wo.astype(dt), act=cfg.act,
-                           group_sizes=group_sizes)
+                           group_sizes=group_sizes, row_valid=row_valid)
 
 
 # ---------------------------------------------------------------------------
@@ -425,7 +450,7 @@ def _expert_ffn(cfg: ModelConfig, chunks, xr, use_pallas: bool,
 def _moe_body(cfg: ModelConfig, impl: str, ep_axis: str, fsdp_axes,
               m: int, capacity: int, use_pallas: bool, local_first: bool,
               batch_coll: bool,
-              x, valid, wr, buf, pa: PlanArrays):
+              x, valid, wr, buf, pa: PlanArrays, premat=None):
     """x: (T_loc, D) local tokens; valid: (T_loc,) padding mask.
     buf: (rows_local, chunk_loc).
     Returns (y, counts, aux, z, dropped, dev_loads, pad_frac).
@@ -433,6 +458,10 @@ def _moe_body(cfg: ModelConfig, impl: str, ep_axis: str, fsdp_axes,
     The gate lives INSIDE the shard_map: top_k is row-local, so keeping it
     here avoids GSPMD's full (T, E) gather (seen in dry-run HLO: 268 MB per
     layer per device).  Global gate statistics come from one (E,) psum.
+
+    premat: optional (1, K, chunk_len) pre-materialized compute slots (the
+    decode path, plan unchanged between steps) — skips the SparseAllGather
+    collectives entirely.
     """
     me = jax.lax.axis_index(ep_axis)
     M = _axis_size(ep_axis)
@@ -446,8 +475,11 @@ def _moe_body(cfg: ModelConfig, impl: str, ep_axis: str, fsdp_axes,
     # dependence on the gate, so issuing them before the gate / dispatch
     # arithmetic lets an async-collective scheduler hide their latency
     # behind that compute — first use is in _expert_ffn, after dispatch.
-    chunks = _materialize(cfg, buf, pa, impl, ep_axis, fsdp_axes, m,
-                          batch=batch_coll)
+    if premat is not None:
+        chunks = premat[0]                           # (K, chunk_len)
+    else:
+        chunks = _materialize(cfg, buf, pa, impl, ep_axis, fsdp_axes, m,
+                              batch=batch_coll)
     chunks = checkpoint_name(chunks, "moe_materialized")
 
     idx, vals, counts, aux, z = gate(cfg, wr, x, valid,
@@ -498,23 +530,17 @@ def _moe_body(cfg: ModelConfig, impl: str, ep_axis: str, fsdp_axes,
         recv = jax.lax.all_to_all(send, ep_axis, 0, 0, tiled=False)  # (M,K,C,D)
         xr = recv.transpose(1, 0, 2, 3).reshape(K, M * capacity, D)
         if use_pallas:
-            # group sizes ride a tiny (M, K) int all_to_all; a validity
-            # compaction packs each slot's real rows into one prefix so the
-            # grouped GEMM skips every tile past the boundary
+            # per-row validity rides a tiny (M, K) int all_to_all; the
+            # dispatch lands kept tokens in a valid prefix of each source's
+            # capacity stripe, so validity is metadata — the kernels skip
+            # token tiles with no valid row directly in the uncompacted
+            # layout (no (K, T, D) gather/scatter compaction copies)
             recv_cnt = jax.lax.all_to_all(send_cnt, ep_axis, 0, 0,
                                           tiled=False)         # (M, K)
-            gs = recv_cnt.sum(0)                               # (K,)
             r_src = jnp.arange(M * capacity, dtype=jnp.int32) // capacity
             r_off = jnp.arange(M * capacity, dtype=jnp.int32) % capacity
             valid_row = r_off[None, :] < recv_cnt.T[:, r_src]  # (K, M*C)
-            perm = jnp.argsort(~valid_row, axis=1, stable=True)
-            # inverse permutation by linear scatter (no second sort)
-            inv = jnp.zeros_like(perm).at[
-                jnp.arange(K)[:, None], perm].set(
-                jnp.arange(M * capacity, dtype=perm.dtype)[None, :])
-            xr_c = jnp.take_along_axis(xr, perm[..., None], axis=1)
-            yr_c = _expert_ffn(cfg, chunks, xr_c, True, group_sizes=gs)
-            yr = jnp.take_along_axis(yr_c, inv[..., None], axis=1)
+            yr = _expert_ffn(cfg, chunks, xr, True, row_valid=valid_row)
         else:
             yr = _expert_ffn(cfg, chunks, xr, False)
         yback = yr.reshape(K, M, capacity, D).transpose(1, 0, 2, 3)
@@ -570,7 +596,7 @@ def auto_capacity(cfg: ModelConfig, t_loc: int, ep: int, k_total: int) -> int:
 
 
 def moe_layer(cfg: ModelConfig, rt: MoERuntime, x, wr, buf,
-              pa: PlanArrays, valid=None):
+              pa: PlanArrays, valid=None, premat=None):
     """Distributed FSSDP MoE layer.
 
     x: (T, D) tokens, globally sharded over (batch_axes..., ep_axis) on dim 0
@@ -578,6 +604,9 @@ def moe_layer(cfg: ModelConfig, rt: MoERuntime, x, wr, buf,
     wr: (D, E) router weights for THIS layer.
     buf: the global flat chunk buffer (rows, chunk_len).
     pa: this layer's PlanArrays slice (leading L dim removed).
+    premat: optional (M, K, chunk_len) pre-materialized compute slots from
+       ``materialize_chunks`` — skips this layer's SparseAllGather (decode
+       path: the plan and buffer are unchanged between steps).
     Returns (y: (T, D), MoEAux).
     """
     if valid is None:
@@ -606,14 +635,54 @@ def moe_layer(cfg: ModelConfig, rt: MoERuntime, x, wr, buf,
                    rt.m if rt.impl != "dense" else pa.extra_experts.shape[-1],
                    cap, rt.use_pallas, rt.local_first, batch_coll)
     pspecs = plan_arrays_specs(rt.mesh, rt.ep_axis)
+    in_specs = (P(all_axes, None), P(all_axes), P(),
+                P(rt.ep_axis, rt.fsdp_axes), pspecs)
+    args = (x, valid, wr, buf, pa)
+    if premat is not None:
+        in_specs += (P(rt.ep_axis, None, None),)
+        args += (premat.astype(x.dtype),)
     y, counts, aux, z, dropped, dev_loads, pad_frac = shard_map(
         body, mesh=rt.mesh,
-        in_specs=(P(all_axes, None), P(all_axes), P(),
-                  P(rt.ep_axis, rt.fsdp_axes), pspecs),
+        in_specs=in_specs,
         out_specs=(P(all_axes, None), P(), P(), P(), P(), P(), P()),
         check_rep=False,
-    )(x, valid, wr, buf, pa)
+    )(*args)
     return y, MoEAux(counts, aux, z, dropped, dev_loads, pad_frac)
+
+
+def materialize_chunks(cfg: ModelConfig, rt: MoERuntime, buf,
+                       pa: PlanArrays, dtype=None):
+    """Run SparseAllGather alone for every MoE layer: (L, M, K, chunk_len).
+
+    The decode path reuses these slots across steps while the plan (and
+    the parameter buffer) is unchanged — ``moe_layer(..., premat=out[l])``
+    then issues NO materialization collectives.  Also the double-buffering
+    hook: the next plan's slots can be built here while the compiled step
+    still consumes the current ones.  Returns None without a mesh (the
+    single-device oracle never materializes).
+    """
+    if rt.mesh is None:
+        return None
+    from jax.experimental.shard_map import shard_map
+    buf = buf.astype(dtype or jnp.dtype(cfg.dtype))
+    m = rt.m if rt.impl != "dense" else pa.extra_experts.shape[-1]
+    batch_coll = rt.batch_collectives if rt.batch_collectives is not None \
+        else jax.default_backend() != "cpu"
+
+    def body(buf_, pa_l):
+        ch = _materialize(cfg, buf_, pa_l, rt.impl, rt.ep_axis,
+                          rt.fsdp_axes, m, batch=batch_coll)
+        return ch[None]                              # (1, K, chunk_len)
+
+    fn = jax.jit(shard_map(
+        body, mesh=rt.mesh,
+        in_specs=(P(rt.ep_axis, rt.fsdp_axes),
+                  plan_arrays_specs(rt.mesh, rt.ep_axis)),
+        out_specs=P(rt.ep_axis, None, None),
+        check_rep=False))
+    layers = [fn(buf, jax.tree.map(lambda a, l=l: a[l], pa))
+              for l in range(pa.local_rows.shape[0])]
+    return jnp.stack(layers)
 
 
 # ---------------------------------------------------------------------------

@@ -111,6 +111,13 @@ def sparse_materialization(sharding: ShardingPlan, loads: np.ndarray,
             _alg1_a2a(sh, l, f, t, m_eff, q, extra, a2a_rows, present,
                       node_size)
 
+    if impl == "ring":
+        # dead-slot contract: a slot _alg1_ring could not fill keeps
+        # extra == -1 and its default send row 0 — _materialize masks the
+        # received chunk out via (extra_experts >= 0), so the only
+        # requirement on the dead send is that the row read is in range.
+        assert ((ring_rows >= 0) & (ring_rows < sh.rows_per_device)).all()
+
     plan = MaterializationPlan(
         sharding=sh, m=m_eff, impl=impl,
         local_rows=rows, local_experts=local_experts,
@@ -132,8 +139,12 @@ def _alg1_ring(sh: ShardingPlan, l: int, f: np.ndarray, m: int,
             src = (d + j + 1) % M
             cands = [e for e in owned_by[src] if e not in present[d]]
             if not cands:
-                # nothing new to replicate from src: resend hottest owned
-                # (harmless duplicate — slot marked unused)
+                # src owns nothing device d lacks: the slot stays EMPTY
+                # (extra == -1).  The static ring schedule still moves one
+                # chunk for it (ring_rows default row 0), and _materialize
+                # discards the payload via the (extra_experts >= 0) mask —
+                # sparse_materialization asserts the send row stays in
+                # range so that dead send is harmless.
                 continue
             e = max(cands, key=lambda e: f[e])
             extra[l, d, j] = e

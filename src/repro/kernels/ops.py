@@ -20,16 +20,21 @@ def _interpret() -> bool:
 
 
 @partial(jax.jit, static_argnames=("act",))
-def grouped_mlp(x, wi, wg, wo, group_sizes=None, *, act: str = "silu_glu"):
+def grouped_mlp(x, wi, wg, wo, group_sizes=None, row_valid=None, *,
+                act: str = "silu_glu"):
     """Grouped expert FFN: x (K,T,D) -> (K,T,D).
 
-    group_sizes (K,) int32 marks each slot's valid-row prefix (the real
-    tokens the MoE dispatch routed there): the kernel skips token tiles
-    past the boundary and the custom VJP zeroes their gradients, so padded
-    capacity costs neither forward nor backward FLOPs.  None = all rows.
+    Validity marks the real tokens the MoE dispatch routed to each slot —
+    either ``group_sizes`` (K,) int32 (valid-row prefix, the grouped-GEMM
+    contract) or ``row_valid`` (K,T) bool (arbitrary rows — the fused
+    dispatch layout, no compaction copy).  The kernels skip token tiles
+    with no valid row in the forward AND both backward passes (Pallas
+    dgrad/wgrad), and the custom VJP keeps invalid rows at exactly zero
+    gradient, so padded capacity costs neither forward nor backward FLOPs.
+    None = all rows valid.
     """
-    return _gm.grouped_mlp(x, wi, wg, wo, group_sizes, act=act,
-                           interpret=_interpret())
+    return _gm.grouped_mlp(x, wi, wg, wo, group_sizes, row_valid=row_valid,
+                           act=act, interpret=_interpret())
 
 
 @partial(jax.jit, static_argnames=("causal", "window"))

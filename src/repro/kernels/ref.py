@@ -8,18 +8,23 @@ from repro.kernels.grouped_mlp import act_fn
 
 
 def grouped_mlp_ref(x, wi, wg, wo, act: str = "silu_glu",
-                    group_sizes=None):
+                    group_sizes=None, row_valid=None):
     """x: (K, T, D); wi/wg: (K, D, F); wo: (K, F, D).
 
-    Per-slot FFN.  group_sizes (K,) zeroes rows t >= size (the padded tail
-    of each expert group) — the kernel skips those tiles.  The mask is
-    applied on BOTH sides (input and output) so autodiff through this
-    reference also respects the group boundary exactly: padded rows get
-    zero cotangent and contribute zero to every weight gradient, matching
-    the kernel's custom VJP.
+    Per-slot FFN.  Validity comes as ``group_sizes`` (K,) — rows
+    t >= size are the padded tail of each expert group — or as
+    ``row_valid`` (K, T) bool for arbitrary per-row validity (the fused
+    dispatch layout); the kernel skips token tiles with no valid row.
+    The mask is applied on BOTH sides (input and output) so autodiff
+    through this reference also respects validity exactly: invalid rows
+    get zero cotangent and contribute zero to every weight gradient,
+    matching the kernel's custom VJP.
     """
     mask = None
-    if group_sizes is not None:
+    if row_valid is not None:
+        mask = row_valid.astype(bool)[..., None]
+        x = x * mask.astype(x.dtype)
+    elif group_sizes is not None:
         t = x.shape[1]
         mask = (jnp.arange(t)[None, :] < group_sizes[:, None])[..., None]
         x = x * mask.astype(x.dtype)
@@ -28,7 +33,7 @@ def grouped_mlp_ref(x, wi, wg, wo, act: str = "silu_glu",
         g = jnp.einsum("ktd,kdf->ktf", x, wg)
         h = act_fn(act)(h) * g
     else:
-        h = jax.nn.gelu(h)
+        h = act_fn(act)(h)          # same source of truth as the kernels
     y = jnp.einsum("ktf,kfd->ktd", h, wo)
     if mask is not None:
         y = y * mask.astype(y.dtype)

@@ -141,7 +141,8 @@ def init_params(cfg: ModelConfig, key, ep: int = 1):
 # ---------------------------------------------------------------------------
 # MoE FFN wrapper: flatten tokens, pad to device count, run the FSSDP core
 # ---------------------------------------------------------------------------
-def _moe_ffn(cfg: ModelConfig, rt: Runtime, x, wr, buf, pa: PlanArrays):
+def _moe_ffn(cfg: ModelConfig, rt: Runtime, x, wr, buf, pa: PlanArrays,
+             premat=None):
     b, s, d = x.shape
     t = b * s
     n_dev = rt.num_devices
@@ -159,7 +160,8 @@ def _moe_ffn(cfg: ModelConfig, rt: Runtime, x, wr, buf, pa: PlanArrays):
         xt = jnp.concatenate([xt, jnp.zeros((pad, d), x.dtype)])
         valid = jnp.concatenate([valid, jnp.zeros((pad,), bool)])
     xt = rt.constrain(xt, ("tokens", None))
-    y, aux = moe_core.moe_layer(cfg, rt.moe, xt, wr, buf, pa, valid)
+    y, aux = moe_core.moe_layer(cfg, rt.moe, xt, wr, buf, pa, valid,
+                                premat=premat)
     y = rt.constrain(y, ("tokens", None))
     if pad:
         y = y[:t]
@@ -377,24 +379,36 @@ def cache_logical_axes(cfg: ModelConfig, batch: int, mesh_batch: int):
 
 
 def decode_step(cfg: ModelConfig, rt: Runtime, params, cache, tokens, pos,
-                pa: Optional[PlanArrays] = None):
+                pa: Optional[PlanArrays] = None, premat=None):
     """tokens: (B, 1) int32; pos: scalar — position being written.
-    Returns (logits: (B,1,V), new_cache)."""
+    premat: optional stacked (L_moe, M, K, chunk_len) pre-materialized
+    compute slots (``moe_core.materialize_chunks``) — each MoE layer then
+    skips its SparseAllGather (the plan/buffer are static across decode
+    steps).  Returns (logits: (B,1,V), new_cache)."""
     dt = jnp.dtype(cfg.dtype)
     x = ly.embed(params["embed"], tokens, dt) * math.sqrt(cfg.d_model)
     x = rt.constrain(x, ("batch", None, None))
 
     moe_xs = None
+    premat_r = None
     if cfg.moe.enabled:
         assert pa is not None
         routers_r, pa_r = _reshape_moe_xs(cfg, params["router"], pa)
         moe_xs = (routers_r, pa_r, params["moe_buffer"])
+        if premat is not None:
+            n_sb = cfg.num_superblocks
+            c = moe_core.num_moe_layers(cfg) // n_sb
+            premat_r = premat.reshape(n_sb, c, *premat.shape[1:])
 
     moe_pos = _moe_positions(cfg) if cfg.moe.enabled else ()
 
     def body(x, xs):
+        premat_c = None
         if moe_xs is not None:
-            params_sb, cache_sb, (routers_c, pa_c) = xs
+            if premat_r is not None:
+                params_sb, cache_sb, (routers_c, pa_c, premat_c) = xs
+            else:
+                params_sb, cache_sb, (routers_c, pa_c) = xs
         else:
             params_sb, cache_sb = xs
         new_cache = dict(cache_sb)
@@ -421,7 +435,9 @@ def decode_step(cfg: ModelConfig, rt: Runtime, params, cache, tokens, pos,
             if j in moe_pos:
                 h = ly.apply_norm(p["ln2"], x, cfg.norm)
                 pa_j = jax.tree.map(lambda a: a[mi], pa_c)
-                y, _ = _moe_ffn(cfg, rt, h, routers_c[mi], moe_xs[2], pa_j)
+                y, _ = _moe_ffn(cfg, rt, h, routers_c[mi], moe_xs[2], pa_j,
+                                premat=None if premat_c is None
+                                else premat_c[mi])
                 x = x + y
                 mi += 1
             elif kind != "mamba":
@@ -432,7 +448,8 @@ def decode_step(cfg: ModelConfig, rt: Runtime, params, cache, tokens, pos,
     xs = [params["blocks"],
           {k: v for k, v in cache.items() if k.startswith("l")}]
     if moe_xs is not None:
-        xs.append((moe_xs[0], moe_xs[1]))
+        xs.append((moe_xs[0], moe_xs[1]) if premat_r is None
+                  else (moe_xs[0], moe_xs[1], premat_r))
     if cfg.is_encoder_decoder:
         xs[1] = dict(xs[1], xk=cache["xk"], xv=cache["xv"])
     x, new_cache = _scan(rt, body, x, tuple(xs))

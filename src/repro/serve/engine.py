@@ -15,14 +15,20 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.common.config import ModelConfig
+from repro.core import moe as moe_core
 from repro.core.moe import PlanArrays
 from repro.models import model as mdl
 
 
 def build_serve_step(cfg: ModelConfig, rt: mdl.Runtime):
-    """fn(params, cache, tokens:(B,1), pos, pa) -> (logits:(B,1,V), cache)."""
-    def serve_step(params, cache, tokens, pos, pa: Optional[PlanArrays]):
-        return mdl.decode_step(cfg, rt, params, cache, tokens, pos, pa)
+    """fn(params, cache, tokens:(B,1), pos, pa[, premat]) ->
+    (logits:(B,1,V), cache).  ``premat`` carries pre-materialized MoE
+    compute slots (see ``Engine``) — with it the step issues NO
+    SparseAllGather collectives."""
+    def serve_step(params, cache, tokens, pos, pa: Optional[PlanArrays],
+                   premat=None):
+        return mdl.decode_step(cfg, rt, params, cache, tokens, pos, pa,
+                               premat=premat)
     return serve_step
 
 
@@ -47,13 +53,47 @@ def build_prefill_step(cfg: ModelConfig, rt: mdl.Runtime):
 
 
 class Engine:
-    """Minimal batched greedy/sampling decode engine for the examples."""
+    """Minimal batched greedy/sampling decode engine for the examples.
+
+    MoE decode reuse: the materialization plan (and the parameter buffer)
+    is constant across decode steps, so the SparseAllGather result is too.
+    The engine materializes every layer's compute slots ONCE per plan
+    (``moe_core.materialize_chunks``) and feeds them to every decode step,
+    which then issues no materialization collectives at all.  Calling
+    ``set_plan`` invalidates the cache (and is where a double-buffered
+    serving loop would build the next plan's slots in the background while
+    steps keep consuming the current ones).
+    """
 
     def __init__(self, cfg: ModelConfig, rt: mdl.Runtime, params,
                  max_len: int = 512, pa: Optional[PlanArrays] = None):
         self.cfg, self.rt, self.params, self.pa = cfg, rt, params, pa
         self.max_len = max_len
         self.step_fn = jax.jit(build_serve_step(cfg, rt))
+        self._premat = None
+        self._premat_fresh = False
+
+    def set_plan(self, pa: Optional[PlanArrays]) -> None:
+        """Swap the materialization plan; slots re-materialize lazily."""
+        self.pa = pa
+        self._premat, self._premat_fresh = None, False
+
+    def _materialized(self):
+        """The per-(plan, buffer) slot cache: (L_moe, M, K, chunk_len) or
+        None.  Re-materializes if ``self.params`` was swapped (the cache
+        holds the buffer identity it was built from)."""
+        buf = self.params.get("moe_buffer") if self.cfg.moe.enabled else None
+        if self._premat_fresh and getattr(self, "_premat_src", None) is not buf:
+            self._premat_fresh = False
+        if not self._premat_fresh:
+            self._premat = None
+            if (buf is not None and self.pa is not None
+                    and self.rt.moe.mesh is not None):
+                self._premat = moe_core.materialize_chunks(
+                    self.cfg, self.rt.moe, buf, self.pa)
+            self._premat_src = buf
+            self._premat_fresh = True
+        return self._premat
 
     def generate(self, prompts: np.ndarray, steps: int,
                  temperature: float = 0.0, seed: int = 0,
@@ -73,16 +113,16 @@ class Engine:
         toks = jnp.asarray(prompts, jnp.int32)
         out = [toks]
         logits = None
+        premat = self._materialized()            # one spAG per plan, reused
         for i in range(p):                       # loop prefill
             logits, cache = self.step_fn(self.params, cache, toks[:, i:i + 1],
-                                         jnp.int32(i), self.pa)
-        cur = None
+                                         jnp.int32(i), self.pa, premat)
         for s in range(steps):
             key, sub = jax.random.split(key)
             nxt = _sample(logits[:, -1], temperature, sub)[:, None]
             out.append(nxt)
             logits, cache = self.step_fn(self.params, cache, nxt,
-                                         jnp.int32(p + s), self.pa)
+                                         jnp.int32(p + s), self.pa, premat)
         return np.asarray(jnp.concatenate(out, axis=1))
 
 

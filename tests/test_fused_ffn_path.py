@@ -1,0 +1,220 @@
+"""The fused dispatch→FFN data flow and decode slot reuse.
+
+1. With the Pallas path enabled, the compiled layer must contain NO
+   standalone (K, M·C, D) gather/scatter pair around the expert FFN —
+   validity is metadata (tile-skip tables in the kernels), not a
+   materialized compaction permutation.  Verified by walking the jaxpr of
+   the forward AND the gradient.
+2. ``materialize_chunks`` + ``moe_layer(premat=...)`` must reproduce the
+   normal layer exactly while issuing ZERO materialization collectives
+   (the decode-step reuse path) — verified by jaxpr collective counts.
+"""
+
+# shared by both subprocess scripts: recursive jaxpr walk collecting eqns
+# of the given primitives (descends into scan/remat/custom_vjp/pallas
+# sub-jaxprs via eqn params)
+WALK_PRELUDE = r"""
+import jax
+
+
+def walk(jaxpr, found, prims):
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name in prims:
+            found.append(eqn)
+        for v in eqn.params.values():
+            for j in jax.tree.leaves(v, is_leaf=lambda l: hasattr(l, "eqns")):
+                if hasattr(j, "eqns"):
+                    walk(j, found, prims)
+                elif hasattr(j, "jaxpr"):
+                    walk(j.jaxpr, found, prims)
+
+
+def find(fn, *args, prims):
+    cj = jax.make_jaxpr(fn)(*args)
+    found = []
+    walk(cj.jaxpr, found, prims)
+    return found
+"""
+
+SCRIPT = WALK_PRELUDE + r"""
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P, NamedSharding
+from repro.common.config import ModelConfig, MoEConfig
+from repro.core.placement import homogeneous_sharding
+from repro.core.schedule import sparse_materialization
+from repro.core import moe as M
+from repro.core.moe import PlanArrays
+
+cfg = ModelConfig(name="tiny", arch_type="moe", num_layers=1, d_model=16,
+                  num_heads=4, num_kv_heads=2, d_ff=32, vocab_size=128,
+                  moe=MoEConfig(num_experts=8, experts_per_token=2, d_ff=24),
+                  dtype="float32")
+EP = 4
+CAP = 64
+mesh = jax.make_mesh((2, EP), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+L = M.num_moe_layers(cfg)
+sh = homogeneous_sharding(L, 8, EP)
+loads = np.arange(8)[::-1].astype(float)[None, :]
+plan = sparse_materialization(sh, loads, t=8, m=2, impl="ring")
+pa = M.plan_to_arrays(plan)
+pa_l = PlanArrays(**jax.tree.map(lambda a: a[0], pa._asdict()))
+K = pa.local_rows.shape[-1] + plan.m
+
+key = jax.random.PRNGKey(0)
+kb, kw, kx = jax.random.split(key, 3)
+buf = jax.random.normal(kb, (M.buffer_rows(cfg, EP), M.chunk_len(cfg))) * 0.05
+wr = jax.random.normal(kw, (cfg.d_model, 8)) * 0.5
+x = jax.random.normal(kx, (64, cfg.d_model))
+rt = M.MoERuntime(mesh=mesh, batch_axes=("data",), impl=plan.impl,
+                  m=plan.m, capacity=CAP, use_pallas=True)
+xs = jax.device_put(x, NamedSharding(mesh, P(("data", "model"), None)))
+bufs = jax.device_put(buf, NamedSharding(mesh, P("model", "data")))
+
+
+# ---- 1. no (K, M*C, D) gather/scatter around the expert FFN ----
+bad_shape = (K, EP * CAP, cfg.d_model)
+fwd = lambda xx, bb: M.moe_layer(cfg, rt, xx, wr, bb, pa_l)[0]
+grad = jax.grad(lambda bb: jnp.sum(fwd(xs, bb) ** 2))
+for tag, fn, args in [("fwd", fwd, (xs, bufs)), ("grad", grad, (bufs,))]:
+    eqns = find(fn, *args, prims={"gather", "scatter", "scatter-add"})
+    bad = [e for e in eqns
+           if tuple(e.outvars[0].aval.shape) == bad_shape
+           and tuple(e.invars[0].aval.shape) == bad_shape]
+    assert not bad, (tag, [str(b) for b in bad][:2])
+    print(f"{tag}: {len(eqns)} gather/scatter eqns, none (K, M*C, D)")
+
+# the Pallas kernels must actually be on this path (fwd + dgrad + wgrad)
+n_pallas = len(find(grad, bufs, prims={"pallas_call"}))
+assert n_pallas >= 3, n_pallas
+print("pallas_call count in grad:", n_pallas)
+
+# ---- 2. premat: identical outputs, zero materialization collectives ----
+premat = M.materialize_chunks(cfg, rt, bufs, pa)         # (L, M, K, chunk)
+assert premat.shape == (L, EP, K, M.chunk_len(cfg)), premat.shape
+y0, aux0 = jax.jit(lambda xx, bb: M.moe_layer(cfg, rt, xx, wr, bb, pa_l)
+                   )(xs, bufs)
+y1, aux1 = jax.jit(lambda xx, bb, pm: M.moe_layer(cfg, rt, xx, wr, bb, pa_l,
+                                                  premat=pm)
+                   )(xs, bufs, premat[0])
+err = float(jnp.abs(y1 - y0).max())
+assert err < 1e-5, err
+COLL = {"ppermute", "all_gather"}
+n_with = len(find(lambda xx, bb, pm: M.moe_layer(
+    cfg, rt, xx, wr, bb, pa_l, premat=pm)[0], xs, bufs, premat[0],
+    prims=COLL))
+n_without = len(find(lambda xx, bb: M.moe_layer(
+    cfg, rt, xx, wr, bb, pa_l)[0], xs, bufs, prims=COLL))
+assert n_with == 0, n_with            # premat: NO spAG ppermutes/gathers
+assert n_without >= plan.m            # normal path has the ring permutes
+print(f"premat parity {err:.1e}; collectives with/without: "
+      f"{n_with}/{n_without}")
+print("FUSED PATH OK")
+"""
+
+
+def test_fused_ffn_no_compaction_copies_and_premat_reuse(dist):
+    out = dist(SCRIPT, n_devices=8)
+    assert "FUSED PATH OK" in out
+
+
+TRAIN_SCRIPT = WALK_PRELUDE + r"""
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P, NamedSharding
+from repro.configs.gpt_moe_s import smoke
+from repro.core.placement import homogeneous_sharding
+from repro.core.schedule import sparse_materialization
+from repro.core import moe as moe_core
+from repro.models import model as mdl
+
+cfg = smoke()
+EP = 4
+mesh = jax.make_mesh((2, EP), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+L = moe_core.num_moe_layers(cfg)
+E = cfg.moe.num_experts
+sh = homogeneous_sharding(L, E, EP)
+plan = sparse_materialization(sh, np.ones((L, E)), t=4, m=1, impl="ring")
+pa = moe_core.plan_to_arrays(plan)
+rt = mdl.Runtime(mesh=mesh, moe=moe_core.MoERuntime(
+    mesh=mesh, batch_axes=("data",), impl="ring", m=1, capacity=16,
+    use_pallas=True))
+params = mdl.init_params(cfg, jax.random.PRNGKey(0), ep=EP)
+toks = jnp.zeros((8, 16), jnp.int32)
+
+
+def loss(buf):
+    p = dict(params, moe_buffer=buf)
+    logits, _ = mdl.forward(cfg, rt, p, toks, pa=pa)
+    return jnp.sum(logits.astype(jnp.float32) ** 2)
+
+
+found = find(jax.grad(loss), params["moe_buffer"],
+             prims={"gather", "scatter", "scatter-add", "pallas_call"})
+gs_eqns = [e for e in found if e.primitive.name != "pallas_call"]
+# the compaction signature: a same-shape rank-3 permutation gather/scatter
+# over the (K, M*C, d_model) compute buffer — must NOT exist anywhere in
+# the compiled train step (fwd or bwd)
+bad = [e for e in gs_eqns
+       if len(e.outvars[0].aval.shape) == 3
+       and tuple(e.invars[0].aval.shape) == tuple(e.outvars[0].aval.shape)
+       and e.outvars[0].aval.shape[-1] == cfg.d_model]
+assert not bad, [str(b)[:200] for b in bad][:2]
+n_pallas = sum(e.primitive.name == "pallas_call" for e in found)
+assert n_pallas >= 3, n_pallas        # fwd + dgrad + wgrad on the path
+print(f"train step: {len(gs_eqns)} gather/scatter eqns, none are "
+      f"(K, T, D) compaction copies; {n_pallas} pallas_calls")
+print("TRAIN STEP CLEAN")
+"""
+
+
+def test_gpt_moe_s_train_step_has_no_compaction_copies(dist):
+    """Acceptance: the compiled gpt_moe_s train step contains no standalone
+    (K, T, D) gather/scatter pair around the expert FFN."""
+    out = dist(TRAIN_SCRIPT, n_devices=8)
+    assert "TRAIN STEP CLEAN" in out
+
+
+ENGINE_SCRIPT = r"""
+import numpy as np, jax
+from repro.configs.gpt_moe_s import smoke
+from repro.core.placement import homogeneous_sharding
+from repro.core.schedule import sparse_materialization
+from repro.core import moe as moe_core
+from repro.models import model as mdl
+from repro.serve.engine import Engine
+
+cfg = smoke()
+EP = 4
+mesh = jax.make_mesh((2, EP), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+L = moe_core.num_moe_layers(cfg)
+E = cfg.moe.num_experts
+sh = homogeneous_sharding(L, E, EP)
+plan = sparse_materialization(sh, np.ones((L, E)), t=4, m=1, impl="ring")
+pa = moe_core.plan_to_arrays(plan)
+rt = mdl.Runtime(mesh=mesh, moe=moe_core.MoERuntime(
+    mesh=mesh, batch_axes=("data",), impl="ring", m=1, capacity=16,
+    use_pallas=True))
+params = mdl.init_params(cfg, jax.random.PRNGKey(0), ep=EP)
+prompts = np.asarray([[5, 7, 9], [1, 2, 3]], np.int32)
+
+eng = Engine(cfg, rt, params, max_len=32, pa=pa)
+out = eng.generate(prompts, steps=4)
+assert eng._premat is not None and eng._premat.shape[0] == L
+eng2 = Engine(cfg, rt, params, max_len=32, pa=pa)
+eng2._premat, eng2._premat_fresh = None, True    # force per-step spAG
+out2 = eng2.generate(prompts, steps=4)
+assert (out == out2).all(), (out, out2)
+eng.set_plan(pa)                                  # invalidates the cache
+assert not eng._premat_fresh
+print("ENGINE PREMAT OK")
+"""
+
+
+def test_engine_decode_reuses_materialized_slots(dist):
+    """Engine decode with cached compute slots must generate exactly the
+    same tokens as per-step materialization, and set_plan must invalidate
+    the cache."""
+    out = dist(ENGINE_SCRIPT, n_devices=8)
+    assert "ENGINE PREMAT OK" in out

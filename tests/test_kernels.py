@@ -87,6 +87,124 @@ def test_grouped_mlp_ragged_grad_matches_ref(act):
     assert np.abs(dx[1, :100]).max() > 0
 
 
+def _grad_parity(x, wi, wg, wo, act, atol, rtol, group_sizes=None,
+                 row_valid=None):
+    """jax.grad through the Pallas kernels (interpret) vs the jnp oracle,
+    f32 tolerances supplied by the caller."""
+    kw = dict(group_sizes=group_sizes, row_valid=row_valid)
+
+    def loss_kernel(*a):
+        args = (a[0], a[1], a[2], a[3]) if wg is not None \
+            else (a[0], a[1], None, a[2])
+        return jnp.sum(ops.grouped_mlp(*args, group_sizes, row_valid,
+                                       act=act).astype(jnp.float32) ** 2)
+
+    def loss_ref(*a):
+        args = (a[0], a[1], a[2], a[3]) if wg is not None \
+            else (a[0], a[1], None, a[2])
+        return jnp.sum(grouped_mlp_ref(*args, act=act,
+                                       **kw).astype(jnp.float32) ** 2)
+
+    args = (x, wi, wg, wo) if wg is not None else (x, wi, wo)
+    nums = tuple(range(len(args)))
+    g_k = jax.grad(loss_kernel, argnums=nums)(*args)
+    g_r = jax.grad(loss_ref, argnums=nums)(*args)
+    for got, want in zip(g_k, g_r):
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32),
+                                   atol=atol, rtol=rtol)
+
+
+@pytest.mark.parametrize("act", ["silu_glu", "gelu"])
+@pytest.mark.parametrize("case", ["zero_groups", "all_full", "odd_shapes"])
+def test_backward_adversarial_shapes(act, case):
+    """Pallas dgrad/wgrad vs the oracle on the shapes most likely to break
+    tile skipping: every group empty, every group full, and
+    non-tile-multiple T/F (partial tiles on both grid axes)."""
+    import zlib
+    K, T, D, F = 3, 96 if case == "odd_shapes" else 256, 64, \
+        200 if case == "odd_shapes" else 128
+    rng = np.random.default_rng(zlib.crc32(f"{act}/{case}".encode()))
+    x = jnp.asarray(rng.standard_normal((K, T, D)) * 0.3, jnp.float32)
+    wi = jnp.asarray(rng.standard_normal((K, D, F)) * 0.05, jnp.float32)
+    wg = jnp.asarray(rng.standard_normal((K, D, F)) * 0.05, jnp.float32) \
+        if act.endswith("_glu") else None
+    wo = jnp.asarray(rng.standard_normal((K, F, D)) * 0.05, jnp.float32)
+    gs = {"zero_groups": jnp.zeros((K,), jnp.int32),
+          "all_full": jnp.full((K,), T, jnp.int32),
+          "odd_shapes": jnp.asarray([0, 37, T], jnp.int32)}[case]
+    y = ops.grouped_mlp(x, wi, wg, wo, gs, act=act)
+    yr = grouped_mlp_ref(x, wi, wg, wo, act=act, group_sizes=gs)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               atol=1e-5, rtol=1e-4)
+    _grad_parity(x, wi, wg, wo, act, 1e-4, 1e-4, group_sizes=gs)
+    if case == "zero_groups":
+        g = jax.grad(lambda a: jnp.sum(
+            ops.grouped_mlp(a, wi, wg, wo, gs, act=act) ** 2))(x)
+        assert (np.asarray(g) == 0).all()     # every tile skipped -> zero
+
+
+@pytest.mark.parametrize("act", ["silu_glu", "gelu"])
+def test_backward_row_valid_scattered(act):
+    """The fused-dispatch layout: arbitrary scattered row validity (valid
+    segments from several source devices, no compaction) — forward and
+    gradients must match the oracle, invalid rows get exactly zero dx."""
+    K, T, D, F = 2, 384, 64, 128
+    rng = np.random.default_rng(11)
+    x = jnp.asarray(rng.standard_normal((K, T, D)) * 0.3, jnp.float32)
+    wi = jnp.asarray(rng.standard_normal((K, D, F)) * 0.05, jnp.float32)
+    wg = jnp.asarray(rng.standard_normal((K, D, F)) * 0.05, jnp.float32) \
+        if act.endswith("_glu") else None
+    wo = jnp.asarray(rng.standard_normal((K, F, D)) * 0.05, jnp.float32)
+    # segment-prefix validity as produced by dispatch (M=3 stripes of 128),
+    # including one all-invalid stripe and one all-invalid 128-row tile
+    cnt = np.asarray([[128, 0, 60], [0, 5, 128]])          # (K, M)
+    rv = np.zeros((K, T), bool)
+    for k in range(K):
+        for r in range(3):
+            rv[k, r * 128:r * 128 + cnt[k, r]] = True
+    rv = jnp.asarray(rv)
+    y = ops.grouped_mlp(x, wi, wg, wo, None, rv, act=act)
+    yr = grouped_mlp_ref(x, wi, wg, wo, act=act, row_valid=rv)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               atol=1e-5, rtol=1e-4)
+    _grad_parity(x, wi, wg, wo, act, 1e-4, 1e-4, row_valid=rv)
+    g = jax.grad(lambda a: jnp.sum(
+        ops.grouped_mlp(a, wi, wg, wo, None, rv, act=act) ** 2))(x)
+    assert (np.asarray(g)[~np.asarray(rv)] == 0).all()
+
+
+def test_backward_bf16_params_f32_accum():
+    """bf16 operands, f32 accumulation: gradients stay close to the f32
+    oracle (the kernels must not accumulate in bf16)."""
+    K, T, D, F = 2, 256, 128, 128
+    rng = np.random.default_rng(5)
+    x32 = rng.standard_normal((K, T, D)).astype(np.float32) * 0.3
+    wi32 = rng.standard_normal((K, D, F)).astype(np.float32) * 0.05
+    wg32 = rng.standard_normal((K, D, F)).astype(np.float32) * 0.05
+    wo32 = rng.standard_normal((K, F, D)).astype(np.float32) * 0.05
+    gs = jnp.asarray([100, 256], jnp.int32)
+    x, wi, wg, wo = (jnp.asarray(a, jnp.bfloat16)
+                     for a in (x32, wi32, wg32, wo32))
+
+    def loss(fn, *a):
+        return jnp.sum(fn(*a).astype(jnp.float32) ** 2)
+
+    g_k = jax.grad(lambda *a: loss(
+        lambda *b: ops.grouped_mlp(*b, gs, act="silu_glu"), *a),
+        argnums=(0, 1, 2, 3))(x, wi, wg, wo)
+    g_r = jax.grad(lambda *a: loss(
+        lambda *b: grouped_mlp_ref(*b, act="silu_glu", group_sizes=gs), *a),
+        argnums=(0, 1, 2, 3))(*(jnp.asarray(a) for a in
+                                (x32, wi32, wg32, wo32)))
+    for got, want in zip(g_k, g_r):
+        assert got.dtype == jnp.bfloat16
+        scale = max(float(np.abs(np.asarray(want, np.float32)).max()), 1e-6)
+        err = np.abs(np.asarray(got, np.float32)
+                     - np.asarray(want, np.float32)).max() / scale
+        assert err < 4e-2, err      # bf16 rounding only, not accumulation
+
+
 @pytest.mark.parametrize("B,S,NQ,NKV,H", [
     (1, 128, 4, 4, 64), (2, 256, 4, 2, 64), (1, 384, 8, 1, 128)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
