@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import Optional, Sequence, Tuple
+from typing import Optional, Sequence, Tuple, Union
 
 
 @dataclass(frozen=True)
@@ -32,8 +32,49 @@ class MoEConfig:
     a2a_rounds: int = 1
     # strategy: "fssdp" (paper), "ep" (baseline), "fsdp" (dense all-gather).
     strategy: str = "fssdp"
-    # Re-materialization (release params after fwd, re-gather in bwd).
-    rematerialize: bool = False
+    # Re-materialization mode — what the backward does about the per-layer
+    # (K, chunk_len) materialized expert chunks (paper §4.3):
+    #   "save"   keep each layer's chunks as an AD residual (no backward
+    #            materialization collectives; highest chunk memory),
+    #   "gather" TRUE re-materialization: store NO chunk residuals — the
+    #            backward replays the SparseAllGather from the sharded
+    #            buffer and re-runs the MoE layer under the VJP (the
+    #            SparseReduceScatter transpose lands the buffer grads),
+    #   "block"  recompute the whole superblock under nothing_saveable
+    #            (least memory, most recompute; disables the cross-layer
+    #            materialization pipeline — see `pipeline`).
+    # Booleans are accepted for backward compatibility:
+    #   False -> "save", True -> "block".
+    rematerialize: Union[str, bool] = "save"
+    # One-layer-ahead materialization pipeline (§4.2): the superblock scan
+    # carries the NEXT MoE layer's prefetched chunks so SparseAllGather
+    # (ring/a2a + FSDP all-gather) overlaps the previous layer's
+    # attention/FFN compute instead of only its own gate.  Costs holding
+    # two layers' chunks at peak.  Ignored without a mesh, forced off
+    # under rematerialize="block" (the carried chunks would defeat the
+    # nothing-saveable memory goal), and REQUIRED by
+    # rematerialize="gather" (the backward re-gather consumes the
+    # prefetched slots — validated in __post_init__).
+    pipeline: bool = True
+
+    def __post_init__(self):
+        remat = self.rematerialize
+        if isinstance(remat, bool):
+            remat = "block" if remat else "save"
+        if remat not in ("save", "gather", "block"):
+            raise ValueError(
+                f"moe.rematerialize must be 'save' | 'gather' | 'block' "
+                f"(or a legacy bool), got {self.rematerialize!r}")
+        if remat == "gather" and not self.pipeline:
+            # the regather VJP only engages on the prefetched (premat)
+            # path; without the pipeline the serial path would silently
+            # store every layer's chunks — save-mode memory under a
+            # config that asked for the opposite.  Fail fast instead.
+            raise ValueError(
+                "moe.rematerialize='gather' requires moe.pipeline=True "
+                "(the backward re-gather consumes the pipelined prefetch; "
+                "use 'save' or 'block' with pipeline=False)")
+        object.__setattr__(self, "rematerialize", remat)
 
     @property
     def enabled(self) -> bool:

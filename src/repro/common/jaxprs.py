@@ -1,0 +1,50 @@
+"""Jaxpr introspection helpers shared by tests and benchmarks.
+
+One canonical pre-order equation walk that descends into sub-jaxprs held
+in eqn params (scan/remat bodies, shard_map, custom_vjp, pallas_call) —
+the repo asserts collective schedules and counts at the jaxpr level in
+several places, and JAX moves these param layouts between majors, so the
+descent logic lives in exactly one spot.
+"""
+from __future__ import annotations
+
+from typing import Iterable, Iterator, Set
+
+import jax
+
+
+def iter_eqns(jaxpr) -> Iterator:
+    """Pre-order walk over eqns, descending into sub-jaxprs via params."""
+    for eqn in jaxpr.eqns:
+        yield eqn
+        for v in eqn.params.values():
+            for j in jax.tree.leaves(v, is_leaf=lambda l: hasattr(l, "eqns")):
+                if hasattr(j, "eqns"):
+                    yield from iter_eqns(j)
+                elif hasattr(j, "jaxpr"):
+                    yield from iter_eqns(j.jaxpr)
+
+
+def count_prims(fn, *args, prims: Set[str]) -> int:
+    """Number of eqns with the given primitive names in make_jaxpr(fn)."""
+    cj = jax.make_jaxpr(fn)(*args)
+    return sum(e.primitive.name in prims for e in iter_eqns(cj.jaxpr))
+
+
+def find_prims(fn, *args, prims: Set[str]) -> list:
+    """The eqns themselves (pre-order) for the given primitive names."""
+    cj = jax.make_jaxpr(fn)(*args)
+    return [e for e in iter_eqns(cj.jaxpr) if e.primitive.name in prims]
+
+
+def eqn_contains(eqn, prims: Iterable[str]) -> bool:
+    """True if any of the eqn's SUB-jaxprs contain one of the primitives
+    (does not match the eqn's own primitive)."""
+    prims = set(prims)
+    for v in eqn.params.values():
+        for j in jax.tree.leaves(v, is_leaf=lambda l: hasattr(l, "eqns")):
+            sub = j if hasattr(j, "eqns") else getattr(j, "jaxpr", None)
+            if sub is not None and any(
+                    e.primitive.name in prims for e in iter_eqns(sub)):
+                return True
+    return False

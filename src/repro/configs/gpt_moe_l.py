@@ -11,7 +11,10 @@ def config() -> ModelConfig:
         d_model=1536, num_heads=16, num_kv_heads=16, head_dim=96,
         d_ff=3072, vocab_size=50_304,
         moe=MoEConfig(num_experts=64, experts_per_token=2, d_ff=3072,
-                      slots_per_device=4),
+                      slots_per_device=4,
+                      # 7.36B: chunk residuals dominate HBM at train_4k —
+                      # re-gather them in the backward (paper §4.3)
+                      rematerialize="gather"),
         act="gelu", norm="ln", tie_embeddings=True, source="Hecate Table 1")
 
 

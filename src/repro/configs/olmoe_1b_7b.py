@@ -12,7 +12,10 @@ def config() -> ModelConfig:
         d_model=2048, num_heads=16, num_kv_heads=16, head_dim=128,
         d_ff=1024, vocab_size=50_304,
         moe=MoEConfig(num_experts=64, experts_per_token=8, d_ff=1024,
-                      slots_per_device=4),
+                      slots_per_device=4,
+                      # many small experts: re-gathering the (K, chunk)
+                      # slots in the backward is cheaper than saving them
+                      rematerialize="gather"),
         act="silu_glu", norm="rms", tie_embeddings=False,
         source="arXiv:2409.02060")
 

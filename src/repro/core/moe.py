@@ -69,15 +69,55 @@ The compiled layer body is tuned around three costs (see
   einsums over the padded buffers — in training the backward is ~2x the
   forward FLOPs, so this is where most of the padding skip pays off.
 
+Pipelined materialization (§4.2) and re-materialization (§4.3)
+--------------------------------------------------------------
+In training, step 1 is software-pipelined ONE LAYER AHEAD of steps 2–4:
+the model's superblock scan (``repro.models.model.forward``) carries the
+next MoE layer's prefetched compute slots.  A warm-up
+``materialize_layer`` builds layer 0's slots before the scan; each scan
+step then issues layer l+1's SparseAllGather (ring/a2a over the EP axis +
+the FSDP-axis all-gather) BEFORE layer l's grouped-GEMM consumer and
+feeds layer l the slots prefetched one step earlier via
+``moe_layer(premat=...)``.  The materialization collectives therefore
+overlap the whole of the previous layer's attention + gate + dispatch +
+FFN compute instead of only the thin gate in front of their own FFN.
+Peak cost: TWO layers' (M, K, chunk_len) slots are live at the pipeline
+boundary instead of one.
+
+What the backward does about the materialized chunks is
+``cfg.moe.rematerialize``:
+
+* ``"save"``   — each layer's chunks are kept as AD residuals (the values
+  are checkpoint-named ``moe_materialized`` at their producer); the
+  backward issues no materialization collectives.  Fastest backward,
+  highest chunk memory (L layers of K·chunk_len per device).
+* ``"gather"`` — TRUE re-materialization via a custom VJP
+  (``moe_layer_regather``): residuals are only (x, wr, buf, plan) — no
+  chunk residuals AND no dispatch/FFN intermediates — and the backward
+  REPLAYS the SparseAllGather from the sharded buffer, re-runs the layer
+  under ``jax.vjp`` (the replayed gather's AD transpose is the
+  SparseReduceScatter landing the buffer grads on their owning shards),
+  and sends a zero cotangent to the forward prefetch (consumed through a
+  ``stop_gradient``, so the pipeline's producer is never transposed).
+  The backward re-gathers are issued at the head of each layer's VJP and
+  depend only on the (live) sharded buffer, so the async scheduler
+  overlaps them with the preceding layer's backward compute — the
+  backward mirror of the forward pipeline.
+* ``"block"``  — the whole superblock reruns under ``nothing_saveable``.
+  Minimum memory, maximum recompute; the cross-layer pipeline is forced
+  OFF in this mode (a carried prefetch would be stored as a scan residual,
+  defeating the point).
+
 Decode reuse
 ------------
-``materialize_chunks`` runs step 1 alone for every MoE layer and returns
-the stacked compute-slot chunks; ``moe_layer(..., premat=...)`` then skips
+``materialize_chunks`` runs step 1 alone for every MoE layer — ONE
+stacked jitted shard_map call over the layer dim — and returns the
+stacked compute-slot chunks; ``moe_layer(..., premat=...)`` then skips
 the SparseAllGather entirely.  Between decode steps the plan (and the
-buffer) is unchanged, so the serving engine materializes once per plan and
-reuses the slots every step — the double-buffering groundwork: a next-plan
-materialization can proceed in the background while decode steps consume
-the current slots.
+buffer) is unchanged, so the serving engine materializes once per plan
+and reuses the slots every step; ``Engine.set_plan`` double-buffers the
+NEXT plan's slots (async dispatch overlapping in-flight decode steps) and
+swaps them in at a step boundary.
 """
 from __future__ import annotations
 
@@ -234,11 +274,21 @@ def gate(cfg: ModelConfig, wr: jnp.ndarray, x: jnp.ndarray,
     vals, idx = jax.lax.top_k(probs, k)
     vals = vals / jnp.maximum(vals.sum(-1, keepdims=True), 1e-9)
     vals = vals * valid[:, None]
-    oh = jax.nn.one_hot(idx, e, dtype=jnp.float32) * valid[:, None, None]
-    counts = oh.sum((0, 1))                                   # (E,)
+    # per-expert token counts by scatter-add — the same trick the dispatch
+    # sort uses: the one-hot formulation materialized an O(T·k·E) tensor
+    # (the last one on the hot path); invalid entries land in an overflow
+    # bucket that is sliced off
+    cell = jnp.where(valid[:, None], idx, e).reshape(-1)
+    counts = jnp.zeros((e + 1,), jnp.float32).at[cell].add(1.0)[:e]
     prob_sum = (probs * valid[:, None]).sum(0)                # (E,)
-    n_valid = valid.sum().astype(jnp.float32)
-    z_sum = jnp.sum((jax.nn.logsumexp(logits, axis=-1) ** 2) * valid)
+    # the scalar statistics stay RANK-1 through the psum and divisions:
+    # shard_map's linearize-time partial eval on this jax version assigns
+    # residuals a leading device-axis spec that a rank-0 value cannot
+    # carry, breaking the AD transpose of the layer whenever the gate
+    # stats are differentiated (aux/z-loss in the training objective)
+    n_valid = valid.sum(keepdims=True).astype(jnp.float32)    # (1,)
+    z_sum = jnp.sum((jax.nn.logsumexp(logits, axis=-1) ** 2) * valid,
+                    keepdims=True)                            # (1,)
     if psum_axes is not None:
         counts, prob_sum, n_valid, z_sum = jax.lax.psum(
             (counts, prob_sum, n_valid, z_sum), psum_axes)
@@ -246,9 +296,10 @@ def gate(cfg: ModelConfig, wr: jnp.ndarray, x: jnp.ndarray,
     # GShard aux: E * sum_e frac_e * mean_prob_e
     frac = counts / jnp.maximum(counts.sum(), 1.0)
     mean_prob = prob_sum / n_valid
-    aux = e * jnp.sum(jax.lax.stop_gradient(frac) * mean_prob)
+    aux = e * jnp.sum(jax.lax.stop_gradient(frac) * mean_prob[None, :],
+                      keepdims=True).reshape(1)
     z = z_sum / n_valid
-    return idx, vals, counts, aux, z
+    return idx, vals, counts, aux[0], z[0]
 
 
 # ---------------------------------------------------------------------------
@@ -476,11 +527,14 @@ def _moe_body(cfg: ModelConfig, impl: str, ep_axis: str, fsdp_axes,
     # arithmetic lets an async-collective scheduler hide their latency
     # behind that compute — first use is in _expert_ffn, after dispatch.
     if premat is not None:
+        # produced by materialize_layer / materialize_chunks, which
+        # checkpoint-name their output — do NOT re-name here, or the remat
+        # policies would save the same chunks twice
         chunks = premat[0]                           # (K, chunk_len)
     else:
         chunks = _materialize(cfg, buf, pa, impl, ep_axis, fsdp_axes, m,
                               batch=batch_coll)
-    chunks = checkpoint_name(chunks, "moe_materialized")
+        chunks = checkpoint_name(chunks, "moe_materialized")
 
     idx, vals, counts, aux, z = gate(cfg, wr, x, valid,
                                      psum_axes=all_axes)
@@ -629,11 +683,9 @@ def moe_layer(cfg: ModelConfig, rt: MoERuntime, x, wr, buf,
         pa.extra_experts.shape[-1] if rt.impl == "dense" else rt.m)
     cap = rt.capacity or auto_capacity(cfg, t_loc, ep, k_total)
 
-    batch_coll = rt.batch_collectives if rt.batch_collectives is not None \
-        else jax.default_backend() != "cpu"
     body = partial(_moe_body, cfg, rt.impl, rt.ep_axis, rt.fsdp_axes,
-                   rt.m if rt.impl != "dense" else pa.extra_experts.shape[-1],
-                   cap, rt.use_pallas, rt.local_first, batch_coll)
+                   _m_of(rt, pa), cap, rt.use_pallas, rt.local_first,
+                   _coll_batch(rt))
     pspecs = plan_arrays_specs(rt.mesh, rt.ep_axis)
     in_specs = (P(all_axes, None), P(all_axes), P(),
                 P(rt.ep_axis, rt.fsdp_axes), pspecs)
@@ -650,39 +702,157 @@ def moe_layer(cfg: ModelConfig, rt: MoERuntime, x, wr, buf,
     return y, MoEAux(counts, aux, z, dropped, dev_loads, pad_frac)
 
 
-def materialize_chunks(cfg: ModelConfig, rt: MoERuntime, buf,
-                       pa: PlanArrays, dtype=None):
-    """Run SparseAllGather alone for every MoE layer: (L, M, K, chunk_len).
+def moe_layer_regather(cfg: ModelConfig, rt: MoERuntime, x, wr, buf,
+                       pa_l: PlanArrays, valid, premat):
+    """``moe_layer(premat=...)`` with ``rematerialize="gather"`` semantics:
+    TRUE re-materialization (paper §4.3) as a custom VJP.
 
-    The decode path reuses these slots across steps while the plan (and
-    the parameter buffer) is unchanged — ``moe_layer(..., premat=out[l])``
-    then issues NO materialization collectives.  Also the double-buffering
-    hook: the next plan's slots can be built here while the compiled step
-    still consumes the current ones.  Returns None without a mesh (the
-    single-device oracle never materializes).
+    Forward: consume the prefetched compute slots exactly like
+    ``moe_layer(premat=premat)``.  Residuals are ``(x, wr, buf)`` — the
+    (K, chunk_len) materialized chunks are NOT stored (``buf`` is the live
+    sharded parameter, effectively free), and neither are the MoE layer's
+    dispatch/FFN intermediates (the layer interior is re-run under the
+    VJP).  ``premat``, the plan tables and the padding mask are closed
+    over through a ``stop_gradient`` as non-differentiable constants, so
+    the forward pipeline's producer is never transposed (no dead
+    zero-filled collectives) and the scan never keeps the carried chunks
+    alive for AD.
+
+    Backward: REPLAY the SparseAllGather from the sharded buffer (the
+    re-materialization collectives, issued at the head of the VJP so the
+    async scheduler can overlap them with the preceding layer's backward
+    compute) and re-run the layer under ``jax.vjp`` — AD's transpose of
+    the replayed gather is the SparseReduceScatter that lands the buffer
+    gradient on its owning shards.
     """
-    if rt.mesh is None:
-        return None
-    from jax.experimental.shard_map import shard_map
-    buf = buf.astype(dtype or jnp.dtype(cfg.dtype))
-    m = rt.m if rt.impl != "dense" else pa.extra_experts.shape[-1]
-    batch_coll = rt.batch_collectives if rt.batch_collectives is not None \
+    premat = jax.lax.stop_gradient(premat)
+
+    def primal(x_, wr_, buf_, premat_, pa_, valid_):
+        return moe_layer(cfg, rt, x_, wr_, buf_, pa_, valid_,
+                         premat=premat_)
+
+    consume = jax.custom_vjp(primal)
+
+    def fwd(x_, wr_, buf_, premat_, pa_, valid_):
+        # residuals: plan tables + mask (tiny int/bool) — NOT premat
+        return primal(x_, wr_, buf_, premat_, pa_, valid_), \
+            (x_, wr_, buf_, pa_, valid_)
+
+    def bwd(res, ct):
+        x_, wr_, buf_, pa_, valid_ = res
+
+        def replay(xr_, wrr_, bufr_):
+            pm = materialize_layer(cfg, rt, bufr_, pa_, dtype=xr_.dtype)
+            return moe_layer(cfg, rt, xr_, wrr_, bufr_, pa_, valid_,
+                             premat=pm)
+
+        _, vjp = jax.vjp(replay, x_, wr_, buf_)
+        dx, dwr, dbuf = vjp(ct)
+        # None = symbolic-zero cotangents: premat's cotangent is zero BY
+        # CONSTRUCTION (its producer is stop_gradient'd in the pipelined
+        # forward), and a None keeps it symbolic — no dead (M, K, chunk)
+        # zeros tensor, no cotangent carry in the backward scan
+        return dx, dwr, dbuf, None, None, None
+
+    consume.defvjp(fwd, bwd)
+    return consume(x, wr, buf, premat, pa_l, valid)
+
+
+def _coll_batch(rt: MoERuntime) -> bool:
+    return rt.batch_collectives if rt.batch_collectives is not None \
         else jax.default_backend() != "cpu"
 
-    def body(buf_, pa_l):
-        ch = _materialize(cfg, buf_, pa_l, rt.impl, rt.ep_axis,
-                          rt.fsdp_axes, m, batch=batch_coll)
+
+def _m_of(rt: MoERuntime, pa: PlanArrays) -> int:
+    return rt.m if rt.impl != "dense" else pa.extra_experts.shape[-1]
+
+
+def materialize_layer(cfg: ModelConfig, rt: MoERuntime, buf,
+                      pa_l: PlanArrays, dtype=None):
+    """SparseAllGather for ONE layer, traceable inline: (M, K, chunk_len).
+
+    This is the pipelined forward's prefetch primitive: unlike
+    ``materialize_chunks`` it is NOT jitted itself, so the model can issue
+    layer l+1's materialization collectives inside the compiled train step
+    one layer before their ``moe_layer(premat=...)`` consumer — the
+    collectives overlap the whole of layer l's attention/FFN compute.  The
+    output is checkpoint-named ``moe_materialized`` at this producer (and
+    only here on the premat path) so the ``rematerialize`` policies see
+    exactly one named value per layer.
+    """
+    from jax.experimental.shard_map import shard_map
+    buf = buf.astype(dtype or jnp.dtype(cfg.dtype))
+    m = _m_of(rt, pa_l)
+    batch = _coll_batch(rt)
+
+    def body(buf_, pa_):
+        ch = _materialize(cfg, buf_, pa_, rt.impl, rt.ep_axis,
+                          rt.fsdp_axes, m, batch=batch)
         return ch[None]                              # (1, K, chunk_len)
 
-    fn = jax.jit(shard_map(
+    out = shard_map(
         body, mesh=rt.mesh,
         in_specs=(P(rt.ep_axis, rt.fsdp_axes),
                   plan_arrays_specs(rt.mesh, rt.ep_axis)),
         out_specs=P(rt.ep_axis, None, None),
-        check_rep=False))
-    layers = [fn(buf, jax.tree.map(lambda a, l=l: a[l], pa))
-              for l in range(pa.local_rows.shape[0])]
-    return jnp.stack(layers)
+        check_rep=False)(buf, pa_l)
+    return checkpoint_name(out, "moe_materialized")
+
+
+# jitted stacked-materialize cache: plans change CONTENTS every iteration
+# but never shapes, so one compile serves every plan swap of a serving
+# process (and the engine's double-buffered next-plan build).  Bounded —
+# each entry pins a compiled executable AND a Mesh; long-lived processes
+# that cycle meshes/configs must not grow it monotonically.
+_MAT_FNS: Dict[Any, Any] = {}
+_MAT_FNS_MAX = 8
+
+
+def materialize_chunks(cfg: ModelConfig, rt: MoERuntime, buf,
+                       pa: PlanArrays, dtype=None):
+    """Run SparseAllGather alone for every MoE layer: (L, M, K, chunk_len).
+
+    ONE stacked jitted shard_map call covers all L layers (previously L
+    separate jitted calls in a Python loop — L dispatches + L sets of
+    collectives with host round-trips between them), which is what makes
+    serve startup and background plan swaps cheap.  The decode path reuses
+    these slots across steps while the plan (and the parameter buffer) is
+    unchanged — ``moe_layer(..., premat=out[l])`` then issues NO
+    materialization collectives.  Returns None without a mesh (the
+    single-device oracle never materializes).
+    """
+    if rt.mesh is None:
+        return None
+    dt = jnp.dtype(dtype or jnp.dtype(cfg.dtype))
+    m = _m_of(rt, pa)
+    batch = _coll_batch(rt)
+    L = pa.local_rows.shape[0]
+    key = (cfg, rt.mesh, rt.ep_axis, tuple(rt.batch_axes), rt.impl, m,
+           batch, dt, L)
+    fn = _MAT_FNS.get(key)
+    if fn is None:
+        from jax.experimental.shard_map import shard_map
+
+        def body(buf_, pa_):
+            buf_ = buf_.astype(dt)
+            outs = [_materialize(cfg, buf_,
+                                 jax.tree.map(lambda a, l=l: a[l], pa_),
+                                 rt.impl, rt.ep_axis, rt.fsdp_axes, m,
+                                 batch=batch)
+                    for l in range(L)]
+            return jnp.stack(outs)[:, None]          # (L, 1, K, chunk_len)
+
+        specs = plan_arrays_specs(rt.mesh, rt.ep_axis)
+        stacked = PlanArrays(*[P(None, *tuple(s)) for s in specs])
+        fn = jax.jit(shard_map(
+            body, mesh=rt.mesh,
+            in_specs=(P(rt.ep_axis, rt.fsdp_axes), stacked),
+            out_specs=P(None, rt.ep_axis, None, None),
+            check_rep=False))
+        while len(_MAT_FNS) >= _MAT_FNS_MAX:       # FIFO eviction
+            _MAT_FNS.pop(next(iter(_MAT_FNS)))
+        _MAT_FNS[key] = fn
+    return fn(buf, pa)
 
 
 # ---------------------------------------------------------------------------

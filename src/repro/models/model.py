@@ -5,6 +5,13 @@ of ``cfg.layer_pattern``), executed with ``jax.lax.scan`` so HLO size is
 O(1) in depth (512-device compiles stay fast).  MoE FFNs read from the
 single cross-layer FSSDP chunk buffer (``repro.core.moe``); everything else
 is plain pytree params stacked along the scan axis.
+
+With a mesh, MoE materialization is SOFTWARE-PIPELINED one layer ahead
+(``_pipelined_blocks``): the scan carries the next MoE layer's prefetched
+compute slots, so each layer's SparseAllGather overlaps the previous
+layer's attention/FFN compute.  ``cfg.moe.rematerialize`` picks what the
+backward does about those slots (save | gather | block — see the
+``repro.core.moe`` docstring).
 """
 from __future__ import annotations
 
@@ -160,8 +167,15 @@ def _moe_ffn(cfg: ModelConfig, rt: Runtime, x, wr, buf, pa: PlanArrays,
         xt = jnp.concatenate([xt, jnp.zeros((pad, d), x.dtype)])
         valid = jnp.concatenate([valid, jnp.zeros((pad,), bool)])
     xt = rt.constrain(xt, ("tokens", None))
-    y, aux = moe_core.moe_layer(cfg, rt.moe, xt, wr, buf, pa, valid,
-                                premat=premat)
+    if premat is not None and cfg.moe.rematerialize == "gather" \
+            and rt.moe.mesh is not None:
+        # true re-materialization: no chunk residuals, the backward
+        # replays the SparseAllGather (see moe_layer_regather)
+        y, aux = moe_core.moe_layer_regather(cfg, rt.moe, xt, wr, buf, pa,
+                                             valid, premat)
+    else:
+        y, aux = moe_core.moe_layer(cfg, rt.moe, xt, wr, buf, pa, valid,
+                                    premat=premat)
     y = rt.constrain(y, ("tokens", None))
     if pad:
         y = y[:t]
@@ -174,51 +188,106 @@ def _moe_ffn(cfg: ModelConfig, rt: Runtime, x, wr, buf, pa: PlanArrays,
 # ---------------------------------------------------------------------------
 def _superblock(cfg: ModelConfig, rt: Runtime, params_sb, x, positions,
                 moe_xs, enc_out=None, causal: bool = True,
-                collect_cache: bool = False):
+                collect_cache: bool = False, prefetch=None,
+                seg_remat: bool = False):
     """moe_xs: (routers:(c,d,E), plan arrays with leading c, buffer) or None.
-    collect_cache: also return the per-sublayer decode cache (prefill)."""
+    collect_cache: also return the per-sublayer decode cache (prefill).
+
+    prefetch: None (serial path — each layer materializes its own chunks
+    inside moe_layer), or ``(chunks_in, pa_next)`` enabling the one-layer-
+    ahead materialization pipeline: ``chunks_in`` is the (M, K, chunk_len)
+    compute slots for this block's FIRST MoE layer, built one step earlier;
+    ``pa_next`` is the PlanArrays slice (leading dim removed) of the NEXT
+    block's first MoE layer, or None for the last block.  Each MoE position
+    issues the NEXT layer's SparseAllGather immediately BEFORE its own
+    grouped-GEMM consumer, so the collectives overlap all the compute in
+    between (§4.2).  With prefetch the return gains a trailing
+    ``chunks_out`` (the carry for the next block; None on the last).
+
+    seg_remat: checkpoint the attention/mamba and dense-FFN SEGMENTS
+    individually (rematerialize="gather": a block-level ``jax.checkpoint``
+    would store the prefetched chunks as an input per scan step — the MoE
+    consume stays outside any checkpoint because its custom VJP remats
+    the layer interior itself)."""
     moe_pos = _moe_positions(cfg) if cfg.moe.enabled else ()
     aux_list = []
     cache = {}
     mi = 0
+    cur_chunks = prefetch[0] if prefetch is not None else None
     for j, kind in enumerate(cfg.layer_pattern):
         p = params_sb[f"l{j}"]
-        h = ly.apply_norm(p["ln1"], x, cfg.norm)
-        if kind == "mamba":
-            y = mb.mamba_forward(p["mamba"], cfg, h,
-                                 return_state=collect_cache)
-            if collect_cache:
-                y, cache[f"l{j}"] = y
-            x = x + y
-        else:
-            y = attn.attention(p["attn"], cfg, h, positions, kind=kind,
-                               causal=causal, use_pallas=rt.use_pallas,
-                               return_kv=collect_cache)
-            if collect_cache:
-                y, cache[f"l{j}"] = y
-            x = x + y
-            if enc_out is not None:
-                hx = ly.apply_norm(p["lnx"], x, cfg.norm)
-                x = x + attn.attention(p["xattn"], cfg, hx, positions,
-                                       causal=False, xa=enc_out)
+
+        def mix_seg(p_, x_, enc_out_):
+            h = ly.apply_norm(p_["ln1"], x_, cfg.norm)
+            c = None
+            if kind == "mamba":
+                y = mb.mamba_forward(p_["mamba"], cfg, h,
+                                     return_state=collect_cache)
+                if collect_cache:
+                    y, c = y
+                x2 = x_ + y
+            else:
+                y = attn.attention(p_["attn"], cfg, h, positions, kind=kind,
+                                   causal=causal, use_pallas=rt.use_pallas,
+                                   return_kv=collect_cache)
+                if collect_cache:
+                    y, c = y
+                x2 = x_ + y
+                if enc_out_ is not None:
+                    hx = ly.apply_norm(p_["lnx"], x2, cfg.norm)
+                    x2 = x2 + attn.attention(p_["xattn"], cfg, hx,
+                                             positions, causal=False,
+                                             xa=enc_out_)
+            return x2, c
+
+        if seg_remat:
+            mix_seg = jax.checkpoint(mix_seg)
+        x, c = mix_seg(p, x, enc_out)
+        if collect_cache and c is not None:
+            cache[f"l{j}"] = c
         x = rt.constrain(x, ("batch", None, None))
         if j in moe_pos:
             routers, pa_c, buf = moe_xs
             pa_j = jax.tree.map(lambda a: a[mi], pa_c)
+            nxt = None
+            if prefetch is not None:
+                if mi + 1 < len(moe_pos):
+                    pa_n = jax.tree.map(lambda a: a[mi + 1], pa_c)
+                else:
+                    pa_n = prefetch[1]
+                if pa_n is not None:
+                    # the pipeline: issue layer l+1's SparseAllGather HERE,
+                    # before layer l's consumer below
+                    nxt = moe_core.materialize_layer(
+                        cfg, rt.moe, buf, pa_n, dtype=jnp.dtype(cfg.dtype))
+                    if cfg.moe.rematerialize == "gather":
+                        # the regather VJP computes the buffer grad by
+                        # replaying the gather in the backward; detaching
+                        # the prefetch at its producer keeps the carried
+                        # chunks out of the differentiated scan state (no
+                        # dead cotangent carry, no transposed producer)
+                        nxt = jax.lax.stop_gradient(nxt)
             h = ly.apply_norm(p["ln2"], x, cfg.norm)
-            y, aux = _moe_ffn(cfg, rt, h, routers[mi], buf, pa_j)
+            y, aux = _moe_ffn(cfg, rt, h, routers[mi], buf, pa_j,
+                              premat=cur_chunks)
+            cur_chunks = nxt
             x = x + y
             aux_list.append(aux)
             mi += 1
         elif kind != "mamba":
-            h = ly.apply_norm(p["ln2"], x, cfg.norm)
-            x = x + ly.apply_mlp(p["mlp"], h, cfg.act)
+            def ffn_seg(p_, x_):
+                h = ly.apply_norm(p_["ln2"], x_, cfg.norm)
+                return x_ + ly.apply_mlp(p_["mlp"], h, cfg.act)
+            if seg_remat:
+                ffn_seg = jax.checkpoint(ffn_seg)
+            x = ffn_seg(p, x)
         x = rt.constrain(x, ("batch", None, None))
     aux_acc = (jax.tree.map(lambda *xs: jnp.stack(xs), *aux_list)
                if aux_list else None)
-    if collect_cache:
-        return x, (aux_acc, cache)
-    return x, aux_acc
+    out_ys = (aux_acc, cache) if collect_cache else aux_acc
+    if prefetch is not None:
+        return x, out_ys, cur_chunks
+    return x, out_ys
 
 
 def _reshape_moe_xs(cfg: ModelConfig, routers, pa: PlanArrays):
@@ -228,6 +297,116 @@ def _reshape_moe_xs(cfg: ModelConfig, routers, pa: PlanArrays):
     r = routers.reshape(n_sb, c, *routers.shape[1:])
     pa_r = PlanArrays(*[a.reshape(n_sb, c, *a.shape[1:]) for a in pa])
     return r, pa_r
+
+
+def _remat_policy(cfg: ModelConfig):
+    """Checkpoint policy per ``cfg.moe.rematerialize`` (repro.core.moe).
+
+    save   — keep only the named materialized chunks; the block re-runs
+             everything else in the backward.
+    block  — recompute the whole superblock; pipeline forced off.
+    gather — no BLOCK-level checkpoint at all (``jax.checkpoint`` always
+             stores its inputs, which would pin the pipeline's carried
+             chunks per scan step): the pipelined path checkpoints the
+             attention/MLP SEGMENTS inside ``_superblock`` instead, and
+             the consume custom VJP remats the MoE layer interior and
+             re-gathers the chunks itself.
+    """
+    cp = jax.checkpoint_policies
+    mode = cfg.moe.rematerialize if cfg.moe.enabled else "save"
+    if mode == "block":
+        return cp.nothing_saveable
+    return cp.save_only_these_names("moe_materialized")
+
+
+def _use_pipeline(cfg: ModelConfig, rt: Runtime) -> bool:
+    """Cross-layer materialization prefetch: needs a mesh (the serial
+    single-device oracle never materializes) and is forced off under
+    rematerialize="block" (the carried chunks would become scan residuals,
+    defeating nothing_saveable)."""
+    return (cfg.moe.enabled and cfg.moe.pipeline
+            and rt.moe.mesh is not None
+            and cfg.moe.rematerialize != "block")
+
+
+def _pipelined_blocks(cfg: ModelConfig, rt: Runtime, params, x, positions,
+                      moe_xs, enc_out, causal: bool, collect_cache: bool):
+    """Superblock stack with the one-layer-ahead SparseAllGather pipeline.
+
+    A warm-up ``materialize_layer`` builds MoE layer 0's compute slots
+    before the scan; the scan then carries ``(hidden, prefetched_chunks)``
+    — each step consumes its first MoE layer's prefetched slots and issues
+    the next block's first-layer SparseAllGather (within-block layers
+    prefetch inside ``_superblock``).  The LAST superblock runs outside
+    the scan so no dangling prefetch is issued: exactly ONE SparseAllGather
+    per MoE layer per step, at the price of the block body appearing twice
+    in the HLO.  The dry-run's depth extrapolation stays exact — the
+    marginal block is the scan body.  Peak slot memory is two layers'
+    (M, K, chunk_len) chunks instead of one.
+    """
+    routers_r, pa_r, buf = moe_xs
+    n_sb = cfg.num_superblocks
+    policy = _remat_policy(cfg)
+    dt = jnp.dtype(cfg.dtype)
+    ch = moe_core.materialize_layer(
+        cfg, rt.moe, buf, jax.tree.map(lambda a: a[0, 0], pa_r), dtype=dt)
+    if cfg.moe.rematerialize == "gather":
+        ch = jax.lax.stop_gradient(ch)       # see _superblock: the regather
+        # VJP owns the buffer grad; the prefetch chain stays undifferentiated
+
+    gather = cfg.moe.rematerialize == "gather"
+
+    def run_block(x_, ch_, params_sb, routers_c, pa_c, pa_nx):
+        def blk(params_sb_, x2, ch2, routers2, pa2, pa_nx2, buf2, enc2):
+            return _superblock(cfg, rt, params_sb_, x2, positions,
+                               (routers2, pa2, buf2), enc2, causal,
+                               collect_cache, prefetch=(ch2, pa_nx2),
+                               seg_remat=cfg.remat and gather)
+        if cfg.remat and not gather:
+            # gather mode must NOT checkpoint the whole block: checkpoint
+            # stores its inputs, which would pin the carried (M, K, chunk)
+            # prefetch per scan step.  _superblock checkpoints the
+            # attention/FFN segments instead (seg_remat above).
+            blk = jax.checkpoint(blk, policy=policy)
+        return blk(params_sb, x_, ch_, routers_c, pa_c, pa_nx, buf,
+                   enc_out)
+
+    def slice_s(s):
+        return (jax.tree.map(lambda a: a[s], params["blocks"]),
+                routers_r[s], jax.tree.map(lambda a: a[s], pa_r))
+
+    if rt.unroll:
+        ys_list = []
+        for s in range(n_sb):
+            params_sb, routers_c, pa_c = slice_s(s)
+            pa_nx = (jax.tree.map(lambda a: a[s + 1, 0], pa_r)
+                     if s + 1 < n_sb else None)
+            x, ys_s, ch = run_block(x, ch, params_sb, routers_c, pa_c,
+                                    pa_nx)
+            ys_list.append(ys_s)
+        return x, jax.tree.map(lambda *a: jnp.stack(a), *ys_list)
+
+    ys_head = None
+    if n_sb > 1:
+        head = lambda a: a[:-1]
+        xs = (jax.tree.map(head, params["blocks"]),
+              (routers_r[:-1], jax.tree.map(head, pa_r),
+               jax.tree.map(lambda a: a[1:, 0], pa_r)))
+
+        def body(carry, xs_s):
+            x_c, ch_c = carry
+            params_sb, (routers_c, pa_c, pa_nx) = xs_s
+            x2, ys_s, ch2 = run_block(x_c, ch_c, params_sb, routers_c,
+                                      pa_c, pa_nx)
+            return (x2, ch2), ys_s
+
+        (x, ch), ys_head = jax.lax.scan(body, (x, ch), xs)
+    params_sb, routers_c, pa_c = slice_s(-1)
+    x, ys_last, _ = run_block(x, ch, params_sb, routers_c, pa_c, None)
+    if ys_head is None:
+        return x, jax.tree.map(lambda a: a[None], ys_last)
+    return x, jax.tree.map(lambda h, t: jnp.concatenate([h, t[None]], 0),
+                           ys_head, ys_last)
 
 
 def forward(cfg: ModelConfig, rt: Runtime, params, tokens=None, *,
@@ -275,18 +454,18 @@ def forward(cfg: ModelConfig, rt: Runtime, params, tokens=None, *,
             return _superblock(cfg, rt, params_sb_, x_, positions_, m_xs_,
                                enc_out_, causal, collect_cache)
         if cfg.remat:
-            policy = (jax.checkpoint_policies.nothing_saveable
-                      if cfg.moe.rematerialize else
-                      jax.checkpoint_policies.save_only_these_names(
-                          "moe_materialized"))
-            blk = jax.checkpoint(blk, policy=policy)
+            blk = jax.checkpoint(blk, policy=_remat_policy(cfg))
         x, ys = blk(params_sb, carry, positions, m_xs, enc_out)
         return x, ys
 
-    xs = (params["blocks"],)
-    if moe_xs is not None:
-        xs = (params["blocks"], (moe_xs[0], moe_xs[1]))
-    x, ys = _scan(rt, body, x, xs)
+    if moe_xs is not None and _use_pipeline(cfg, rt):
+        x, ys = _pipelined_blocks(cfg, rt, params, x, positions, moe_xs,
+                                  enc_out, causal, collect_cache)
+    else:
+        xs = (params["blocks"],)
+        if moe_xs is not None:
+            xs = (params["blocks"], (moe_xs[0], moe_xs[1]))
+        x, ys = _scan(rt, body, x, xs)
     x = ly.apply_norm(params["final_norm"], x, cfg.norm)
     if return_hidden:
         # loss is computed chunked from the hidden states (train path):

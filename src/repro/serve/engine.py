@@ -58,11 +58,17 @@ class Engine:
     MoE decode reuse: the materialization plan (and the parameter buffer)
     is constant across decode steps, so the SparseAllGather result is too.
     The engine materializes every layer's compute slots ONCE per plan
-    (``moe_core.materialize_chunks``) and feeds them to every decode step,
-    which then issues no materialization collectives at all.  Calling
-    ``set_plan`` invalidates the cache (and is where a double-buffered
-    serving loop would build the next plan's slots in the background while
-    steps keep consuming the current ones).
+    (``moe_core.materialize_chunks`` — a single stacked shard_map call)
+    and feeds them to every decode step, which then issues no
+    materialization collectives at all.
+
+    Plan swaps are DOUBLE-BUFFERED: ``set_plan`` kicks off the next plan's
+    slot construction immediately — JAX dispatch is asynchronous, so the
+    SparseAllGather collectives run while in-flight decode steps keep
+    consuming the CURRENT slots — and the engine promotes the staged
+    (plan, slots) pair at the next step boundary (``_step_boundary``,
+    called between decode steps in ``generate``).  ``set_plan(defer=False)``
+    swaps synchronously and drops the slot cache instead.
     """
 
     def __init__(self, cfg: ModelConfig, rt: mdl.Runtime, params,
@@ -72,11 +78,44 @@ class Engine:
         self.step_fn = jax.jit(build_serve_step(cfg, rt))
         self._premat = None
         self._premat_fresh = False
+        self._staged = None          # (pa, slots, buf) awaiting promotion
 
-    def set_plan(self, pa: Optional[PlanArrays]) -> None:
-        """Swap the materialization plan; slots re-materialize lazily."""
+    def _build_slots(self, pa, buf):
+        if (buf is None or pa is None or not self.cfg.moe.enabled
+                or self.rt.moe.mesh is None):
+            return None
+        return moe_core.materialize_chunks(self.cfg, self.rt.moe, buf, pa)
+
+    def set_plan(self, pa: Optional[PlanArrays], *,
+                 defer: bool = True) -> None:
+        """Stage the next materialization plan.
+
+        With a live slot cache and ``defer`` (default), the new plan's
+        slots are built NOW (async dispatch — the collectives overlap any
+        decode steps still consuming the current slots) and swapped in at
+        the next step boundary.  Without a live cache, or with
+        ``defer=False``, the plan is installed immediately and slots
+        re-materialize lazily on the next ``_materialized`` call.
+        """
+        buf = self.params.get("moe_buffer") if self.cfg.moe.enabled else None
+        if defer and self._premat_fresh and self._premat is not None:
+            self._staged = (pa, self._build_slots(pa, buf), buf)
+            return
         self.pa = pa
-        self._premat, self._premat_fresh = None, False
+        self._premat, self._premat_fresh, self._staged = None, False, None
+
+    def _step_boundary(self) -> None:
+        """Promote a staged (plan, slots) pair; called between steps."""
+        if self._staged is None:
+            return
+        pa, slots, buf = self._staged
+        self.pa, self._staged = pa, None
+        if buf is not self.params.get("moe_buffer"):
+            # buffer swapped since staging — rebuild lazily
+            self._premat, self._premat_fresh = None, False
+            return
+        self._premat, self._premat_src = slots, buf
+        self._premat_fresh = True
 
     def _materialized(self):
         """The per-(plan, buffer) slot cache: (L_moe, M, K, chunk_len) or
@@ -86,11 +125,7 @@ class Engine:
         if self._premat_fresh and getattr(self, "_premat_src", None) is not buf:
             self._premat_fresh = False
         if not self._premat_fresh:
-            self._premat = None
-            if (buf is not None and self.pa is not None
-                    and self.rt.moe.mesh is not None):
-                self._premat = moe_core.materialize_chunks(
-                    self.cfg, self.rt.moe, buf, self.pa)
+            self._premat = self._build_slots(self.pa, buf)
             self._premat_src = buf
             self._premat_fresh = True
         return self._premat
@@ -113,11 +148,14 @@ class Engine:
         toks = jnp.asarray(prompts, jnp.int32)
         out = [toks]
         logits = None
-        premat = self._materialized()            # one spAG per plan, reused
         for i in range(p):                       # loop prefill
+            self._step_boundary()                # promote staged plan swaps
+            premat = self._materialized()        # one spAG per plan, reused
             logits, cache = self.step_fn(self.params, cache, toks[:, i:i + 1],
                                          jnp.int32(i), self.pa, premat)
         for s in range(steps):
+            self._step_boundary()
+            premat = self._materialized()
             key, sub = jax.random.split(key)
             nxt = _sample(logits[:, -1], temperature, sub)[:, None]
             out.append(nxt)

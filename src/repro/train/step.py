@@ -1,7 +1,15 @@
 """Train step builder: loss, grads, AdamW update — one jitted function.
 
 The FSSDP placement tables (PlanArrays) are ordinary runtime inputs: the
-Hecate scheduler re-plans every iteration with zero recompilation.
+Hecate scheduler re-plans every iteration with zero recompilation.  This
+holds under the software-pipelined materialization too — the forward
+shifts the SAME stacked tables by one MoE layer to drive the one-layer-
+ahead SparseAllGather prefetch (repro.models.model._pipelined_blocks), so
+plan swaps still never retrace.  What the backward does about the
+materialized chunks is ``cfg.moe.rematerialize`` ("save" | "gather" |
+"block", see repro.core.moe); under gradient accumulation every
+microbatch runs its own forward, so each microbatch re-issues the L
+prefetch gathers and (in "gather" mode) the L backward re-gathers.
 """
 from __future__ import annotations
 

@@ -10,30 +10,16 @@
    (the decode-step reuse path) — verified by jaxpr collective counts.
 """
 
-# shared by both subprocess scripts: recursive jaxpr walk collecting eqns
-# of the given primitives (descends into scan/remat/custom_vjp/pallas
+# shared by both subprocess scripts: the canonical recursive jaxpr walk
+# (repro.common.jaxprs — descends into scan/remat/custom_vjp/pallas
 # sub-jaxprs via eqn params)
 WALK_PRELUDE = r"""
 import jax
-
-
-def walk(jaxpr, found, prims):
-    for eqn in jaxpr.eqns:
-        if eqn.primitive.name in prims:
-            found.append(eqn)
-        for v in eqn.params.values():
-            for j in jax.tree.leaves(v, is_leaf=lambda l: hasattr(l, "eqns")):
-                if hasattr(j, "eqns"):
-                    walk(j, found, prims)
-                elif hasattr(j, "jaxpr"):
-                    walk(j.jaxpr, found, prims)
+from repro.common.jaxprs import find_prims as find_prims_
 
 
 def find(fn, *args, prims):
-    cj = jax.make_jaxpr(fn)(*args)
-    found = []
-    walk(cj.jaxpr, found, prims)
-    return found
+    return find_prims_(fn, *args, prims=prims)
 """
 
 SCRIPT = WALK_PRELUDE + r"""
@@ -203,11 +189,25 @@ eng = Engine(cfg, rt, params, max_len=32, pa=pa)
 out = eng.generate(prompts, steps=4)
 assert eng._premat is not None and eng._premat.shape[0] == L
 eng2 = Engine(cfg, rt, params, max_len=32, pa=pa)
-eng2._premat, eng2._premat_fresh = None, True    # force per-step spAG
+# force per-step spAG: pin the cache to premat=None (the _premat_src must
+# match the live buffer or _materialized() would just rebuild real slots)
+eng2._premat, eng2._premat_fresh = None, True
+eng2._premat_src = params["moe_buffer"]
 out2 = eng2.generate(prompts, steps=4)
+assert eng2._premat is None                       # stayed on the spAG path
 assert (out == out2).all(), (out, out2)
-eng.set_plan(pa)                                  # invalidates the cache
-assert not eng._premat_fresh
+# double-buffered swap: set_plan with a live cache STAGES the next plan's
+# slots (built immediately, async) and keeps serving the current ones;
+# the swap happens at the next step boundary
+cur = eng._premat
+eng.set_plan(pa)
+assert eng._staged is not None and eng._premat is cur and eng._premat_fresh
+out3 = eng.generate(prompts, steps=4)             # boundary promotes staged
+assert eng._staged is None and eng._premat is not cur
+assert (out3 == out).all(), (out3, out)
+# synchronous invalidation still available
+eng.set_plan(pa, defer=False)
+assert not eng._premat_fresh and eng._staged is None
 print("ENGINE PREMAT OK")
 """
 
