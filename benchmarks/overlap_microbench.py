@@ -12,10 +12,18 @@ What this measures (results to ``BENCH_overlap.json``), on an 8-host-device
   memory (``Compiled.memory_analysis().temp_size_in_bytes``) at two
   depths, so the JSON records the MARGINAL per-layer residual footprint of
   each ``cfg.moe.rematerialize`` mode.  ``gather`` re-gathers the chunks
-  in the backward (collective count 3·m·L vs save's 2·m·L, also recorded)
-  instead of storing them: its marginal footprint sits strictly between
-  ``save`` (stores every layer's chunks) and ``block`` (stores nothing,
-  recomputes the whole block).
+  in the backward (collective count (3·L+1)·m pipelined / 3·m·L legacy vs
+  save's 2·m·L, also recorded) instead of storing them: its marginal
+  footprint sits strictly between ``save`` (stores every layer's chunks)
+  and ``block`` (stores nothing, recomputes the whole block).
+* **Backward schedule (gather mode)** — marginal save-vs-gather step time
+  with the EXPLICIT backward re-gather pipeline
+  (``cfg.moe.bwd_prefetch``) on vs off.  With it on, layer l−1's
+  re-gather is issued (jaxpr-ordered) before layer l's backward FFN
+  kernels instead of at the head of layer l−1's own VJP, so an async
+  collective scheduler overlaps each re-gather with a whole layer's
+  backward compute — on CPU only the schedule itself (issue order +
+  collective counts, recorded) is portable signal.
 
 CAVEAT on wall-clock here: this container has no accelerator — collectives
 run through XLA's CPU host emulation and there is no async collective
@@ -69,13 +77,14 @@ DEPTHS = (2, 6)
 
 
 def build(name, d_model, d_ff, experts, seq, batch, num_layers, mode,
-          pipe, remat=True):
+          pipe, remat=True, bwd_prefetch=True):
     cfg = ModelConfig(
         name=name, arch_type="moe", num_layers=num_layers,
         d_model=d_model, num_heads=4, num_kv_heads=4, head_dim=d_model // 4,
         d_ff=d_ff, vocab_size=512,
         moe=MoEConfig(num_experts=experts, experts_per_token=2, d_ff=d_ff,
-                      slots_per_device=2, rematerialize=mode, pipeline=pipe),
+                      slots_per_device=2, rematerialize=mode, pipeline=pipe,
+                      bwd_prefetch=bwd_prefetch),
         act="gelu", norm="ln", remat=remat, dtype="float32")
     mesh = jax.make_mesh((N_DEV // EP, EP), ("data", "model"),
                          axis_types=(jax.sharding.AxisType.Auto,) * 2)
@@ -168,6 +177,32 @@ def run():
             print(f"{name} remat={mode}: marginal temp/layer "
                   f"{(temps[DEPTHS[-1]] - temps[DEPTHS[0]]) / d_layers / 1e6:.3f} MB"
                   f"  jaxpr ppermutes {pperms[DEPTHS[-1]]}")
+        # --- backward schedule: explicit backward re-gather prefetch ---
+        # marginal step time of gather over save, with the backward
+        # pipeline on/off.  On CPU the collectives cannot overlap, so the
+        # marginal-time delta is noise-level by construction — the
+        # recorded jaxpr collective counts + the ordering asserted in
+        # tests/test_pipeline_remat.py are the portable signal.
+        cfg_s, loss_s, buf_s, L = build(name, num_layers=DEPTHS[-1],
+                                        mode="save", pipe=True, **kw)
+        t_save = _bench(jax.jit(jax.grad(loss_s)), buf_s)
+        for bp in (False, True):
+            cfg_g, loss_g, buf_g, L = build(name, num_layers=DEPTHS[-1],
+                                            mode="gather", pipe=True,
+                                            bwd_prefetch=bp, **kw)
+            g = jax.jit(jax.grad(loss_g))
+            t_gather = _bench(g, buf_g)
+            rows.append({
+                "shape": name, "kind": "bwd_schedule", "L": L,
+                "bwd_prefetch": bp,
+                "step_ms_save": round(t_save, 2),
+                "step_ms_gather": round(t_gather, 2),
+                "marginal_gather_over_save_ms": round(t_gather - t_save, 2),
+                "grad_ppermutes_jaxpr": _ppermutes(jax.grad(loss_g),
+                                                   buf_g),
+            })
+            print(f"{name} bwd_schedule prefetch={bp}: gather-save "
+                  f"{t_gather - t_save:+.1f} ms")
     res = {
         "backend": jax.default_backend(),
         "devices": N_DEV, "ep": EP, "depths": list(DEPTHS),
@@ -179,10 +214,17 @@ def run():
                  "the portable signal; re-run on an accelerator for real "
                  "ratios).  remat rows: marginal per-layer temp bytes of "
                  "the compiled step — save stores every layer's (K, chunk) "
-                 "slots, gather re-gathers them in the backward (per-layer "
-                 "collective law 3mL vs save's 2mL, asserted on the "
+                 "slots, gather re-gathers them in the backward "
+                 "(collective law (3L+1)m with the explicit backward "
+                 "pipeline / 3mL legacy vs save's 2mL, asserted on the "
                  "unrolled jaxpr in tests/test_pipeline_remat.py), block "
-                 "recomputes the whole superblock."),
+                 "recomputes the whole superblock.  bwd_schedule rows: "
+                 "marginal gather-over-save step time with the explicit "
+                 "backward re-gather prefetch (cfg.moe.bwd_prefetch) "
+                 "off/on — on CPU the delta is noise (host collectives "
+                 "cannot overlap); the issue ORDER (re-gather l-1 before "
+                 "layer l's backward kernels, spRS trailing) is the "
+                 "portable signal, jaxpr-asserted in the tests."),
     }
     for name, _ in SHAPES:
         r = {row["rematerialize"]: row for row in rows
@@ -200,12 +242,13 @@ def smoke():
     """CI: tiny shape — mode parity + run-to-completion, no JSON."""
     name, kw = SHAPES[0]
     grads = {}
-    for mode, pipe in [("save", True), ("gather", True), ("save", False),
-                       ("block", True)]:
+    for mode, pipe, bp in [("save", True, True), ("gather", True, True),
+                           ("gather", True, False), ("save", False, True),
+                           ("block", True, True)]:
         cfg, loss, buf, L = build(name, num_layers=2, mode=mode, pipe=pipe,
-                                  remat=False, **kw)
-        grads[(mode, pipe)] = jax.jit(jax.grad(loss))(buf)
-    base = grads[("save", True)]
+                                  remat=False, bwd_prefetch=bp, **kw)
+        grads[(mode, pipe, bp)] = jax.jit(jax.grad(loss))(buf)
+    base = grads[("save", True, True)]
     scale = float(jnp.abs(base).max())
     for k, g in grads.items():
         err = float(jnp.abs(g - base).max()) / scale

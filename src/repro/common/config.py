@@ -56,6 +56,15 @@ class MoEConfig:
     # rematerialize="gather" (the backward re-gather consumes the
     # prefetched slots — validated in __post_init__).
     pipeline: bool = True
+    # Explicit backward re-gather pipeline (rematerialize="gather" only):
+    # layer l's backward consumes compute slots re-gathered one backward
+    # step earlier and issues layer l-1's re-gather BEFORE its own
+    # dgrad/wgrad kernels (the backward mirror of `pipeline`, transported
+    # through a chunk-shaped pipe channel — see
+    # repro.core.moe.moe_layer_regather_pipelined).  Off = the legacy
+    # regather VJP, which gathers its own chunks at the head of its
+    # backward and relies on the async collective scheduler to hoist them.
+    bwd_prefetch: bool = True
 
     def __post_init__(self):
         remat = self.rematerialize

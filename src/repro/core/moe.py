@@ -69,8 +69,9 @@ The compiled layer body is tuned around three costs (see
   einsums over the padded buffers — in training the backward is ~2x the
   forward FLOPs, so this is where most of the padding skip pays off.
 
-Pipelined materialization (§4.2) and re-materialization (§4.3)
---------------------------------------------------------------
+Pipelined materialization (§4.2), re-materialization (§4.3), and the
+overlap-complete training step
+--------------------------------------------------------------------
 In training, step 1 is software-pipelined ONE LAYER AHEAD of steps 2–4:
 the model's superblock scan (``repro.models.model.forward``) carries the
 next MoE layer's prefetched compute slots.  A warm-up
@@ -84,6 +85,17 @@ FFN compute instead of only the thin gate in front of their own FFN.
 Peak cost: TWO layers' (M, K, chunk_len) slots are live at the pipeline
 boundary instead of one.
 
+**Step-level reuse (gradient accumulation).**  Under ``tc.microbatch``
+the gathers are HOISTED out of the accumulation loop entirely:
+``materialize_stack`` builds all L layers' slots once at the step head
+(one stacked traceable shard_map) and every microbatch's forward consumes
+them through ``forward(premat=...)`` — L SparseAllGathers per accumulated
+step instead of L·n, jaxpr-asserted in tests/test_step_overlap.py.  In
+"save" mode the hoisted slots are ONE shared residual set instead of n
+(the scan sums the per-microbatch chunk cotangents; a single
+``jax.linear_transpose`` of the stacked gather — the stacked
+SparseReduceScatter — lands the sum on the owning shards once per step).
+
 What the backward does about the materialized chunks is
 ``cfg.moe.rematerialize``:
 
@@ -91,22 +103,35 @@ What the backward does about the materialized chunks is
   are checkpoint-named ``moe_materialized`` at their producer); the
   backward issues no materialization collectives.  Fastest backward,
   highest chunk memory (L layers of K·chunk_len per device).
-* ``"gather"`` — TRUE re-materialization via a custom VJP
-  (``moe_layer_regather``): residuals are only (x, wr, buf, plan) — no
-  chunk residuals AND no dispatch/FFN intermediates — and the backward
-  REPLAYS the SparseAllGather from the sharded buffer, re-runs the layer
-  under ``jax.vjp`` (the replayed gather's AD transpose is the
-  SparseReduceScatter landing the buffer grads on their owning shards),
-  and sends a zero cotangent to the forward prefetch (consumed through a
-  ``stop_gradient``, so the pipeline's producer is never transposed).
-  The backward re-gathers are issued at the head of each layer's VJP and
-  depend only on the (live) sharded buffer, so the async scheduler
-  overlaps them with the preceding layer's backward compute — the
-  backward mirror of the forward pipeline.
+* ``"gather"`` — TRUE re-materialization via a custom VJP: residuals are
+  only (x, wr, buf, plan) — no chunk residuals AND no dispatch/FFN
+  intermediates — and the backward re-acquires the slots from the live
+  sharded buffer, re-runs the layer under ``jax.vjp``, and lands the
+  buffer gradient through the SparseReduceScatter (the gather's linear
+  transpose).  The forward prefetch is consumed through a
+  ``stop_gradient`` so the pipeline's producer is never transposed.  With
+  ``cfg.moe.bwd_prefetch`` (default) the re-gathers form an EXPLICIT
+  backward pipeline (``moe_layer_regather_pipelined``), the structural
+  mirror of the forward one: layer l's backward consumes slots
+  re-gathered one backward step earlier and issues layer l−1's re-gather
+  BEFORE its own dgrad/wgrad kernels (jaxpr-asserted ordering; the slots
+  travel as the cotangent of a chunk-shaped pipe channel threaded
+  through the forward), with each layer's SparseReduceScatter trailing
+  its kernels off the critical path.  ``bwd_prefetch=False`` keeps the
+  legacy schedule (each VJP gathers its own slots at its head and relies
+  on the async scheduler to hoist them).
 * ``"block"``  — the whole superblock reruns under ``nothing_saveable``.
   Minimum memory, maximum recompute; the cross-layer pipeline is forced
   OFF in this mode (a carried prefetch would be stored as a scan residual,
   defeating the point).
+
+**Planning off the critical path.**  The tables all of this consumes are
+host-side numpy (zero recompiles); ``HecateScheduler.plan_ahead`` runs
+Algorithm 1 + the ``plan_tables`` build for step i+1 on a background
+thread while step i executes on-device (the algorithms themselves are
+vectorized — see ``repro.core.schedule`` and
+benchmarks/planner_microbench.py), so ``train_loop`` blocks only on the
+host→device table transfer between steps.
 
 Decode reuse
 ------------
@@ -207,22 +232,29 @@ class PlanArrays(NamedTuple):
     owner_row: jnp.ndarray       # (L, E) int32
 
 
-def plan_to_arrays(plan: MaterializationPlan, r_max: int = 0) -> PlanArrays:
+def plan_tables(plan: MaterializationPlan, r_max: int = 0) -> PlanArrays:
+    """The host-side (numpy) half of ``plan_to_arrays``: derive every
+    runtime table from the plan.  Split out so the scheduler's plan-ahead
+    thread can build the tables off the critical path — only the device
+    transfer is left for the consuming step."""
     sh = plan.sharding
     r_max = r_max or max(1, plan.m + 1)
     slot_expert, expert_slot = plan.slot_tables()
-    replicas, n_rep = plan.replica_tables(r_max)
+    replicas, n_rep = plan.replica_tables(r_max, slot_expert)
     return PlanArrays(
-        local_rows=jnp.asarray(plan.local_rows, jnp.int32),
-        local_experts=jnp.asarray(plan.local_experts, jnp.int32),
-        extra_experts=jnp.asarray(plan.extra_experts, jnp.int32),
-        ring_send_rows=jnp.asarray(plan.ring_send_rows, jnp.int32),
-        expert_slot=jnp.asarray(expert_slot, jnp.int32),
-        replicas=jnp.asarray(replicas, jnp.int32),
-        n_replicas=jnp.asarray(n_rep, jnp.int32),
-        owner_dev=jnp.asarray(sh.owner_dev, jnp.int32),
-        owner_row=jnp.asarray(sh.owner_row, jnp.int32),
-    )
+        local_rows=plan.local_rows, local_experts=plan.local_experts,
+        extra_experts=plan.extra_experts,
+        ring_send_rows=plan.ring_send_rows, expert_slot=expert_slot,
+        replicas=replicas, n_replicas=n_rep,
+        owner_dev=sh.owner_dev, owner_row=sh.owner_row)
+
+
+def plan_to_arrays(plan: MaterializationPlan, r_max: int = 0) -> PlanArrays:
+    return tables_to_device(plan_tables(plan, r_max))
+
+
+def tables_to_device(tables: PlanArrays) -> PlanArrays:
+    return PlanArrays(*[jnp.asarray(a, jnp.int32) for a in tables])
 
 
 def plan_arrays_specs(mesh: Mesh, ep_axis: str = "model") -> PlanArrays:
@@ -758,6 +790,114 @@ def moe_layer_regather(cfg: ModelConfig, rt: MoERuntime, x, wr, buf,
     return consume(x, wr, buf, premat, pa_l, valid)
 
 
+def moe_layer_regather_pipelined(cfg: ModelConfig, rt: MoERuntime, x, wr,
+                                 buf, pa_l: PlanArrays,
+                                 pa_prev: PlanArrays, valid, premat,
+                                 pipe_in, warm_start: bool = False):
+    """``moe_layer_regather`` with an EXPLICIT backward re-gather pipeline
+    — the backward mirror of the forward's one-layer-ahead prefetch.
+
+    The plain regather VJP issues its own layer's re-gather at the head of
+    its backward and merely *hopes* the async collective scheduler hoists
+    it over the preceding layer's backward compute.  This variant makes the
+    schedule structural: layer l's backward CONSUMES compute slots that
+    were re-gathered one backward step earlier (during layer l+1's
+    backward) and ISSUES layer l−1's re-gather before its own dgrad/wgrad
+    kernels — jaxpr-assertable ordering, one layer of lookahead, exactly
+    like ``_pipelined_blocks`` in the forward.
+
+    The transport is a chunk-shaped *pipe channel* threaded through the
+    forward (``pipe_in`` -> returned ``pipe_out``): a value flowing
+    forward from layer l to layer l+1 has its cotangent computed in layer
+    l+1's backward and consumed in layer l's — precisely the
+    backward-execution-order data path the prefetch needs.  Layer l's bwd
+    returns the freshly gathered layer-(l−1) slots as the pipe cotangent;
+    layer l−1's bwd receives them as ``ct(pipe_out)``.  In the PRIMAL the
+    pipe is fresh zeros, NOT a pass-through of ``pipe_in``: custom_vjp's
+    bwd defines the cotangent routing regardless of primal data flow, and
+    a known-constant carry costs nothing — partial eval neither stacks it
+    as a per-iteration scan residual (a pass-through pipe was saved as
+    (n_sb, M, K, chunk) — exactly the chunk memory gather mode exists to
+    avoid) nor keeps a serializing fake dependency in the compiled
+    forward (the unused ``pipe_in`` operand DCEs away after AD).
+
+    Backward of layer l, in ISSUE ORDER:
+      1. slots for THIS layer: ``ct(pipe_out)`` — or, for the LAST MoE
+         layer of the network (``warm_start=True``, the first backward
+         executed, whose pipe cotangent is zero), a warm-up self-gather;
+      2. the PREVIOUS layer's re-gather (``pa_prev``) — the backward
+         prefetch, data-independent of everything below, so it overlaps
+         this layer's recompute + dgrad/wgrad;
+      3. recompute the layer interior under ``jax.vjp`` from the
+         pre-gathered slots (premat path — no gather inside);
+      4. the explicit ``jax.linear_transpose`` of this layer's gather maps
+         the chunk cotangent to the buffer gradient — the
+         SparseReduceScatter, landing OFF the critical path (it depends on
+         step 3's output and nothing depends on it within this layer).
+
+    For the FIRST MoE layer of the network ``pa_prev`` should be its own
+    tables: the emitted gather's consumer is the (dead) cotangent of the
+    zeros-initialized pipe head, and XLA drops it at compile time — the
+    jaxpr-level collective law is (3L+1)·m ring ppermutes vs the
+    un-pipelined regather's 3L·m (see tests/test_pipeline_remat.py).
+
+    Residuals are (x, wr, buf, plan tables, mask) — no chunks, no layer
+    interior, identical to ``moe_layer_regather``.
+    """
+    premat = jax.lax.stop_gradient(premat)
+    dt = jnp.dtype(cfg.dtype)
+
+    def primal(x_, wr_, buf_, pipe_, premat_, pa_, pa_p_, valid_):
+        y, aux = moe_layer(cfg, rt, x_, wr_, buf_, pa_, valid_,
+                           premat=premat_)
+        return y, aux, jnp.zeros_like(pipe_)
+
+    consume = jax.custom_vjp(primal)
+
+    def fwd(x_, wr_, buf_, pipe_, premat_, pa_, pa_p_, valid_):
+        return primal(x_, wr_, buf_, pipe_, premat_, pa_, pa_p_, valid_), \
+            (x_, wr_, buf_, pa_, pa_p_, valid_)
+
+    def bwd(res, cts):
+        x_, wr_, buf_, pa_, pa_p_, valid_ = res
+        ct_y, ct_aux, ct_pipe = cts
+        # (1) this layer's compute slots: prefetched during the NEXT
+        # layer's backward (they arrive as the pipe cotangent), except at
+        # the backward's head, which self-gathers — the warm-up
+        if warm_start:
+            ch = materialize_layer(cfg, rt, buf_, pa_, dtype=dt,
+                                   name=False)
+        else:
+            ch = ct_pipe.astype(dt)
+        # (2) BACKWARD PREFETCH: issue layer l-1's re-gather before this
+        # layer's dgrad/wgrad consumers below; it leaves this VJP as the
+        # pipe cotangent and is consumed one backward step later
+        prev = materialize_layer(cfg, rt, buf_, pa_p_, dtype=dt,
+                                 name=False)
+        # (3) recompute the layer interior from the pre-gathered slots
+        # (premat path — no materialization collectives in here)
+        buf0 = jax.lax.stop_gradient(buf_)
+
+        def use(ch_, xr_, wrr_):
+            return moe_layer(cfg, rt, xr_, wrr_, buf0, pa_, valid_,
+                             premat=ch_)
+
+        _, vjp = jax.vjp(use, ch, x_, wr_)
+        dch, dx, dwr = vjp((ct_y, ct_aux))
+        # (4) SparseReduceScatter: the linear transpose of THIS layer's
+        # gather lands the chunk cotangent on the owning buffer shards —
+        # nothing in this layer consumes it, so it sits off the critical
+        # path of the backward pipeline
+        dbuf = jax.linear_transpose(
+            lambda b: materialize_layer(cfg, rt, b, pa_, dtype=dch.dtype,
+                                        name=False), buf_)(dch)[0]
+        return dx, dwr, dbuf.astype(buf_.dtype), prev, None, None, None, \
+            None
+
+    consume.defvjp(fwd, bwd)
+    return consume(x, wr, buf, pipe_in, premat, pa_l, pa_prev, valid)
+
+
 def _coll_batch(rt: MoERuntime) -> bool:
     return rt.batch_collectives if rt.batch_collectives is not None \
         else jax.default_backend() != "cpu"
@@ -768,7 +908,7 @@ def _m_of(rt: MoERuntime, pa: PlanArrays) -> int:
 
 
 def materialize_layer(cfg: ModelConfig, rt: MoERuntime, buf,
-                      pa_l: PlanArrays, dtype=None):
+                      pa_l: PlanArrays, dtype=None, name: bool = True):
     """SparseAllGather for ONE layer, traceable inline: (M, K, chunk_len).
 
     This is the pipelined forward's prefetch primitive: unlike
@@ -779,6 +919,12 @@ def materialize_layer(cfg: ModelConfig, rt: MoERuntime, buf,
     output is checkpoint-named ``moe_materialized`` at this producer (and
     only here on the premat path) so the ``rematerialize`` policies see
     exactly one named value per layer.
+
+    ``name=False`` skips the checkpoint naming — required wherever the
+    gather must stay LINEAR-transposable (``jax.linear_transpose`` has no
+    rule for the name primitive): the backward re-gathers issued inside
+    ``moe_layer_regather_pipelined``'s VJP, whose explicit transpose is the
+    SparseReduceScatter landing the buffer gradient.
     """
     from jax.experimental.shard_map import shard_map
     buf = buf.astype(dtype or jnp.dtype(cfg.dtype))
@@ -796,7 +942,52 @@ def materialize_layer(cfg: ModelConfig, rt: MoERuntime, buf,
                   plan_arrays_specs(rt.mesh, rt.ep_axis)),
         out_specs=P(rt.ep_axis, None, None),
         check_rep=False)(buf, pa_l)
-    return checkpoint_name(out, "moe_materialized")
+    return checkpoint_name(out, "moe_materialized") if name else out
+
+
+def materialize_stack(cfg: ModelConfig, rt: MoERuntime, buf, pa: PlanArrays,
+                      dtype=None, name: bool = True):
+    """SparseAllGather for EVERY MoE layer, traceable inline:
+    (L, M, K, chunk_len).
+
+    The step-level materialization primitive: ONE stacked shard_map issues
+    all L layers' gathers (L·m ring ppermutes / L stacked all_to_alls in a
+    single region) so the train step can build every layer's compute slots
+    ONCE per step — before the gradient-accumulation loop — and feed each
+    microbatch's forward via ``premat=``.  Under gradient accumulation this
+    is L SparseAllGathers per step instead of L·n (the collectives are
+    hoisted off every microbatch's critical path), and in "save" mode one
+    shared set of chunk residuals instead of n.
+
+    Unlike ``materialize_chunks`` this is NOT jitted (it traces into the
+    caller's step) and it is linear in ``buf``: its AD transpose is the
+    stacked SparseReduceScatter that lands the accumulated chunk cotangent
+    on the owning buffer shards, once per step.  ``materialize_chunks``
+    wraps this body in a cached jit for the serving path.
+    """
+    from jax.experimental.shard_map import shard_map
+    dt = jnp.dtype(dtype or jnp.dtype(cfg.dtype))
+    m = _m_of(rt, pa)
+    batch = _coll_batch(rt)
+    L = pa.local_rows.shape[0]
+
+    def body(buf_, pa_):
+        buf_ = buf_.astype(dt)
+        outs = [_materialize(cfg, buf_,
+                             jax.tree.map(lambda a, l=l: a[l], pa_),
+                             rt.impl, rt.ep_axis, rt.fsdp_axes, m,
+                             batch=batch)
+                for l in range(L)]
+        return jnp.stack(outs)[:, None]              # (L, 1, K, chunk_len)
+
+    specs = plan_arrays_specs(rt.mesh, rt.ep_axis)
+    stacked = PlanArrays(*[P(None, *tuple(s)) for s in specs])
+    out = shard_map(
+        body, mesh=rt.mesh,
+        in_specs=(P(rt.ep_axis, rt.fsdp_axes), stacked),
+        out_specs=P(None, rt.ep_axis, None, None),
+        check_rep=False)(buf, pa)
+    return checkpoint_name(out, "moe_materialized") if name else out
 
 
 # jitted stacked-materialize cache: plans change CONTENTS every iteration
@@ -831,28 +1022,24 @@ def materialize_chunks(cfg: ModelConfig, rt: MoERuntime, buf,
            batch, dt, L)
     fn = _MAT_FNS.get(key)
     if fn is None:
-        from jax.experimental.shard_map import shard_map
-
-        def body(buf_, pa_):
-            buf_ = buf_.astype(dt)
-            outs = [_materialize(cfg, buf_,
-                                 jax.tree.map(lambda a, l=l: a[l], pa_),
-                                 rt.impl, rt.ep_axis, rt.fsdp_axes, m,
-                                 batch=batch)
-                    for l in range(L)]
-            return jnp.stack(outs)[:, None]          # (L, 1, K, chunk_len)
-
-        specs = plan_arrays_specs(rt.mesh, rt.ep_axis)
-        stacked = PlanArrays(*[P(None, *tuple(s)) for s in specs])
-        fn = jax.jit(shard_map(
-            body, mesh=rt.mesh,
-            in_specs=(P(rt.ep_axis, rt.fsdp_axes), stacked),
-            out_specs=P(None, rt.ep_axis, None, None),
-            check_rep=False))
+        fn = jax.jit(partial(materialize_stack, cfg, rt, dtype=dt,
+                             name=False))
         while len(_MAT_FNS) >= _MAT_FNS_MAX:       # FIFO eviction
             _MAT_FNS.pop(next(iter(_MAT_FNS)))
         _MAT_FNS[key] = fn
     return fn(buf, pa)
+
+
+def clear_materialize_cache() -> None:
+    """Drop every cached stacked-materialize executable.
+
+    Each ``_MAT_FNS`` entry pins a compiled executable AND a Mesh; the FIFO
+    bound caps steady-state growth, but test suites (and long-lived
+    processes that cycle meshes/configs) need an explicit way to release
+    them — otherwise compiled programs for dead meshes survive across test
+    cases.  Called from the test suite's per-test teardown.
+    """
+    _MAT_FNS.clear()
 
 
 # ---------------------------------------------------------------------------

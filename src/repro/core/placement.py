@@ -30,6 +30,25 @@ from typing import Optional, Tuple
 import numpy as np
 
 
+def _segment_rank(keys: np.ndarray) -> np.ndarray:
+    """rank[i] = |{j < i : keys[j] == keys[i]}| — vectorized (stable
+    argsort + running segment start), the numpy mirror of
+    ``repro.core.moe.segment_ranks``.  The table builders below use it to
+    replace their per-element Python fill loops; plan construction runs
+    every training iteration, so these are on the planner's latency
+    budget (see benchmarks/planner_microbench.py)."""
+    n = keys.shape[0]
+    idx = np.arange(n, dtype=np.int64)
+    order = np.argsort(keys, kind="stable")
+    sk = keys[order]
+    new = np.ones(n, bool)
+    new[1:] = sk[1:] != sk[:-1]
+    seg_start = np.maximum.accumulate(np.where(new, idx, 0))
+    rank = np.empty(n, np.int64)
+    rank[order] = idx - seg_start
+    return rank
+
+
 @dataclasses.dataclass
 class ShardingPlan:
     """Pre-condition P: expert ownership + flat-buffer rows (all MoE layers)."""
@@ -63,14 +82,14 @@ class ShardingPlan:
         L, E, M = self.num_layers, self.num_experts, self.num_devices
         rows = np.zeros((L, M, self.k_local), np.int32)
         experts = np.full((L, M, self.k_local), -1, np.int32)
-        fill = np.zeros((L, M), np.int32)
-        for l in range(L):
-            for e in range(E):
-                d = self.owner_dev[l, e]
-                j = fill[l, d]
-                rows[l, d, j] = self.owner_row[l, e]
-                experts[l, d, j] = e
-                fill[l, d] += 1
+        # slot j of (l, d) = j-th expert (ascending id) owned by d in l:
+        # rank within the (l, d) groups of the layer-major flat order
+        dev = self.owner_dev.reshape(-1).astype(np.int64)
+        l_idx = np.arange(L, dtype=np.int64).repeat(E)
+        j = _segment_rank(l_idx * M + dev)
+        e_idx = np.tile(np.arange(E, dtype=np.int64), L)
+        rows[l_idx, dev, j] = self.owner_row.reshape(-1)
+        experts[l_idx, dev, j] = e_idx
         return rows, experts
 
 
@@ -136,35 +155,40 @@ class MaterializationPlan:
         slot_expert = np.concatenate([self.local_experts, self.extra_experts],
                                      axis=2).astype(np.int32)
         expert_slot = np.full((L, M, E), -1, np.int32)
-        for l in range(L):
-            for d in range(M):
-                for j, e in enumerate(slot_expert[l, d]):
-                    if e >= 0:
-                        expert_slot[l, d, e] = j
+        l_i, d_i, j_i = np.nonzero(slot_expert >= 0)
+        expert_slot[l_i, d_i, slot_expert[l_i, d_i, j_i]] = j_i
         return slot_expert, expert_slot
 
-    def replica_tables(self, r_max: int) -> Tuple[np.ndarray, np.ndarray]:
+    def replica_tables(self, r_max: int, slot_expert: Optional[np.ndarray]
+                       = None) -> Tuple[np.ndarray, np.ndarray]:
         """(replicas:(L,E,r_max) device ids padded by repeating,
-            n_replicas:(L,E))."""
+            n_replicas:(L,E)).  ``slot_expert`` skips rebuilding the slot
+        table when the caller already has it (plan_tables)."""
         L, E, M = (self.sharding.num_layers, self.sharding.num_experts,
                    self.sharding.num_devices)
-        slot_expert, _ = self.slot_tables()
+        if slot_expert is None:
+            slot_expert, _ = self.slot_tables()
+        K = slot_expert.shape[2]
+        # replica list of (l, e) = devices holding e, in (d, slot) order =
+        # rank within the (l, e) groups of the flat (d, slot) scan
+        flat = slot_expert.reshape(L, M * K)
+        valid = flat >= 0
+        e_safe = np.where(valid, flat, E).astype(np.int64)      # E = pad bin
+        l_idx = np.arange(L, dtype=np.int64)[:, None]
+        rank = _segment_rank((l_idx * (E + 1) + e_safe).reshape(-1)) \
+            .reshape(L, M * K)
+        counts = np.zeros((L, E + 1), np.int64)
+        np.add.at(counts, (np.broadcast_to(l_idx, e_safe.shape), e_safe), 1)
+        n_rep = np.minimum(counts[:, :E], r_max).astype(np.int32)
+        assert (n_rep >= 1).all(), "some expert has no replica"
         replicas = np.zeros((L, E, r_max), np.int32)
-        n_rep = np.zeros((L, E), np.int32)
-        for l in range(L):
-            for d in range(M):
-                for e in slot_expert[l, d]:
-                    if e >= 0 and n_rep[l, e] < r_max:
-                        replicas[l, e, n_rep[l, e]] = d
-                        n_rep[l, e] += 1
+        sel = valid & (rank < r_max)
+        l_i, p_i = np.nonzero(sel)
+        replicas[l_i, flat[l_i, p_i], rank[l_i, p_i]] = p_i // K
         # pad by cycling existing replicas so modular indexing is safe
-        for l in range(L):
-            for e in range(E):
-                n = n_rep[l, e]
-                assert n >= 1, f"expert {e} of layer {l} has no replica"
-                for j in range(n, r_max):
-                    replicas[l, e, j] = replicas[l, e, j % n]
-        return replicas, n_rep
+        j = np.arange(r_max)[None, None, :]
+        idx = np.where(j < n_rep[..., None], j, j % n_rep[..., None])
+        return np.take_along_axis(replicas, idx, axis=2), n_rep
 
     def validate(self) -> None:
         sh = self.sharding

@@ -7,12 +7,13 @@ accelerators run step *i*), emitting the static-shape tables of
 from __future__ import annotations
 
 import dataclasses
+import heapq
 from typing import Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.placement import (MaterializationPlan, ShardingPlan,
-                                  homogeneous_sharding)
+                                  _segment_rank, homogeneous_sharding)
 
 
 # ---------------------------------------------------------------------------
@@ -62,6 +63,7 @@ def _assign_slots_by_load(load_frac: float, tot_slots: int, remaining: int
 def sparse_materialization(sharding: ShardingPlan, loads: np.ndarray,
                            t: int, m: int, *, impl: str = "ring",
                            node_size: int = 0, q_rounds: int = 0,
+                           vectorized: bool = True,
                            ) -> MaterializationPlan:
     """Algorithm 1, per layer, under the static-slot contract.
 
@@ -74,6 +76,10 @@ def sparse_materialization(sharding: ShardingPlan, loads: np.ndarray,
                (src, dst) pair (paper-faithful volume upper bound).
       "dense": all experts on all devices (FSDP baseline; ignores t/m).
     node_size: devices per node for topology-aware spreading (0 = flat).
+    vectorized: numpy-array greedy (the default — byte-identical to the
+      reference Python loops, ≥10x faster at production shapes, measured
+      with parity checks in benchmarks/planner_microbench.py).  ``False``
+      runs the reference ``_alg1_*_loop`` implementations.
     """
     sh = sharding
     L, E, M = sh.num_layers, sh.num_experts, sh.num_devices
@@ -88,28 +94,54 @@ def sparse_materialization(sharding: ShardingPlan, loads: np.ndarray,
     extra = np.full((L, M, m_eff), -1, np.int32)
     ring_rows = np.zeros((L, M, m_eff), np.int32)
     q = q_rounds or max(1, -(-m_eff // max(M - 1, 1)))
-    a2a_rows = np.full((L, M, q, M), -1, np.int32)
+    # the a2a send table only exists on a2a plans (the plan stores None
+    # otherwise) — don't pay its (L, M, q, M) fill on the ring hot path
+    a2a_rows = np.full((L, M, q, M), -1, np.int32) if impl == "a2a" \
+        else np.full((L, M, q, 0), -1, np.int32)
 
-    for l in range(L):
-        f = loads[l]
-        owned_on = [set(local_experts[l, d][local_experts[l, d] >= 0])
-                    for d in range(M)]
-        present = [set(s) for s in owned_on]
+    if vectorized:
+        # presence mask by scatter (L·E writes, not an L·M·E compare)
+        owned = np.zeros((L, M, E), bool)
+        owned[np.arange(L).repeat(E), sh.owner_dev.reshape(-1),
+              np.tile(np.arange(E), L)] = True
         if impl == "dense":
-            for d in range(M):
-                j = 0
-                for e in range(E):
-                    if e not in present[d]:
-                        extra[l, d, j] = e
-                        j += 1
-            continue
-        if m_eff == 0:
-            continue
-        if impl == "ring":
-            _alg1_ring(sh, l, f, m_eff, extra, ring_rows, present)
-        else:
-            _alg1_a2a(sh, l, f, t, m_eff, q, extra, a2a_rows, present,
-                      node_size)
+            # extras of d = all experts d does not own, ascending id
+            not_mine = ~owned                               # (L, M, E)
+            j = np.cumsum(not_mine, axis=2) - 1
+            l_i, d_i, e_i = np.nonzero(not_mine)
+            extra[l_i, d_i, j[l_i, d_i, e_i]] = e_i
+        elif m_eff > 0:
+            # `owned` doubles as the mutable presence state — it is not
+            # read again after Alg 1 fills the slots
+            if impl == "ring":
+                _alg1_ring(sh, loads, m_eff, extra, ring_rows,
+                           present=owned, local_experts=local_experts)
+            else:
+                for l in range(L):
+                    _alg1_a2a(sh, l, loads[l], t, m_eff, q, extra,
+                              a2a_rows, present=owned[l],
+                              node_size=node_size)
+    else:
+        for l in range(L):
+            f = loads[l]
+            owned_on = [set(local_experts[l, d][local_experts[l, d] >= 0])
+                        for d in range(M)]
+            present = [set(s) for s in owned_on]
+            if impl == "dense":
+                for d in range(M):
+                    j = 0
+                    for e in range(E):
+                        if e not in present[d]:
+                            extra[l, d, j] = e
+                            j += 1
+                continue
+            if m_eff == 0:
+                continue
+            if impl == "ring":
+                _alg1_ring_loop(sh, l, f, m_eff, extra, ring_rows, present)
+            else:
+                _alg1_a2a_loop(sh, l, f, t, m_eff, q, extra, a2a_rows,
+                               present, node_size)
 
     if impl == "ring":
         # dead-slot contract: a slot _alg1_ring could not fill keeps
@@ -127,11 +159,50 @@ def sparse_materialization(sharding: ShardingPlan, loads: np.ndarray,
     return plan
 
 
-def _alg1_ring(sh: ShardingPlan, l: int, f: np.ndarray, m: int,
+def _alg1_ring(sh: ShardingPlan, loads: np.ndarray, m: int,
                extra: np.ndarray, ring_rows: np.ndarray,
-               present: list) -> None:
-    """Ring-constrained Alg 1: slot j of device d must hold an expert owned
-    by (d+j+1) % M; greedily pick the hottest eligible expert."""
+               present: np.ndarray, local_experts: np.ndarray) -> None:
+    """Vectorized ring-constrained Alg 1 over ALL layers at once.
+
+    Slot j of device d must hold an expert owned by (d+j+1) % M; greedily
+    pick the hottest eligible expert.  Within one ring round j every
+    device's choice is independent (it only reads its own presence row),
+    so the whole (L, M) grid resolves in one masked argmax per round —
+    and because the candidates of (d, j) are exactly the experts OWNED by
+    the round's source device, the argmax runs over the (L, M, k_local)
+    owned-experts table, not the full (L, M, E) grid: m rounds of
+    O(L·M·k_local) array work instead of L·m·M Python list scans.
+    Byte-identical to ``_alg1_ring_loop`` (np.argmax picks the FIRST
+    maximum; the owned table lists experts ascending, matching ``max``
+    over the ascending candidate list).
+
+    present: (L, M, E) bool, updated in place.
+    local_experts: (L, M, k_local) int32 owned-expert table (-1 pad).
+    """
+    M = sh.num_devices
+    L = sh.num_layers
+    l_b = np.arange(L)[:, None, None]
+    d_b = np.arange(M)[None, :, None]
+    for j in range(m):
+        src = (np.arange(M) + j + 1) % M                  # (M,)
+        cand_e = local_experts[:, src, :]                 # (L, M, k_local)
+        e_safe = np.maximum(cand_e, 0)
+        ok = (cand_e >= 0) & ~present[l_b, d_b, e_safe]
+        score = np.where(ok, loads[l_b, e_safe], -np.inf)
+        jj = np.argmax(score, axis=2)                     # (L, M)
+        has = np.take_along_axis(ok, jj[:, :, None], axis=2)[:, :, 0]
+        e = np.take_along_axis(cand_e, jj[:, :, None], axis=2)[:, :, 0]
+        extra[:, :, j] = np.where(has, e, -1)
+        l_i, d_i = np.nonzero(has)
+        ring_rows[l_i, src[d_i], j] = sh.owner_row[l_i, e[l_i, d_i]]
+        present[l_i, d_i, e[l_i, d_i]] = True
+
+
+def _alg1_ring_loop(sh: ShardingPlan, l: int, f: np.ndarray, m: int,
+                    extra: np.ndarray, ring_rows: np.ndarray,
+                    present: list) -> None:
+    """Reference Python-loop ring Alg 1 (one layer) — the parity baseline
+    for ``_alg1_ring`` (benchmarks/planner_microbench.py)."""
     M = sh.num_devices
     owned_by = [np.where(sh.owner_dev[l] == d)[0] for d in range(M)]
     for j in range(m):
@@ -154,15 +225,79 @@ def _alg1_ring(sh: ShardingPlan, l: int, f: np.ndarray, m: int,
 
 def _alg1_a2a(sh: ShardingPlan, l: int, f: np.ndarray, t: int, m: int,
               q: int, extra: np.ndarray, a2a_rows: np.ndarray,
-              present: list, node_size: int) -> None:
-    """Paper-faithful Algorithm 1 under the q-per-(src,dst) constraint."""
+              present: np.ndarray, node_size: int) -> None:
+    """Vectorized paper-faithful Algorithm 1 (one layer) under the
+    q-per-(src,dst) constraint.
+
+    The greedy walks targets in order (sequential state: free slots,
+    per-pair budgets) but every per-device scan — candidate ranking and
+    the assignment filter — is a numpy lexsort/mask instead of a Python
+    ``sorted`` with tuple keys.  Byte-identical to ``_alg1_a2a_loop``
+    (np.lexsort is stable, matching Python's stable sort with ascending
+    device order as the implicit final key).
+
+    present: (M, E) bool, updated in place.
+    """
     M = sh.num_devices
     order = np.argsort(-f)
     top_t = list(order[:max(t, 0)]) if t > 0 else list(order)
     slots_free = np.full(M, m, np.int32)
     pair_used = np.zeros((M, M), np.int32)       # chunks src -> dst
     slot_next = np.zeros(M, np.int32)
-    nodes = max(1, M // node_size) if node_size else 1
+    nsz = node_size or M
+    d_all = np.arange(M)
+
+    if t <= m:
+        # lines 4-5: materialize top-t experts on ALL devices
+        targets = [(e, d_all) for e in top_t]
+    else:
+        # lines 6-11: replicas ∝ load
+        tot_slots = int(slots_free.sum())
+        counts = []
+        remaining = tot_slots
+        fsum = max(f[top_t].sum(), 1e-9)
+        for e in top_t:
+            n = _assign_slots_by_load(f[e] / fsum, tot_slots, remaining)
+            remaining -= n
+            counts.append((e, n))
+            if remaining <= 0:
+                break
+        # node-aware: prefer nodes where e is NOT yet present, then
+        # devices with more free slots (stable → ascending device id)
+        n_pad = (-M) % nsz
+        pres_pad = np.zeros(M + n_pad, bool)      # reused scratch (np.pad
+        node_of = d_all // nsz                    # per target was the 2nd
+        targets = []                              # hottest line here)
+        for e, n in counts:
+            pres_pad[:M] = present[:, e]
+            node_has = pres_pad.reshape(-1, nsz).any(1)
+            devs = np.lexsort((-slots_free, node_has[node_of]))
+            targets.append((e, devs[:n]))
+
+    for e, devs in targets:
+        src = sh.owner_dev[l, e]
+        ok = (~present[devs, e] & (slots_free[devs] > 0)
+              & (pair_used[src, devs] < q) & (devs != src))
+        d_ok = devs[ok]
+        extra[l, d_ok, slot_next[d_ok]] = e
+        a2a_rows[l, src, pair_used[src, d_ok], d_ok] = sh.owner_row[l, e]
+        pair_used[src, d_ok] += 1
+        slot_next[d_ok] += 1
+        slots_free[d_ok] -= 1
+        present[d_ok, e] = True
+
+
+def _alg1_a2a_loop(sh: ShardingPlan, l: int, f: np.ndarray, t: int, m: int,
+                   q: int, extra: np.ndarray, a2a_rows: np.ndarray,
+                   present: list, node_size: int) -> None:
+    """Reference Python-loop a2a Alg 1 — the parity baseline for
+    ``_alg1_a2a`` (benchmarks/planner_microbench.py)."""
+    M = sh.num_devices
+    order = np.argsort(-f)
+    top_t = list(order[:max(t, 0)]) if t > 0 else list(order)
+    slots_free = np.full(M, m, np.int32)
+    pair_used = np.zeros((M, M), np.int32)       # chunks src -> dst
+    slot_next = np.zeros(M, np.int32)
     nsz = node_size or M
 
     if t <= m:
@@ -189,7 +324,8 @@ def _alg1_a2a(sh: ShardingPlan, l: int, f: np.ndarray, t: int, m: int,
                 (d for d in range(M)),
                 key=lambda d: (
                     any(e in present[dd]
-                        for dd in range((d // nsz) * nsz, (d // nsz + 1) * nsz)),
+                        for dd in range((d // nsz) * nsz,
+                                        min((d // nsz + 1) * nsz, M))),
                     -slots_free[d]))
             chosen = []
             for d in devs:
@@ -232,39 +368,146 @@ def calibrate(plan: MaterializationPlan, real_loads: np.ndarray,
 # ---------------------------------------------------------------------------
 def heterogeneous_sharding(loads: np.ndarray, num_devices: int, t: int,
                            *, node_size: int = 0,
-                           k_local: Optional[int] = None) -> ShardingPlan:
+                           k_local: Optional[int] = None,
+                           vectorized: bool = True) -> ShardingPlan:
     """Paper Algorithm 2.  loads: (L, E).  Returns a ShardingPlan where the
     number of owned experts per (layer, device) may vary (0..k_local) while
-    total buffer rows per device stay exactly balanced."""
+    total buffer rows per device stay exactly balanced.
+
+    The greedy is inherently sequential (each placement shifts the device
+    loads the next decision reads), but each DECISION — "least-loaded node
+    with an eligible device, then least-loaded eligible device on it" —
+    is a pure rank-and-filter over per-device arrays.  ``vectorized=True``
+    (the default) resolves it with masked numpy lexsorts (byte-identical
+    to the Python-sort reference, which survives as the parity baseline
+    for benchmarks/planner_microbench.py); the ordering loops around it
+    (hot marking, cold ordering, buffer-row assignment) are fully
+    vectorized."""
     loads = np.asarray(loads, np.float64)
     L, E = loads.shape
     M = num_devices
-    assert (L * E) % M == 0 or True
     rows_per_device = -(-(L * E) // M)
     k_local = k_local or min(E, 2 * max(1, -(-E // M)))
     nsz = node_size or M
+    n_nodes = max(1, M // nsz)
 
     # line 1-2: J = top-t per layer (overlappable), J' = rest
     t = min(max(t, 0), E)
     hot = np.zeros((L, E), bool)
-    for l in range(L):
-        hot[l, np.argsort(-loads[l])[:t]] = True
+    if t:
+        np.put_along_axis(hot, np.argsort(-loads, axis=1)[:, :t], True,
+                          axis=1)
 
     owner_dev = np.full((L, E), -1, np.int32)
-    slots_free = np.full(M, rows_per_device, np.int32)
-    dev_load = np.zeros(M, np.float64)
-    per_layer_count = np.zeros((L, M), np.int32)
+    covered = n_nodes * nsz                                # node-resident devs
+    if not vectorized:                         # loop-reference state only
+        slots_free = np.full(M, rows_per_device, np.int32)
+        dev_load = np.zeros(M, np.float64)
+        per_layer_count = np.zeros((L, M), np.int32)
 
-    def node_of(d):
-        return d // nsz
+    # ---- fast path: lazy min-heaps over (key, index, version) ---------
+    # The loop reference re-ranks every node and device per placement
+    # (O(M log M) Python sorts with tuple keys, L·E times).  The keys only
+    # change for the ONE device that received the previous placement, so
+    # lazy heaps give O(log) amortized selection: every key change bumps a
+    # VERSION counter and pushes a fresh entry, a popped entry is valid
+    # iff its version is current (stale ones are discarded — a fresh twin
+    # is in the heap), and the first valid pop is the true lexicographic
+    # minimum with ascending-index tie-break — exactly what the
+    # reference's stable ``sort(key=(load, free))`` picks.  Node loads are
+    # accumulated incrementally in Python floats; for integer token-count
+    # loads (the production input — and the all-ones predictor default)
+    # this is EXACT, identical to the reference's fresh slice sums.  For
+    # continuous loads the two can differ in final ulps; a comparison
+    # would only flip on a sub-ulp near-tie between different load
+    # multisets (identical multisets sum identically on both sides), so
+    # the randomized byte-parity sweep in benchmarks/planner_microbench.py
+    # holds for both load families.
+    if vectorized:                             # fast-path state only
+        node_load = [0.0] * n_nodes
+        node_free = [min((n + 1) * nsz, M) - n * nsz
+                     for n in range(n_nodes)]
+        node_free = [f * rows_per_device for f in node_free]
+        node_ver = [0] * n_nodes
+        dev_ver = [0] * M
+        dev_loadf = [0.0] * M
+        dev_freei = [rows_per_device] * M
+        dev_heaps = [[(0.0, rows_per_device, d, 0)
+                      for d in range(n * nsz, min((n + 1) * nsz, M))]
+                     for n in range(n_nodes)]
+        node_heap = [(node_load[n], node_free[n], n, 0)
+                     for n in range(n_nodes)]
+        heapq.heapify(node_heap)
+        for dh_ in dev_heaps:
+            heapq.heapify(dh_)
+        plc_rows = [[0] * M for _ in range(L)]  # per-layer owned counts
+        loads_rows = loads.tolist()             # scalar reads off numpy
 
-    def place(l, e):
-        # least-loaded node, tie-break fewer free slots; then least-loaded
-        # device on that node, same tie-break (paper lines 10-11)
+    def place_fast(l):
+        plc = plc_rows[l]
+        node_stash, found = [], -1
+        while node_heap:
+            nk = heapq.heappop(node_heap)
+            n = nk[2]
+            if nk[3] != node_ver[n]:
+                continue                      # stale — fresh twin in heap
+            dh = dev_heaps[n]
+            dev_stash = []
+            while dh:
+                dk = heapq.heappop(dh)
+                d = dk[2]
+                if dk[3] != dev_ver[d]:
+                    continue                  # stale
+                dev_stash.append(dk)          # valid — goes back either way
+                if plc[d] >= k_local:
+                    continue                  # capped for THIS layer only
+                found = d
+                break
+            for dk in dev_stash:
+                heapq.heappush(dh, dk)
+            node_stash.append(nk)             # valid now; staled by the
+            if found >= 0:                    # caller's update if chosen
+                break
+        for nk in node_stash:
+            heapq.heappush(node_heap, nk)
+        if found >= 0:
+            return found
+        # fallback: any device with a free slot (reachable only when M is
+        # not a multiple of node_size — the orphan tail devices belong to
+        # no node; same argsort call as the loop reference for parity —
+        # dev_loadf accumulates in the reference's exact order)
+        for d in np.argsort(np.asarray(dev_loadf)):
+            if dev_freei[d] > 0 and plc_rows[l][d] < k_local:
+                return int(d)
+        raise RuntimeError("no free slot — k_local too tight")
+
+    def placed_fast(l, d, w):
+        """Post-placement bookkeeping: bump versions and push fresh heap
+        entries for the one device (and node) whose keys changed.  Orphan
+        devices (M not a multiple of node_size) belong to no node and live
+        outside the heaps — the fallback scan handles them, as in the
+        reference."""
+        dev_loadf[d] += w
+        dev_freei[d] -= 1
+        dev_ver[d] += 1
+        if d >= covered:
+            return
+        if dev_freei[d] > 0:
+            heapq.heappush(dev_heaps[d // nsz],
+                           (dev_loadf[d], dev_freei[d], d, dev_ver[d]))
+        n = d // nsz
+        node_load[n] += w
+        node_free[n] -= 1
+        node_ver[n] += 1
+        if node_free[n] > 0:
+            heapq.heappush(node_heap,
+                           (node_load[n], node_free[n], n, node_ver[n]))
+
+    def place_loop(l):
         node_load = [dev_load[n * nsz:(n + 1) * nsz].sum()
-                     for n in range(max(1, M // nsz))]
+                     for n in range(n_nodes)]
         node_free = [slots_free[n * nsz:(n + 1) * nsz].sum()
-                     for n in range(max(1, M // nsz))]
+                     for n in range(n_nodes)]
         cand_nodes = [n for n in range(len(node_load)) if node_free[n] > 0]
         cand_nodes.sort(key=lambda n: (node_load[n], node_free[n]))
         for n in cand_nodes:
@@ -280,39 +523,43 @@ def heterogeneous_sharding(loads: np.ndarray, num_devices: int, t: int,
                 return int(d)
         raise RuntimeError("no free slot — k_local too tight")
 
+    def take_fast(l, e):
+        d = place_fast(l)
+        owner_dev[l, e] = d
+        plc_rows[l][d] += 1
+        placed_fast(l, d, loads_rows[l][e])
+
+    def take_loop(l, e):
+        d = place_loop(l)
+        owner_dev[l, e] = d
+        slots_free[d] -= 1
+        dev_load[d] += loads[l, e]
+        per_layer_count[l, d] += 1
+
+    take = take_fast if vectorized else take_loop
+
     # lines 6-14: place underloaded (non-overlappable) experts first,
     # layers ordered by their max underloaded expert load, experts desc.
-    cold_sets = [(l, [e for e in range(E) if not hot[l, e]]) for l in range(L)]
-    cold_sets.sort(key=lambda le: -max([loads[le[0], e] for e in le[1]] or [0]))
-    for l, cold in cold_sets:
-        for e in sorted(cold, key=lambda e: -loads[l, e]):
-            d = place(l, e)
-            owner_dev[l, e] = d
-            slots_free[d] -= 1
-            dev_load[d] += loads[l, e]
-            per_layer_count[l, d] += 1
+    cold_load = np.where(hot, -np.inf, loads)
+    layer_key = np.where(np.isfinite(cold_load).any(1),
+                         cold_load.max(1, initial=-np.inf), 0.0)
+    for l in np.argsort(-layer_key, kind="stable"):
+        cold = np.nonzero(~hot[l])[0]
+        for e in cold[np.argsort(-loads[l, cold], kind="stable")]:
+            take(l, e)
 
     # line 16: fill remaining slots with hot (overlappable) experts —
     # they'll be replicated by Alg 1 anyway, so spread arbitrarily (we spread
     # round-robin over free slots for balance).
     for l in range(L):
-        for e in range(E):
-            if owner_dev[l, e] >= 0:
-                continue
-            d = place(l, e)
-            owner_dev[l, e] = d
-            slots_free[d] -= 1
-            dev_load[d] += loads[l, e]
-            per_layer_count[l, d] += 1
+        for e in np.nonzero(owner_dev[l] < 0)[0]:
+            take(l, int(e))
 
-    # assign buffer rows
-    owner_row = np.zeros((L, E), np.int32)
-    next_row = np.zeros(M, np.int32)
-    for l in range(L):
-        for e in range(E):
-            d = owner_dev[l, e]
-            owner_row[l, e] = next_row[d]
-            next_row[d] += 1
+    # assign buffer rows: the row of (l, e) is the number of PRIOR
+    # layer-major allocations on the same device — a segment rank over
+    # the flat owner keys
+    owner_row = _segment_rank(owner_dev.reshape(-1).astype(np.int64)) \
+        .astype(np.int32).reshape(L, E)
     # NOTE: k_local is the STATIC compute-slot width of the compiled step —
     # keep the caller-provided bound (uniform across re-shardings), not the
     # realized max, so re-sharding never changes compiled shapes.

@@ -9,8 +9,15 @@ is plain pytree params stacked along the scan axis.
 With a mesh, MoE materialization is SOFTWARE-PIPELINED one layer ahead
 (``_pipelined_blocks``): the scan carries the next MoE layer's prefetched
 compute slots, so each layer's SparseAllGather overlaps the previous
-layer's attention/FFN compute.  ``cfg.moe.rematerialize`` picks what the
-backward does about those slots (save | gather | block — see the
+layer's attention/FFN compute.  ``forward(premat=...)`` takes the
+STEP-HOISTED slots instead (``moe_core.materialize_stack`` built all L
+layers once, before the train step's gradient-accumulation loop) and
+issues no materialization collectives at all.  ``cfg.moe.rematerialize``
+picks what the backward does about those slots (save | gather | block),
+and in gather mode ``cfg.moe.bwd_prefetch`` threads the explicit
+BACKWARD re-gather pipeline through the blocks — layer l−1's re-gather
+is issued before layer l's backward kernels, transported as the
+cotangent of a chunk-shaped pipe channel in the scan carry (see the
 ``repro.core.moe`` docstring).
 """
 from __future__ import annotations
@@ -149,7 +156,11 @@ def init_params(cfg: ModelConfig, key, ep: int = 1):
 # MoE FFN wrapper: flatten tokens, pad to device count, run the FSSDP core
 # ---------------------------------------------------------------------------
 def _moe_ffn(cfg: ModelConfig, rt: Runtime, x, wr, buf, pa: PlanArrays,
-             premat=None):
+             premat=None, pipe=None, pa_prev=None, warm_start=False):
+    """Returns (y, aux, pipe_out).  ``pipe``/``pa_prev``/``warm_start``
+    drive the explicit backward re-gather pipeline (gather mode with
+    ``cfg.moe.bwd_prefetch`` — see moe_core.moe_layer_regather_pipelined);
+    ``pipe_out`` is None whenever no pipe channel is threaded."""
     b, s, d = x.shape
     t = b * s
     n_dev = rt.num_devices
@@ -167,12 +178,21 @@ def _moe_ffn(cfg: ModelConfig, rt: Runtime, x, wr, buf, pa: PlanArrays,
         xt = jnp.concatenate([xt, jnp.zeros((pad, d), x.dtype)])
         valid = jnp.concatenate([valid, jnp.zeros((pad,), bool)])
     xt = rt.constrain(xt, ("tokens", None))
+    pipe_out = None
     if premat is not None and cfg.moe.rematerialize == "gather" \
             and rt.moe.mesh is not None:
         # true re-materialization: no chunk residuals, the backward
-        # replays the SparseAllGather (see moe_layer_regather)
-        y, aux = moe_core.moe_layer_regather(cfg, rt.moe, xt, wr, buf, pa,
-                                             valid, premat)
+        # replays the SparseAllGather
+        if pipe is not None:
+            # explicit backward pipeline: this layer's backward consumes
+            # slots gathered one backward step earlier and issues the
+            # previous layer's re-gather ahead of its own kernels
+            y, aux, pipe_out = moe_core.moe_layer_regather_pipelined(
+                cfg, rt.moe, xt, wr, buf, pa, pa_prev, valid, premat,
+                pipe, warm_start=warm_start)
+        else:
+            y, aux = moe_core.moe_layer_regather(cfg, rt.moe, xt, wr, buf,
+                                                 pa, valid, premat)
     else:
         y, aux = moe_core.moe_layer(cfg, rt.moe, xt, wr, buf, pa, valid,
                                     premat=premat)
@@ -180,7 +200,7 @@ def _moe_ffn(cfg: ModelConfig, rt: Runtime, x, wr, buf, pa: PlanArrays,
     if pad:
         y = y[:t]
     y = rt.constrain(y, ("tokens_batch", None))
-    return y.reshape(b, s, d), aux
+    return y.reshape(b, s, d), aux, pipe_out
 
 
 # ---------------------------------------------------------------------------
@@ -189,7 +209,8 @@ def _moe_ffn(cfg: ModelConfig, rt: Runtime, x, wr, buf, pa: PlanArrays,
 def _superblock(cfg: ModelConfig, rt: Runtime, params_sb, x, positions,
                 moe_xs, enc_out=None, causal: bool = True,
                 collect_cache: bool = False, prefetch=None,
-                seg_remat: bool = False):
+                seg_remat: bool = False, premat_c=None, pipe=None,
+                pa_prev0=None, tail: bool = False):
     """moe_xs: (routers:(c,d,E), plan arrays with leading c, buffer) or None.
     collect_cache: also return the per-sublayer decode cache (prefill).
 
@@ -201,8 +222,25 @@ def _superblock(cfg: ModelConfig, rt: Runtime, params_sb, x, positions,
     block's first MoE layer, or None for the last block.  Each MoE position
     issues the NEXT layer's SparseAllGather immediately BEFORE its own
     grouped-GEMM consumer, so the collectives overlap all the compute in
-    between (§4.2).  With prefetch the return gains a trailing
-    ``chunks_out`` (the carry for the next block; None on the last).
+    between (§4.2).
+
+    premat_c: (c, M, K, chunk_len) STEP-HOISTED compute slots for this
+    block's MoE layers (``moe_core.materialize_stack`` built all L layers'
+    slots once, before the gradient-accumulation loop) — each layer
+    consumes its slice directly and NO materialization collectives are
+    issued anywhere in the forward.  Mutually exclusive with prefetch's
+    gather issuing.
+
+    pipe / pa_prev0 / tail: the explicit BACKWARD re-gather pipeline
+    (gather mode with ``cfg.moe.bwd_prefetch``): ``pipe`` is the
+    chunk-shaped channel whose cotangent transports each layer's
+    re-gathered slots backward; ``pa_prev0`` is the plan slice of the MoE
+    layer preceding this block's first (the backward prefetch target at
+    the block boundary); ``tail`` marks the LAST superblock, whose final
+    MoE layer self-gathers at the head of the backward (warm start).
+
+    With prefetch or premat_c the return is
+    ``(x, ys, chunks_out, pipe_out)``.
 
     seg_remat: checkpoint the attention/mamba and dense-FFN SEGMENTS
     individually (rematerialize="gather": a block-level ``jax.checkpoint``
@@ -249,8 +287,11 @@ def _superblock(cfg: ModelConfig, rt: Runtime, params_sb, x, positions,
         if j in moe_pos:
             routers, pa_c, buf = moe_xs
             pa_j = jax.tree.map(lambda a: a[mi], pa_c)
+            if premat_c is not None:
+                # step-hoisted slots: slice, don't gather
+                cur_chunks = premat_c[mi]
             nxt = None
-            if prefetch is not None:
+            if prefetch is not None and premat_c is None:
                 if mi + 1 < len(moe_pos):
                     pa_n = jax.tree.map(lambda a: a[mi + 1], pa_c)
                 else:
@@ -267,9 +308,17 @@ def _superblock(cfg: ModelConfig, rt: Runtime, params_sb, x, positions,
                         # chunks out of the differentiated scan state (no
                         # dead cotangent carry, no transposed producer)
                         nxt = jax.lax.stop_gradient(nxt)
+            pa_prev = None
+            if pipe is not None:
+                pa_prev = (jax.tree.map(lambda a: a[mi - 1], pa_c)
+                           if mi > 0 else pa_prev0)
             h = ly.apply_norm(p["ln2"], x, cfg.norm)
-            y, aux = _moe_ffn(cfg, rt, h, routers[mi], buf, pa_j,
-                              premat=cur_chunks)
+            y, aux, pipe_out = _moe_ffn(
+                cfg, rt, h, routers[mi], buf, pa_j, premat=cur_chunks,
+                pipe=pipe, pa_prev=pa_prev,
+                warm_start=tail and mi == len(moe_pos) - 1)
+            if pipe is not None:
+                pipe = pipe_out
             cur_chunks = nxt
             x = x + y
             aux_list.append(aux)
@@ -285,8 +334,9 @@ def _superblock(cfg: ModelConfig, rt: Runtime, params_sb, x, positions,
     aux_acc = (jax.tree.map(lambda *xs: jnp.stack(xs), *aux_list)
                if aux_list else None)
     out_ys = (aux_acc, cache) if collect_cache else aux_acc
-    if prefetch is not None:
-        return x, out_ys, cur_chunks
+    if prefetch is not None or premat_c is not None:
+        return x, out_ys, (None if premat_c is not None else cur_chunks), \
+            pipe
     return x, out_ys
 
 
@@ -329,8 +379,16 @@ def _use_pipeline(cfg: ModelConfig, rt: Runtime) -> bool:
             and cfg.moe.rematerialize != "block")
 
 
+def _use_bwd_pipe(cfg: ModelConfig, rt: Runtime) -> bool:
+    """Explicit backward re-gather pipeline: gather mode + bwd_prefetch
+    (the pipe channel only exists where the regather VJP consumes it)."""
+    return (cfg.moe.enabled and cfg.moe.rematerialize == "gather"
+            and cfg.moe.bwd_prefetch and rt.moe.mesh is not None)
+
+
 def _pipelined_blocks(cfg: ModelConfig, rt: Runtime, params, x, positions,
-                      moe_xs, enc_out, causal: bool, collect_cache: bool):
+                      moe_xs, enc_out, causal: bool, collect_cache: bool,
+                      premat=None):
     """Superblock stack with the one-layer-ahead SparseAllGather pipeline.
 
     A warm-up ``materialize_layer`` builds MoE layer 0's compute slots
@@ -343,46 +401,90 @@ def _pipelined_blocks(cfg: ModelConfig, rt: Runtime, params, x, positions,
     in the HLO.  The dry-run's depth extrapolation stays exact — the
     marginal block is the scan body.  Peak slot memory is two layers'
     (M, K, chunk_len) chunks instead of one.
+
+    premat: optional STEP-HOISTED (L_moe, M, K, chunk_len) compute slots
+    (``moe_core.materialize_stack``) — every layer consumes its slice and
+    the forward issues NO materialization collectives at all (the train
+    step built them once, before the gradient-accumulation loop).
+
+    In gather mode with ``cfg.moe.bwd_prefetch`` the blocks additionally
+    thread the backward pipe channel: a chunk-shaped zeros value chained
+    through every MoE consume whose COTANGENT transports each layer's
+    backward re-gather one layer ahead of its dgrad/wgrad consumer (see
+    ``moe_core.moe_layer_regather_pipelined``).  The last block runs
+    outside the scan, so its final MoE layer statically knows it heads
+    the backward and self-gathers (warm start).
     """
     routers_r, pa_r, buf = moe_xs
     n_sb = cfg.num_superblocks
     policy = _remat_policy(cfg)
     dt = jnp.dtype(cfg.dtype)
-    ch = moe_core.materialize_layer(
-        cfg, rt.moe, buf, jax.tree.map(lambda a: a[0, 0], pa_r), dtype=dt)
-    if cfg.moe.rematerialize == "gather":
-        ch = jax.lax.stop_gradient(ch)       # see _superblock: the regather
-        # VJP owns the buffer grad; the prefetch chain stays undifferentiated
-
     gather = cfg.moe.rematerialize == "gather"
 
-    def run_block(x_, ch_, params_sb, routers_c, pa_c, pa_nx):
-        def blk(params_sb_, x2, ch2, routers2, pa2, pa_nx2, buf2, enc2):
+    premat_r = None
+    if premat is not None:
+        c = moe_core.num_moe_layers(cfg) // n_sb
+        premat_r = premat.reshape(n_sb, c, *premat.shape[1:])
+        ch = None
+    else:
+        ch = moe_core.materialize_layer(
+            cfg, rt.moe, buf, jax.tree.map(lambda a: a[0, 0], pa_r),
+            dtype=dt)
+        if gather:
+            ch = jax.lax.stop_gradient(ch)   # see _superblock: the regather
+            # VJP owns the buffer grad; the prefetch chain stays
+            # undifferentiated
+
+    pipe = None
+    pa_prev_r = None
+    if _use_bwd_pipe(cfg, rt):
+        shape = premat.shape[1:] if premat is not None else ch.shape
+        pipe = jnp.zeros(shape, dt)
+        # plan slice of the MoE layer PRECEDING each block's first: block s
+        # gets block s-1's last layer; block 0 gets its own first layer
+        # (its emitted backward prefetch heads the chain — dead, DCE'd)
+        pa_prev_r = jax.tree.map(
+            lambda a: jnp.concatenate([a[0:1, 0], a[:-1, -1]], axis=0),
+            pa_r)
+
+    def run_block(x_, ch_, pipe_, params_sb, routers_c, pa_c, pa_nx,
+                  premat_c, pa_p0, tail):
+        def blk(params_sb_, x2, ch2, pipe2, routers2, pa2, pa_nx2,
+                premat2, pa_p2, buf2, enc2):
             return _superblock(cfg, rt, params_sb_, x2, positions,
                                (routers2, pa2, buf2), enc2, causal,
-                               collect_cache, prefetch=(ch2, pa_nx2),
-                               seg_remat=cfg.remat and gather)
+                               collect_cache,
+                               prefetch=(None if premat2 is not None
+                                         else (ch2, pa_nx2)),
+                               seg_remat=cfg.remat and gather,
+                               premat_c=premat2, pipe=pipe2,
+                               pa_prev0=pa_p2, tail=tail)
         if cfg.remat and not gather:
             # gather mode must NOT checkpoint the whole block: checkpoint
             # stores its inputs, which would pin the carried (M, K, chunk)
             # prefetch per scan step.  _superblock checkpoints the
             # attention/FFN segments instead (seg_remat above).
             blk = jax.checkpoint(blk, policy=policy)
-        return blk(params_sb, x_, ch_, routers_c, pa_c, pa_nx, buf,
-                   enc_out)
+        return blk(params_sb, x_, ch_, pipe_, routers_c, pa_c, pa_nx,
+                   premat_c, pa_p0, buf, enc_out)
 
     def slice_s(s):
         return (jax.tree.map(lambda a: a[s], params["blocks"]),
-                routers_r[s], jax.tree.map(lambda a: a[s], pa_r))
+                routers_r[s], jax.tree.map(lambda a: a[s], pa_r),
+                None if premat_r is None else premat_r[s],
+                None if pa_prev_r is None else jax.tree.map(
+                    lambda a: a[s], pa_prev_r))
 
     if rt.unroll:
         ys_list = []
         for s in range(n_sb):
-            params_sb, routers_c, pa_c = slice_s(s)
+            params_sb, routers_c, pa_c, premat_c, pa_p0 = slice_s(s)
             pa_nx = (jax.tree.map(lambda a: a[s + 1, 0], pa_r)
-                     if s + 1 < n_sb else None)
-            x, ys_s, ch = run_block(x, ch, params_sb, routers_c, pa_c,
-                                    pa_nx)
+                     if s + 1 < n_sb and premat_r is None else None)
+            x, ys_s, ch, pipe = run_block(x, ch, pipe, params_sb,
+                                          routers_c, pa_c, pa_nx,
+                                          premat_c, pa_p0,
+                                          tail=s == n_sb - 1)
             ys_list.append(ys_s)
         return x, jax.tree.map(lambda *a: jnp.stack(a), *ys_list)
 
@@ -391,18 +493,24 @@ def _pipelined_blocks(cfg: ModelConfig, rt: Runtime, params, x, positions,
         head = lambda a: a[:-1]
         xs = (jax.tree.map(head, params["blocks"]),
               (routers_r[:-1], jax.tree.map(head, pa_r),
-               jax.tree.map(lambda a: a[1:, 0], pa_r)))
+               (None if premat_r is not None
+                else jax.tree.map(lambda a: a[1:, 0], pa_r)),
+               None if premat_r is None else premat_r[:-1],
+               None if pa_prev_r is None else jax.tree.map(head,
+                                                           pa_prev_r)))
 
         def body(carry, xs_s):
-            x_c, ch_c = carry
-            params_sb, (routers_c, pa_c, pa_nx) = xs_s
-            x2, ys_s, ch2 = run_block(x_c, ch_c, params_sb, routers_c,
-                                      pa_c, pa_nx)
-            return (x2, ch2), ys_s
+            x_c, ch_c, pipe_c = carry
+            params_sb, (routers_c, pa_c, pa_nx, premat_c, pa_p0) = xs_s
+            x2, ys_s, ch2, pipe2 = run_block(x_c, ch_c, pipe_c, params_sb,
+                                             routers_c, pa_c, pa_nx,
+                                             premat_c, pa_p0, tail=False)
+            return (x2, ch2, pipe2), ys_s
 
-        (x, ch), ys_head = jax.lax.scan(body, (x, ch), xs)
-    params_sb, routers_c, pa_c = slice_s(-1)
-    x, ys_last, _ = run_block(x, ch, params_sb, routers_c, pa_c, None)
+        (x, ch, pipe), ys_head = jax.lax.scan(body, (x, ch, pipe), xs)
+    params_sb, routers_c, pa_c, premat_c, pa_p0 = slice_s(-1)
+    x, ys_last, _, _ = run_block(x, ch, pipe, params_sb, routers_c, pa_c,
+                                 None, premat_c, pa_p0, tail=True)
     if ys_head is None:
         return x, jax.tree.map(lambda a: a[None], ys_last)
     return x, jax.tree.map(lambda h, t: jnp.concatenate([h, t[None]], 0),
@@ -412,7 +520,8 @@ def _pipelined_blocks(cfg: ModelConfig, rt: Runtime, params, x, positions,
 def forward(cfg: ModelConfig, rt: Runtime, params, tokens=None, *,
             embeds=None, positions=None, pa: Optional[PlanArrays] = None,
             encoder_input=None, causal: bool = True,
-            collect_cache: bool = False, return_hidden: bool = False):
+            collect_cache: bool = False, return_hidden: bool = False,
+            premat=None):
     """Returns (logits, aux_tree) — or (logits, aux, cache) when
     ``collect_cache`` (prefill: the cache holds rotated K/V per layer, SSM
     states, and cross-attention K/V for enc-dec models).
@@ -420,6 +529,12 @@ def forward(cfg: ModelConfig, rt: Runtime, params, tokens=None, *,
     tokens: (B, S) int32 — or embeds: (B, S, D) for frontend-stub archs.
     encoder_input: (B, S_enc, D) frame/patch embeddings (whisper).
     pa: stacked PlanArrays (L_moe leading dim) for MoE archs.
+    premat: optional stacked (L_moe, M, K, chunk_len) pre-materialized
+    compute slots (``moe_core.materialize_stack``) — the train step builds
+    every layer's slots ONCE (before its gradient-accumulation loop) and
+    each MoE layer consumes its slice, so the forward issues no
+    materialization collectives.  Requires the pipeline path (a mesh,
+    ``cfg.moe.pipeline``, rematerialize != "block").
     """
     dt = jnp.dtype(cfg.dtype)
     if embeds is None:
@@ -458,9 +573,14 @@ def forward(cfg: ModelConfig, rt: Runtime, params, tokens=None, *,
         x, ys = blk(params_sb, carry, positions, m_xs, enc_out)
         return x, ys
 
+    if premat is not None:
+        assert moe_xs is not None and _use_pipeline(cfg, rt), (
+            "forward(premat=...) needs the pipelined MoE path (a mesh, "
+            "moe.pipeline=True, rematerialize != 'block')")
     if moe_xs is not None and _use_pipeline(cfg, rt):
         x, ys = _pipelined_blocks(cfg, rt, params, x, positions, moe_xs,
-                                  enc_out, causal, collect_cache)
+                                  enc_out, causal, collect_cache,
+                                  premat=premat)
     else:
         xs = (params["blocks"],)
         if moe_xs is not None:
@@ -614,9 +734,9 @@ def decode_step(cfg: ModelConfig, rt: Runtime, params, cache, tokens, pos,
             if j in moe_pos:
                 h = ly.apply_norm(p["ln2"], x, cfg.norm)
                 pa_j = jax.tree.map(lambda a: a[mi], pa_c)
-                y, _ = _moe_ffn(cfg, rt, h, routers_c[mi], moe_xs[2], pa_j,
-                                premat=None if premat_c is None
-                                else premat_c[mi])
+                y, _, _ = _moe_ffn(cfg, rt, h, routers_c[mi], moe_xs[2],
+                                   pa_j, premat=None if premat_c is None
+                                   else premat_c[mi])
                 x = x + y
                 mi += 1
             elif kind != "mamba":

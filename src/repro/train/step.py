@@ -5,11 +5,24 @@ Hecate scheduler re-plans every iteration with zero recompilation.  This
 holds under the software-pipelined materialization too — the forward
 shifts the SAME stacked tables by one MoE layer to drive the one-layer-
 ahead SparseAllGather prefetch (repro.models.model._pipelined_blocks), so
-plan swaps still never retrace.  What the backward does about the
-materialized chunks is ``cfg.moe.rematerialize`` ("save" | "gather" |
-"block", see repro.core.moe); under gradient accumulation every
-microbatch runs its own forward, so each microbatch re-issues the L
-prefetch gathers and (in "gather" mode) the L backward re-gathers.
+plan swaps still never retrace.
+
+Under gradient accumulation the materialization is HOISTED out of the
+microbatch loop: ``moe_core.materialize_stack`` builds every MoE layer's
+compute slots once at the head of the step (one stacked traceable
+SparseAllGather region) and every microbatch's forward consumes them via
+``premat=`` — L materialization gathers per accumulated step instead of
+L·n (jaxpr-asserted in tests/test_step_overlap.py).  In "save" mode the
+hoisted slots are ONE shared set of chunk residuals instead of n: each
+microbatch's backward contributes a chunk cotangent, the scan accumulates
+them, and a single explicit ``jax.linear_transpose`` of the stacked
+gather — the stacked SparseReduceScatter — lands the sum on the owning
+buffer shards once per step.  In "gather" mode the hoisted slots are
+detached (the regather VJP owns the buffer grad and re-gathers per
+microbatch, one layer ahead of its consumers — see
+``moe_core.moe_layer_regather_pipelined``).  What the backward does about
+the materialized chunks remains ``cfg.moe.rematerialize`` ("save" |
+"gather" | "block", see repro.core.moe).
 """
 from __future__ import annotations
 
@@ -20,6 +33,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.common.config import ModelConfig, TrainConfig
+from repro.core import moe as moe_core
 from repro.core.moe import MoEAux, PlanArrays, num_moe_layers
 from repro.models import model as mdl
 from repro.optim import adamw
@@ -89,10 +103,10 @@ def _unpack_batch(cfg: ModelConfig, batch: Dict[str, jnp.ndarray]):
 
 
 def loss_fn(cfg: ModelConfig, rt: mdl.Runtime, params, batch,
-            pa: Optional[PlanArrays], causal: bool = True):
+            pa: Optional[PlanArrays], causal: bool = True, premat=None):
     kwargs, labels = _unpack_batch(cfg, batch)
     hidden, aux = mdl.forward(cfg, rt, params, pa=pa, causal=causal,
-                              return_hidden=True, **kwargs)
+                              return_hidden=True, premat=premat, **kwargs)
     loss = chunked_xent(cfg, params["embed"], hidden, labels)
     metrics = {"xent": loss}
     if aux is not None:
@@ -115,7 +129,8 @@ def loss_fn(cfg: ModelConfig, rt: mdl.Runtime, params, batch,
 
 
 def build_train_step(cfg: ModelConfig, rt: mdl.Runtime, tc: TrainConfig,
-                     causal: bool = True, grad_shardings=None):
+                     causal: bool = True, grad_shardings=None,
+                     hoist_premat: Optional[bool] = None):
     """Returns fn(state, batch, pa) -> (state, metrics).  Jit it with the
     desired in/out shardings (see repro.launch).
 
@@ -124,21 +139,58 @@ def build_train_step(cfg: ModelConfig, rt: mdl.Runtime, tc: TrainConfig,
     weight grads onto their owning shards instead of all-reducing full
     tensors everywhere (measured on qwen1.5-110b: the unconstrained step
     all-reduced 1.4 TB/device/step of f32 weight grads — §Perf).
+
+    hoist_premat: None (auto — hoist the SparseAllGathers out of the
+    gradient-accumulation loop whenever the pipelined MoE path is active
+    and tc.microbatch > 1), or force on/off.  ``False`` keeps the legacy
+    per-microbatch materialization (each microbatch's forward re-issues
+    all L gathers) — the parity baseline in tests/test_step_overlap.py.
     """
 
-    _g = jax.value_and_grad(
-        lambda p, b, a: loss_fn(cfg, rt, p, b, a, causal), has_aux=True)
+    n = max(tc.microbatch, 1)
+    hoist = (cfg.moe.enabled and rt.moe.mesh is not None and n > 1
+             and mdl._use_pipeline(cfg, rt)) if hoist_premat is None \
+        else hoist_premat
+    dt = jnp.dtype(cfg.dtype)
 
-    def grad_fn(p, b, a):
-        out, g = _g(p, b, a)
+    def _loss(p, b, a, pm):
+        return loss_fn(cfg, rt, p, b, a, causal, premat=pm)
+
+    _g = jax.value_and_grad(_loss, has_aux=True)
+    # save-mode hoisting also differentiates the SHARED premat: each
+    # microbatch emits a chunk cotangent, the scan sums them, and one
+    # linear_transpose of the stacked gather (below) turns the sum into
+    # the buffer gradient — the per-step stacked SparseReduceScatter
+    _g2 = jax.value_and_grad(_loss, argnums=(0, 3), has_aux=True)
+
+    def grad_fn(p, b, a, pm=None, with_premat_grad=False):
+        if with_premat_grad:
+            out, (g, gp) = _g2(p, b, a, pm)
+        else:
+            out, g = _g(p, b, a, pm)
+            gp = None
         if grad_shardings is not None:
             g = jax.lax.with_sharding_constraint(g, grad_shardings)
-        return out, g
+        return out, g, gp
 
     def train_step(state: TrainState, batch, pa: Optional[PlanArrays]):
-        n = max(tc.microbatch, 1)
+        hoisted = hoist and pa is not None and n > 1
+        premat = None
+        if hoisted:
+            # ALL L layers' compute slots, built once per step — one
+            # stacked traceable SparseAllGather region at the step head,
+            # shared by every microbatch's forward (premat=)
+            premat = moe_core.materialize_stack(
+                cfg, rt.moe, state.params["moe_buffer"], pa, dtype=dt,
+                name=False)
+            if cfg.moe.rematerialize == "gather":
+                # the regather VJP owns the buffer grad (it re-gathers per
+                # microbatch); detaching keeps the stacked producer out of
+                # AD — no dead step-level transpose
+                premat = jax.lax.stop_gradient(premat)
+        premat_grad = hoisted and cfg.moe.rematerialize == "save"
         if n == 1:
-            (_, metrics), grads = grad_fn(state.params, batch, pa)
+            (_, metrics), grads, _ = grad_fn(state.params, batch, pa)
         else:
             # gradient accumulation: scan over microbatches so only one
             # microbatch's activations are ever live (large models at
@@ -148,22 +200,38 @@ def build_train_step(cfg: ModelConfig, rt: mdl.Runtime, tc: TrainConfig,
                 batch)
 
             def mb_body(acc, mb):
-                g_acc, m_acc = acc
-                (_, m), g = grad_fn(state.params, mb, pa)
+                g_acc, gp_acc, m_acc = acc
+                (_, m), g, gp = grad_fn(state.params, mb, pa, premat,
+                                        premat_grad)
                 g_acc = jax.tree.map(jnp.add, g_acc, g)
+                if premat_grad:
+                    gp_acc = gp_acc + gp.astype(jnp.float32)
                 m_acc = jax.tree.map(jnp.add, m_acc, m)
-                return (g_acc, m_acc), None
+                return (g_acc, gp_acc, m_acc), None
 
             zeros_g = jax.tree.map(
                 lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
-            (_, m0), g0 = grad_fn(state.params,
-                                  jax.tree.map(lambda a: a[0], micro), pa)
-            (grads, msum), _ = jax.lax.scan(
-                mb_body, (jax.tree.map(jnp.add, zeros_g, g0), m0),
+            (_, m0), g0, gp0 = grad_fn(state.params,
+                                       jax.tree.map(lambda a: a[0], micro),
+                                       pa, premat, premat_grad)
+            gp0 = gp0.astype(jnp.float32) if premat_grad else jnp.zeros(())
+            (grads, gpm, msum), _ = jax.lax.scan(
+                mb_body, (jax.tree.map(jnp.add, zeros_g, g0), gp0, m0),
                 jax.tree.map(lambda a: a[1:], micro))
             inv = 1.0 / n
             grads = jax.tree.map(lambda g: g * inv, grads)
             metrics = jax.tree.map(lambda m: m * inv, msum)
+            if premat_grad:
+                # stacked SparseReduceScatter: ONE transpose of the
+                # step-level gather lands the accumulated chunk cotangent
+                # on the owning buffer shards
+                dbuf = jax.linear_transpose(
+                    lambda b: moe_core.materialize_stack(
+                        cfg, rt.moe, b, pa, dtype=dt, name=False),
+                    state.params["moe_buffer"])(gpm.astype(dt))[0]
+                grads = dict(grads)
+                grads["moe_buffer"] = grads["moe_buffer"] \
+                    + dbuf.astype(jnp.float32) * inv
             if "expert_counts" in metrics:
                 metrics["expert_counts"] = metrics["expert_counts"] * n
         new_params, new_opt, opt_metrics = adamw.update(

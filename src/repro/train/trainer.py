@@ -51,8 +51,8 @@ def reshard_perm(old: ShardingPlan, new: ShardingPlan) -> np.ndarray:
 
 @dataclasses.dataclass
 class HecateScheduler:
-    """Owns the sharding plan, predictor, per-step materialization, and the
-    calibration stage (§4.2).
+    """Owns the sharding plan, predictor, per-step materialization, the
+    calibration stage (§4.2), and the PLAN-AHEAD thread.
 
     Calibration adaptation (DESIGN.md): under XLA's static graphs a plan
     cannot change mid-step (the paper re-plans after the gate, before
@@ -61,6 +61,20 @@ class HecateScheduler:
     more than ``calibration_margin`` of modeled latency vs a plan built on
     the latest loads, the next step uses the re-planned placement
     immediately (still zero recompiles — plans are runtime tables).
+
+    Plan-ahead (``async_plan``, default on): Algorithm 1 is host-side
+    numpy, so ``train_loop`` computes step i+1's plan on a background
+    thread WHILE step i runs on-device — exactly the timeliness failure
+    the paper pins on rearrangement systems (the plan is ready when the
+    devices are, instead of serializing host planning between steps).
+    ``plan_ahead()`` snapshots the predictor's current prediction and
+    submits the Alg-1 greedy; ``plan()`` consumes the finished future.
+    The prefetched plan is one observation stale (it cannot see the
+    counts of the step still in flight) — within the paper's tolerance,
+    since the predictor is a w=5 sliding-window mean and the calibration
+    stage overrides the prefetch whenever the freshest loads disagree
+    enough to matter.  Resharding invalidates the prefetch (the sharding
+    it was planned against is gone).
     """
 
     cfg: ModelConfig
@@ -72,6 +86,7 @@ class HecateScheduler:
     calibrate: bool = True
     calibration_margin: float = 0.05
     tokens_per_step: float = 0.0    # for the latency model; 0 = est later
+    async_plan: bool = True         # plan step i+1 while step i runs
 
     def __post_init__(self):
         L = moe_core.num_moe_layers(self.cfg)
@@ -80,22 +95,101 @@ class HecateScheduler:
         self.sharding = homogeneous_sharding(L, E, self.ep)
         self._calibrated: Optional[MaterializationPlan] = None
         self._last_plan: Optional[MaterializationPlan] = None
+        self._executor = None
+        self._pending = None        # (future, sharding identity)
+        self._prefetched_tables = None
         self.calibration_events = 0
+        self.plan_ahead_hits = 0
 
+    # ---- plan-ahead machinery ----------------------------------------
+    def _pool(self):
+        if self._executor is None:
+            from concurrent.futures import ThreadPoolExecutor
+            self._executor = ThreadPoolExecutor(
+                max_workers=1, thread_name_prefix="hecate-plan")
+        return self._executor
+
+    def plan_ahead(self) -> None:
+        """Kick off computing the NEXT step's materialization plan — AND
+        its runtime tables — on the background thread.  Call right after
+        dispatching the train step: the Alg-1 greedy and the
+        ``plan_tables`` build then overlap the device computation, leaving
+        only the device transfer on the critical path.  The prediction is
+        snapshotted on the caller's thread so the worker never races
+        predictor updates."""
+        if not self.async_plan or self.impl == "ep":
+            return
+        if self._pending is not None:       # one in flight is plenty
+            return
+        pred = self.predictor.predict()
+        sh = self.sharding
+
+        def job():
+            plan = sparse_materialization(
+                sh, pred, t=self.t, m=self.cfg.moe.slots_per_device,
+                impl=self.impl)
+            return plan, moe_core.plan_tables(plan)
+
+        self._pending = (self._pool().submit(job), sh)
+
+    def _take_pending(self):
+        """Returns (plan, numpy tables) or None."""
+        if self._pending is None:
+            return None
+        fut, sh = self._pending
+        self._pending = None
+        if sh is not self.sharding:         # resharded since — stale plan
+            fut.cancel()
+            return None
+        return fut.result()
+
+    def _drop_pending(self) -> None:
+        """Discard a prefetched plan WITHOUT joining it — the worker may
+        still be running (calibration overriding a large in-flight plan)
+        and blocking on its result would put Alg 1 back on the critical
+        path just to throw the answer away."""
+        if self._pending is not None:
+            self._pending[0].cancel()
+            self._pending = None
+
+    def close(self) -> None:
+        """Join the plan-ahead worker (tests / clean shutdown)."""
+        self._pending = None
+        if self._executor is not None:
+            self._executor.shutdown(wait=True)
+            self._executor = None
+
+    # ---- planning ----------------------------------------------------
     def plan(self) -> MaterializationPlan:
+        self._prefetched_tables = None
         if self.impl == "ep":
+            # plan_ahead never submits for ep — nothing pending to drop
             plan = ep_materialization(self.sharding)
         elif self._calibrated is not None:
+            # calibration saw the freshest loads — it beats the prefetch
             plan, self._calibrated = self._calibrated, None
+            self._drop_pending()
         else:
-            plan = sparse_materialization(
-                self.sharding, self.predictor.predict(), t=self.t,
-                m=self.cfg.moe.slots_per_device, impl=self.impl)
+            got = self._take_pending()
+            if got is not None:
+                plan, self._prefetched_tables = got
+                self.plan_ahead_hits += 1
+            else:
+                plan = sparse_materialization(
+                    self.sharding, self.predictor.predict(), t=self.t,
+                    m=self.cfg.moe.slots_per_device, impl=self.impl)
         self._last_plan = plan
         return plan
 
     def plan_arrays(self) -> moe_core.PlanArrays:
-        return moe_core.plan_to_arrays(self.plan())
+        """Device tables for the next step — from the plan-ahead thread's
+        prefetched numpy tables when available (only the host->device
+        transfer remains on the critical path)."""
+        plan = self.plan()
+        tables, self._prefetched_tables = self._prefetched_tables, None
+        if tables is None:
+            tables = moe_core.plan_tables(plan)
+        return moe_core.tables_to_device(tables)
 
     def observe(self, counts: np.ndarray) -> None:
         counts = np.asarray(counts, np.float64)
@@ -112,8 +206,14 @@ class HecateScheduler:
         cand = sparse_materialization(
             self.sharding, real_loads, t=self.t,
             m=self.cfg.moe.slots_per_device, impl=self.impl)
-        # evaluate on the most imbalanced layer (cheap, representative)
-        layer = int(np.argmax(real_loads.max(1) / real_loads.mean(1)))
+        # evaluate on the most imbalanced layer (cheap, representative);
+        # a layer whose tokens were ALL dropped has mean 0 — its
+        # imbalance ratio is meaningless, not infinite, so rank it last
+        # instead of dividing by zero
+        means = real_loads.mean(1)
+        ratio = np.where(means > 0,
+                         real_loads.max(1) / np.maximum(means, 1e-12), 0.0)
+        layer = int(np.argmax(ratio))
         base = placement_latency_safe(ctx, self._last_plan, real_loads,
                                       layer)
         gain = calibration_gain(ctx, self._last_plan, cand, real_loads,
@@ -131,7 +231,7 @@ class HecateScheduler:
         if not changed:
             return None
         perm = reshard_perm(self.sharding, new)
-        self.sharding = new
+        self.sharding = new                 # _take_pending sees the swap
         return perm
 
 
@@ -163,7 +263,16 @@ def train_loop(cfg: ModelConfig, rt, tc: TrainConfig,
                log_every: int = 10,
                callback: Optional[Callable] = None,
                metric_logger=None):
-    """Single-host training driver (used by examples + e2e tests)."""
+    """Single-host training driver (used by examples + e2e tests).
+
+    Planning runs OFF the critical path: the jitted step is dispatched
+    asynchronously, and while the devices execute it the scheduler's
+    background thread computes step i+1's materialization plan
+    (``HecateScheduler.plan_ahead``) — the loop only blocks when it reads
+    the step's metrics back.  ``plan_arrays()`` at the top of the next
+    iteration then consumes the finished plan instead of serializing an
+    Alg-1 run between steps (measured in benchmarks/planner_microbench.py).
+    """
     num_steps = num_steps or tc.total_steps
     if state is None:
         state = step_lib.init_state(cfg, jax.random.PRNGKey(tc.seed),
@@ -172,32 +281,44 @@ def train_loop(cfg: ModelConfig, rt, tc: TrainConfig,
         train_step_fn = jax.jit(step_lib.build_train_step(cfg, rt, tc))
     history = []
     it = iter(stream)
-    for i in range(num_steps):
-        batch = {k: jnp.asarray(v) for k, v in next(it).items()}
-        pa = None
-        if scheduler is not None and cfg.moe.enabled:
-            perm = scheduler.maybe_reshard(i)
-            if perm is not None:
-                state = apply_reshard(state, perm)
-            pa = scheduler.plan_arrays()
-        t0 = time.perf_counter()
-        state, metrics = train_step_fn(state, batch, pa)
-        metrics = jax.tree.map(np.asarray, metrics)
-        dt = time.perf_counter() - t0
-        if scheduler is not None and "expert_counts" in metrics:
-            scheduler.observe(metrics["expert_counts"])
-        rec = {"step": i, "loss": float(metrics["loss"]),
-               "xent": float(metrics["xent"]), "time_s": dt}
-        if "dropped_frac" in metrics:
-            rec["dropped_frac"] = float(metrics["dropped_frac"])
-        if "pad_frac" in metrics:
-            rec["pad_frac"] = float(metrics["pad_frac"])
-        if metric_logger is not None:
-            rec.update(metric_logger.log(i, metrics))
-        history.append(rec)
-        if callback:
-            callback(i, state, metrics)
-        if log_every and i % log_every == 0:
-            print(f"step {i:5d}  loss {rec['loss']:.4f}  "
-                  f"xent {rec['xent']:.4f}  {dt*1e3:.0f} ms")
+    try:
+        for i in range(num_steps):
+            batch = {k: jnp.asarray(v) for k, v in next(it).items()}
+            pa = None
+            if scheduler is not None and cfg.moe.enabled:
+                perm = scheduler.maybe_reshard(i)
+                if perm is not None:
+                    state = apply_reshard(state, perm)
+                pa = scheduler.plan_arrays()
+            t0 = time.perf_counter()
+            # async dispatch: the call returns with the step in flight
+            state, metrics = train_step_fn(state, batch, pa)
+            if (scheduler is not None and cfg.moe.enabled
+                    and i + 1 < num_steps):
+                # plan step i+1 while step i runs on-device
+                scheduler.plan_ahead()
+            metrics = jax.tree.map(np.asarray, metrics)  # blocks on step
+            dt = time.perf_counter() - t0
+            if scheduler is not None and "expert_counts" in metrics:
+                scheduler.observe(metrics["expert_counts"])
+            rec = {"step": i, "loss": float(metrics["loss"]),
+                   "xent": float(metrics["xent"]), "time_s": dt}
+            if "dropped_frac" in metrics:
+                rec["dropped_frac"] = float(metrics["dropped_frac"])
+            if "pad_frac" in metrics:
+                rec["pad_frac"] = float(metrics["pad_frac"])
+            if metric_logger is not None:
+                rec.update(metric_logger.log(i, metrics))
+            history.append(rec)
+            if callback:
+                callback(i, state, metrics)
+            if log_every and i % log_every == 0:
+                print(f"step {i:5d}  loss {rec['loss']:.4f}  "
+                      f"xent {rec['xent']:.4f}  {dt*1e3:.0f} ms")
+    finally:
+        if scheduler is not None:
+            # join the plan-ahead worker; the executor is re-created
+            # lazily, so a scheduler reused across train_loop calls keeps
+            # working
+            scheduler.close()
     return state, history

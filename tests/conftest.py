@@ -38,3 +38,19 @@ def run_distributed(script: str, n_devices: int = 8, timeout: int = 560):
 @pytest.fixture(scope="session")
 def dist():
     return run_distributed
+
+
+@pytest.fixture(autouse=True)
+def _clear_materialize_cache():
+    """Drop the stacked-materialize compile cache after every test.
+
+    ``moe_core._MAT_FNS`` pins compiled executables AND Meshes; without an
+    explicit clear, executables built against one test's mesh survive into
+    every later test in the process (the FIFO bound only caps growth, it
+    does not release the last N).  Import lazily so non-JAX test files
+    don't pay for it."""
+    yield
+    import sys
+    mod = sys.modules.get("repro.core.moe")
+    if mod is not None:
+        mod.clear_materialize_cache()

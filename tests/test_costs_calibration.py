@@ -86,3 +86,69 @@ def test_scheduler_no_calibration_when_stable():
     sched.plan()
     sched.observe(loads)
     assert sched.calibration_events == 0
+
+
+def test_calibration_survives_all_dropped_layer():
+    """A layer whose tokens were ALL dropped observes zero counts —
+    ``real_loads.mean(1) == 0`` used to divide by zero when picking the
+    evaluation layer.  The guard ranks such layers last instead."""
+    cfg = _cfg()
+    sched = HecateScheduler(cfg, ep=4, impl="ring", calibrate=True,
+                            calibration_margin=0.01)
+    loads = np.ones((2, 8)) * 100
+    for _ in range(5):
+        sched.observe(loads)
+    sched.plan()
+    dead = loads.copy()
+    dead[1] = 0.0                       # layer 1: everything dropped
+    with np.errstate(all="raise"):      # any div-by-zero now raises
+        sched.observe(dead)
+    # the evaluation layer must be the live one
+    all_dead = np.zeros((2, 8))
+    sched.plan()
+    with np.errstate(all="raise"):
+        sched.observe(all_dead)         # even fully-dead loads are safe
+
+
+def test_scheduler_plan_ahead_off_critical_path():
+    """plan_ahead() precomputes the next plan on the worker thread;
+    plan() consumes it and matches the synchronous result bit-for-bit."""
+    cfg = _cfg()
+    sched = HecateScheduler(cfg, ep=4, impl="ring", calibrate=False)
+    sync = HecateScheduler(cfg, ep=4, impl="ring", calibrate=False,
+                           async_plan=False)
+    loads = np.abs(np.random.default_rng(1).normal(100, 5, (2, 8)))
+    for s in (sched, sync):
+        for _ in range(3):
+            s.observe(loads)
+    sched.plan_ahead()
+    a = sched.plan()                    # consumes the prefetched plan
+    b = sync.plan()
+    assert sched.plan_ahead_hits == 1
+    assert np.array_equal(a.extra_experts, b.extra_experts)
+    assert np.array_equal(a.ring_send_rows, b.ring_send_rows)
+    # without a prefetch in flight, plan() falls back to synchronous
+    c = sched.plan()
+    assert sched.plan_ahead_hits == 1
+    assert np.array_equal(c.extra_experts, b.extra_experts)
+    sched.close()
+
+
+def test_scheduler_plan_ahead_invalidated_by_reshard():
+    """A prefetched plan built against the OLD sharding must be discarded
+    when resharding swaps the ownership tables."""
+    from repro.core.schedule import heterogeneous_sharding
+    cfg = _cfg()
+    sched = HecateScheduler(cfg, ep=4, impl="ring", calibrate=False)
+    loads = np.abs(np.random.default_rng(2).normal(100, 40, (2, 8)))
+    for _ in range(3):
+        sched.observe(loads)
+    sched.plan_ahead()
+    if sched._pending is not None:
+        sched._pending[0].result()      # let the worker finish
+    # simulate what maybe_reshard does on a changed plan
+    sched.sharding = heterogeneous_sharding(loads, 4, t=2)
+    plan = sched.plan()                 # stale prefetch dropped
+    assert sched.plan_ahead_hits == 0
+    assert plan.sharding is sched.sharding
+    sched.close()

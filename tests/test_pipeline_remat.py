@@ -6,16 +6,23 @@
    issued BEFORE layer l's grouped-GEMM consumer (the §4.2 one-layer-ahead
    pipeline).  The serial path (pipeline=False) issues no standalone
    materialization shard_maps at all (gathers live inside the layer body).
+   The BACKWARD mirror (gather mode + bwd_prefetch): layer l−1's
+   re-gather is issued before layer l's backward FFN kernels, and each
+   layer's SparseReduceScatter trails its kernels (off the critical
+   path).
 2. **Re-materialization (rematerialize="gather").**  The backward contains
-   re-gather collectives (ring ppermute count 3·m·L vs save's 2·m·L) and
-   stores NO materialized-chunk residual: no 'moe_materialized' named
-   save, and the only chunk-shaped values crossing the fwd->bwd boundary
-   are compiler-constant zeros from JAX's custom_vjp tangent
-   instantiation (matched and excluded explicitly) — never scan carries or
-   shard_map outputs.  Marginal per-layer temp memory of the compiled
-   step obeys save > gather > block.
-3. **Gradient parity** of save / gather / block (pipelined and serial) on
-   gpt_moe_s smoke, to 1e-5 relative.
+   re-gather collectives (ring ppermute count (3·L+1)·m with the explicit
+   backward pipeline — one warm-up self-gather at the backward's head
+   plus a dead, DCE'd emission at its tail — or the legacy 3·m·L with
+   ``bwd_prefetch=False``; save mode stays 2·m·L) and stores NO
+   materialized-chunk residual: no 'moe_materialized' named save, and the
+   only chunk-shaped values crossing the fwd->bwd boundary are
+   compiler-constant zeros from JAX's custom_vjp tangent instantiation
+   and the zeros-initialized backward pipe channel (matched and excluded
+   explicitly) — never shard_map outputs.  Marginal per-layer temp memory
+   of the compiled step obeys save > gather > block.
+3. **Gradient parity** of save / gather (pipelined + legacy backward) /
+   block on gpt_moe_s smoke, to 1e-5 relative.
 """
 
 PRELUDE = r"""
@@ -49,9 +56,10 @@ def setup(cfg, unroll=False, use_pallas=True):
     return rt, params, pa, toks, L
 
 
-def with_mode(c, mode, pipe=True):
+def with_mode(c, mode, pipe=True, bwd_prefetch=True):
     return c.replace(moe=dataclasses.replace(c.moe, rematerialize=mode,
-                                             pipeline=pipe))
+                                             pipeline=pipe,
+                                             bwd_prefetch=bwd_prefetch))
 
 
 def loss_fn(c, rt, params, pa, toks):
@@ -101,12 +109,46 @@ mats0 = [i for i, e in enumerate(cj0.jaxpr.eqns)
          and contains(e, {"ppermute"}) and not contains(e, {"pallas_call"})]
 assert not mats0, mats0
 print("ORDER OK")
+
+# --- backward mirror (gather + bwd_prefetch): layer l-1's re-gather is
+# issued BEFORE layer l's backward FFN kernels, and each layer's
+# SparseReduceScatter trails its kernels (off the critical path) ---
+cg = with_mode(cfg, "gather", True)
+cjg = jax.make_jaxpr(jax.grad(loss_fn(cg, rt, params, pa, toks)))(
+    params["moe_buffer"])
+mats, ffns, sprs = [], [], []
+for i, e in enumerate(cjg.jaxpr.eqns):
+    if e.primitive.name != "shard_map":
+        continue
+    if contains(e, {"pallas_call"}):
+        ffns.append(i)                      # layer body / dgrad+wgrad
+    elif contains(e, {"ppermute"}):
+        outs = [len(v.aval.shape) for v in e.outvars]
+        # gathers emit (M, K, chunk) slots; the spRS transpose emits the
+        # 2-d (rows, chunk) buffer cotangent
+        (mats if 3 in outs else sprs).append(i)
+# forward region = the first L FFN consumers; everything after is backward
+bwd_mats = [i for i in mats if i > ffns[L - 1]]
+bwd_ffns = [i for i in ffns if i > ffns[L - 1]]
+bwd_sprs = [i for i in sprs if i > ffns[L - 1]]
+# L+1 re-gathers (warm-up self-gather + one-ahead emissions, incl. the
+# dead head), 2 pallas shard_maps per layer (recompute + transpose), L spRS
+assert len(bwd_mats) == L + 1, (bwd_mats, L)
+assert len(bwd_ffns) == 2 * L, (bwd_ffns, L)
+assert len(bwd_sprs) == L, (bwd_sprs, L)
+for k in range(L):          # bwd layer k = forward layer L-1-k
+    # the NEXT backward layer's re-gather precedes this layer's kernels
+    assert bwd_mats[k + 1] < bwd_ffns[2 * k], (k, bwd_mats, bwd_ffns)
+    # the spRS lands after both of this layer's kernel shard_maps
+    assert bwd_sprs[k] > bwd_ffns[2 * k + 1], (k, bwd_sprs, bwd_ffns)
+print("BWD ORDER OK")
 """
 
 
 def test_pipelined_schedule_one_gather_per_layer_before_consumer(dist):
     out = dist(ORDER_SCRIPT, n_devices=8)
     assert "ORDER OK" in out
+    assert "BWD ORDER OK" in out
 
 
 REMAT_SCRIPT = PRELUDE + r"""
@@ -125,11 +167,19 @@ def grad_ppermutes(c):
 m = M_EXTRA
 n_save = grad_ppermutes(with_mode(cfg, "save", True))
 n_gather = grad_ppermutes(with_mode(cfg, "gather", True))
-# save: m*L forward gathers + m*L SparseReduceScatter transposes;
-# gather: + m*L backward RE-GATHERS (the re-materialization collectives)
+n_legacy = grad_ppermutes(with_mode(cfg, "gather", True,
+                                    bwd_prefetch=False))
+# save: m*L forward gathers + m*L SparseReduceScatter transposes.
+# gather + explicit backward pipeline: + m*(L+1) backward RE-GATHERS —
+# each layer's bwd issues layer l-1's gather one step ahead, the LAST
+# layer self-gathers at the backward's head (warm start), and the first
+# layer's emission heads a dead pipe (XLA DCEs it; jaxpr still counts
+# it).  Legacy (bwd_prefetch=False): each bwd re-gathers its own chunks
+# — the paper-faithful 3·m·L.
 assert n_save == 2 * m * L, n_save
-assert n_gather == 3 * m * L, n_gather
-print(f"ppermutes save={n_save} gather={n_gather}")
+assert n_gather == (3 * L + 1) * m, n_gather
+assert n_legacy == 3 * m * L, n_legacy
+print(f"ppermutes save={n_save} gather={n_gather} legacy={n_legacy}")
 
 # ---- residuals: gather stores NO materialized chunks ----
 def residual_report(c):
@@ -192,12 +242,13 @@ rt, params, pa, toks, L = setup(cfg)
 buf = params["moe_buffer"]
 
 got = {}
-for mode, pipe in [("save", True), ("gather", True), ("save", False),
-                   ("block", True)]:
-    c = with_mode(cfg, mode, pipe)
+for mode, pipe, bp in [("save", True, True), ("gather", True, True),
+                       ("gather", True, False), ("save", False, True),
+                       ("block", True, True)]:
+    c = with_mode(cfg, mode, pipe, bwd_prefetch=bp)
     l = float(jax.jit(loss_fn(c, rt, params, pa, toks))(buf))
     g = jax.jit(jax.grad(loss_fn(c, rt, params, pa, toks)))(buf)
-    got[(mode, pipe)] = (l, g)
+    got[(mode, pipe, bp)] = (l, g)
 
 
 def rel(a, b):
@@ -208,14 +259,18 @@ def rel(a, b):
 
 # the acceptance bar: gather matches save to 1e-5 on the same (pipelined)
 # schedule — the backward re-gather replays the identical collectives
-dl, dg = rel(("gather", True), ("save", True))
+dl, dg = rel(("gather", True, True), ("save", True, True))
 assert dl < 1e-5 and dg < 1e-5, (dl, dg)
 print(f"gather vs save (pipelined): dloss {dl:.1e} dgrad {dg:.1e}")
+# the explicit backward pipeline computes the SAME backward as the legacy
+# own-layer regather, just one layer ahead
+dl, dg = rel(("gather", True, True), ("gather", True, False))
+assert dl < 1e-5 and dg < 1e-5, (dl, dg)
 # block (which forces the serial schedule) matches serial save exactly
-dl, dg = rel(("block", True), ("save", False))
+dl, dg = rel(("block", True, True), ("save", False, True))
 assert dl < 1e-6 and dg < 1e-6, (dl, dg)
 # pipelined vs serial schedules differ only by fp reassociation
-dl, dg = rel(("save", True), ("save", False))
+dl, dg = rel(("save", True, True), ("save", False, True))
 assert dl < 1e-4 and dg < 1e-3, (dl, dg)
 print(f"pipelined vs serial: dloss {dl:.1e} dgrad {dg:.1e}")
 # gather without the pipeline cannot deliver its memory contract and is
