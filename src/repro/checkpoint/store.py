@@ -77,3 +77,59 @@ def restore(directory: str, step: int, target: Any,
 def meta(directory: str, step: int) -> dict:
     with open(os.path.join(directory, f"step_{step:08d}", "meta.json")) as f:
         return json.load(f)
+
+
+# ---------------------------------------------------------------------------
+# Serving state: the (plan, version, calibration) triple a live engine needs
+# to resume consistent after a restart (training-while-serving).
+# ---------------------------------------------------------------------------
+_SERVE_SUBDIR = "serving"
+
+
+def save_serving_state(directory: str, step: int, pa, version: int,
+                       calibration: Optional[dict] = None) -> str:
+    """Persist a serve engine's (plan tables, published version,
+    calibration) state under ``<directory>/serving/step_<n>/``.
+
+    ``pa`` is a ``repro.core.moe.PlanArrays`` (device or numpy tables);
+    ``version`` is the engine's published parameter version (pair it with
+    the parameter checkpoint of the same step); ``calibration`` is an
+    optional dict of numpy arrays (e.g. the load predictor's history) so
+    the restarted scheduler does not re-plan from a cold predictor.  Atomic
+    like ``save`` — a crash never leaves a half-written state visible.
+    """
+    tree = {"plan": dict(pa._asdict()),
+            "calibration": dict(calibration or {})}
+    return save(os.path.join(directory, _SERVE_SUBDIR), step, tree,
+                extra_meta={"kind": "serving_state",
+                            "serve_version": int(version)})
+
+
+def latest_serving_step(directory: str) -> Optional[int]:
+    return latest_step(os.path.join(directory, _SERVE_SUBDIR))
+
+
+def restore_serving_state(directory: str, step: Optional[int] = None
+                          ) -> Optional[dict]:
+    """Load the serving state saved by ``save_serving_state``; ``step``
+    defaults to the latest.  Returns ``{"pa": PlanArrays (numpy),
+    "version": int, "calibration": {name: array}, "step": int}`` — put the
+    tables on device with ``moe_core.tables_to_device`` — or None when no
+    serving state exists."""
+    sub = os.path.join(directory, _SERVE_SUBDIR)
+    if step is None:
+        step = latest_step(sub)
+        if step is None:
+            return None
+    from repro.core.moe import PlanArrays
+    path = os.path.join(sub, f"step_{step:08d}")
+    if not os.path.isdir(path):     # explicit step with no serving state
+        return None
+    data = np.load(os.path.join(path, "arrays.npz"))
+    plan = {k.split("/", 1)[1]: np.asarray(data[k])
+            for k in data.files if k.startswith("plan/")}
+    calib = {k.split("/", 1)[1]: np.asarray(data[k])
+             for k in data.files if k.startswith("calibration/")}
+    m = meta(sub, step)
+    return {"pa": PlanArrays(**plan), "version": int(m["serve_version"]),
+            "calibration": calib, "step": step}

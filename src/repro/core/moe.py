@@ -133,20 +133,28 @@ vectorized — see ``repro.core.schedule`` and
 benchmarks/planner_microbench.py), so ``train_loop`` blocks only on the
 host→device table transfer between steps.
 
-Decode reuse
-------------
+Decode reuse and training-while-serving
+---------------------------------------
 ``materialize_chunks`` runs step 1 alone for every MoE layer — ONE
 stacked jitted shard_map call over the layer dim — and returns the
 stacked compute-slot chunks; ``moe_layer(..., premat=...)`` then skips
 the SparseAllGather entirely.  Between decode steps the plan (and the
-buffer) is unchanged, so the serving engine materializes once per plan
-and reuses the slots every step; ``Engine.set_plan`` double-buffers the
-NEXT plan's slots (async dispatch overlapping in-flight decode steps) and
-swaps them in at a step boundary.
+buffer) is unchanged, so the serving engine materializes once per
+(plan, buffer version) pair and reuses the slots every step.  Buffer
+identity is the ``VersionedBuffer`` handle: a trainer publishing updated
+parameters into a live engine bumps the publication epoch, and
+``materialize_chunks`` memoizes built slots under (buffer version, plan
+token) so re-requesting an already-built pair issues zero collectives.
+``serve.Engine`` double-buffers BOTH dimensions — ``set_plan`` stages the
+next plan's slots, ``publish_params`` the next version's (built on a
+background thread, overlapping in-flight decode steps) — and swaps the
+whole (plan, params, version, slots) state at a decode step boundary
+(see repro/serve/engine.py for the state machine).
 """
 from __future__ import annotations
 
 import dataclasses
+import threading
 from functools import partial
 from typing import Any, Dict, NamedTuple, Optional, Tuple
 
@@ -159,6 +167,42 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.common.config import ModelConfig
 from repro.common.params import Param
 from repro.core.placement import MaterializationPlan
+
+
+# ---------------------------------------------------------------------------
+# Versioned buffer handle (training-while-serving)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True, eq=False)   # identity eq/hash: holds
+class VersionedBuffer:                          # an unhashable device array
+    """The sharded chunk buffer plus a monotone publication epoch.
+
+    FSSDP keeps the sharded buffer as the single source of truth for every
+    MoE parameter, which is exactly what lets a decode engine serve from
+    the same buffer a trainer is updating — provided consumers can tell
+    WHICH buffer state their derived artifacts (the materialized compute
+    slots) came from.  Object identity is not enough: a donated/updated
+    buffer may reuse storage, and a restored buffer is a fresh object with
+    old contents.  The epoch counter is that identity: the trainer bumps
+    it on every publication, ``materialize_chunks`` keys its slot-result
+    memo on it, and ``serve.Engine`` swaps (plan, version) pairs at decode
+    step boundaries.
+
+    Every ``materialize_*`` entry point accepts either a raw array or a
+    handle; wrapping costs nothing on the training path.
+    """
+    array: Any
+    version: int = 0
+
+    def bump(self, new_array) -> "VersionedBuffer":
+        """Next publication: new contents, epoch + 1."""
+        return VersionedBuffer(new_array, self.version + 1)
+
+
+def unwrap_buffer(buf) -> Tuple[Any, Optional[int]]:
+    """(array, version) — version is None for raw (unversioned) arrays."""
+    if isinstance(buf, VersionedBuffer):
+        return buf.array, buf.version
+    return buf, None
 
 
 # ---------------------------------------------------------------------------
@@ -927,6 +971,7 @@ def materialize_layer(cfg: ModelConfig, rt: MoERuntime, buf,
     SparseReduceScatter landing the buffer gradient.
     """
     from jax.experimental.shard_map import shard_map
+    buf, _ = unwrap_buffer(buf)
     buf = buf.astype(dtype or jnp.dtype(cfg.dtype))
     m = _m_of(rt, pa_l)
     batch = _coll_batch(rt)
@@ -966,6 +1011,7 @@ def materialize_stack(cfg: ModelConfig, rt: MoERuntime, buf, pa: PlanArrays,
     wraps this body in a cached jit for the serving path.
     """
     from jax.experimental.shard_map import shard_map
+    buf, _ = unwrap_buffer(buf)
     dt = jnp.dtype(dtype or jnp.dtype(cfg.dtype))
     m = _m_of(rt, pa)
     batch = _coll_batch(rt)
@@ -998,9 +1044,26 @@ def materialize_stack(cfg: ModelConfig, rt: MoERuntime, buf, pa: PlanArrays,
 _MAT_FNS: Dict[Any, Any] = {}
 _MAT_FNS_MAX = 8
 
+# slot-RESULT memo for versioned buffers: (compile key, buffer version,
+# plan token) -> (source buffer, source plan tables, the built
+# (L, M, K, chunk_len) slots).  The caller-supplied counters alone cannot
+# be trusted as identity (a params tree swapped behind the engine's back
+# keeps the version; two engines in one process each start at version 0
+# and epoch 0 — possibly with different plans), so a hit additionally
+# requires the stored source buffer AND plan tables to BE the requested
+# ones — a stale or foreign entry misses and is rebuilt/overwritten.
+# Two entries: a serving process double-buffers exactly one
+# (plan, version) pair against the live one, and each entry pins L layers
+# of device chunks.  The builder thread and the consumer's lazy path may
+# touch these dicts concurrently — all lookup/insert/evict sections hold
+# _CACHE_LOCK (an unlocked FIFO evict can KeyError mid-decode).
+_SLOT_RESULTS: Dict[Any, Any] = {}
+_SLOT_RESULTS_MAX = 2
+_CACHE_LOCK = threading.Lock()
+
 
 def materialize_chunks(cfg: ModelConfig, rt: MoERuntime, buf,
-                       pa: PlanArrays, dtype=None):
+                       pa: PlanArrays, dtype=None, pa_token=None):
     """Run SparseAllGather alone for every MoE layer: (L, M, K, chunk_len).
 
     ONE stacked jitted shard_map call covers all L layers (previously L
@@ -1011,35 +1074,62 @@ def materialize_chunks(cfg: ModelConfig, rt: MoERuntime, buf,
     unchanged — ``moe_layer(..., premat=out[l])`` then issues NO
     materialization collectives.  Returns None without a mesh (the
     single-device oracle never materializes).
+
+    ``buf`` may be a ``VersionedBuffer``.  When it is AND the caller
+    passes a ``pa_token`` identifying the plan the tables came from, the
+    built slots are memoized under (compile key, buffer version,
+    pa_token), validated against the source buffer and plan-table
+    identities: re-requesting the slots of an already-built
+    (plan, version) pair — an engine re-validating its cache after a
+    restore, or the lazy path racing a background publication build —
+    returns the existing device arrays and issues ZERO collectives.
     """
     if rt.mesh is None:
         return None
+    buf, version = unwrap_buffer(buf)
     dt = jnp.dtype(dtype or jnp.dtype(cfg.dtype))
     m = _m_of(rt, pa)
     batch = _coll_batch(rt)
     L = pa.local_rows.shape[0]
     key = (cfg, rt.mesh, rt.ep_axis, tuple(rt.batch_axes), rt.impl, m,
            batch, dt, L)
-    fn = _MAT_FNS.get(key)
-    if fn is None:
-        fn = jax.jit(partial(materialize_stack, cfg, rt, dtype=dt,
-                             name=False))
-        while len(_MAT_FNS) >= _MAT_FNS_MAX:       # FIFO eviction
-            _MAT_FNS.pop(next(iter(_MAT_FNS)))
-        _MAT_FNS[key] = fn
-    return fn(buf, pa)
+    rkey = (key, version, pa_token) \
+        if version is not None and pa_token is not None else None
+    with _CACHE_LOCK:
+        if rkey is not None:
+            hit = _SLOT_RESULTS.get(rkey)
+            if hit is not None and hit[0] is buf and hit[1] is pa:
+                return hit[2]
+        fn = _MAT_FNS.get(key)
+        if fn is None:
+            fn = jax.jit(partial(materialize_stack, cfg, rt, dtype=dt,
+                                 name=False))
+            while len(_MAT_FNS) >= _MAT_FNS_MAX:   # FIFO eviction
+                _MAT_FNS.pop(next(iter(_MAT_FNS)))
+            _MAT_FNS[key] = fn
+    out = fn(buf, pa)               # compile/dispatch outside the lock
+    if rkey is not None:
+        with _CACHE_LOCK:
+            _SLOT_RESULTS.pop(rkey, None)          # refresh insert order
+            while len(_SLOT_RESULTS) >= _SLOT_RESULTS_MAX:
+                _SLOT_RESULTS.pop(next(iter(_SLOT_RESULTS)))
+            _SLOT_RESULTS[rkey] = (buf, pa, out)
+    return out
 
 
 def clear_materialize_cache() -> None:
-    """Drop every cached stacked-materialize executable.
+    """Drop every cached stacked-materialize executable and slot result.
 
-    Each ``_MAT_FNS`` entry pins a compiled executable AND a Mesh; the FIFO
-    bound caps steady-state growth, but test suites (and long-lived
-    processes that cycle meshes/configs) need an explicit way to release
-    them — otherwise compiled programs for dead meshes survive across test
-    cases.  Called from the test suite's per-test teardown.
+    Each ``_MAT_FNS`` entry pins a compiled executable AND a Mesh (and
+    each ``_SLOT_RESULTS`` entry pins device arrays); the FIFO bounds cap
+    steady-state growth, but test suites (and long-lived processes that
+    cycle meshes/configs) need an explicit way to release them — otherwise
+    compiled programs for dead meshes survive across test cases.  Called
+    from the test suite's per-test teardown.
     """
-    _MAT_FNS.clear()
+    with _CACHE_LOCK:
+        _MAT_FNS.clear()
+        _SLOT_RESULTS.clear()
 
 
 # ---------------------------------------------------------------------------

@@ -223,36 +223,68 @@ def _alg1_ring_loop(sh: ShardingPlan, l: int, f: np.ndarray, m: int,
             present[d].add(e)
 
 
+def _seg_exclusive_cumsum(grouped: np.ndarray, starts: np.ndarray
+                          ) -> np.ndarray:
+    """Per-segment exclusive cumsum of a (rows, cols) bool matrix whose
+    rows are already grouped into contiguous segments (``starts`` marks
+    the first row of each).  The global exclusive cumsum minus its value
+    at the segment start (forward-filled via a running max — the cumsum is
+    nondecreasing along rows, so the current segment's start value always
+    dominates earlier ones)."""
+    cums = np.cumsum(grouped, axis=0, dtype=np.int64) - grouped
+    base = np.maximum.accumulate(np.where(starts[:, None], cums, 0), axis=0)
+    return cums - base
+
+
 def _alg1_a2a(sh: ShardingPlan, l: int, f: np.ndarray, t: int, m: int,
               q: int, extra: np.ndarray, a2a_rows: np.ndarray,
               present: np.ndarray, node_size: int) -> None:
     """Vectorized paper-faithful Algorithm 1 (one layer) under the
-    q-per-(src,dst) constraint.
+    q-per-(src,dst) constraint — BATCHED over targets.
 
-    The greedy walks targets in order (sequential state: free slots,
-    per-pair budgets) but every per-device scan — candidate ranking and
-    the assignment filter — is a numpy lexsort/mask instead of a Python
-    ``sorted`` with tuple keys.  Byte-identical to ``_alg1_a2a_loop``
-    (np.lexsort is stable, matching Python's stable sort with ascending
-    device order as the implicit final key).
+    The reference greedy walks the target list sequentially because each
+    claim mutates three budget tables (device free slots, per-(src, dst)
+    chunk budgets, per-device next-slot cursors).  All three are
+    resolvable in closed form over the whole (target, device) grid:
+
+    * every target's expert is distinct, so presence reads are
+      independent of earlier claims — eligibility is one mask;
+    * the q budget counts claims from a target's OWNER to each device,
+      and all targets sharing an owner form one contiguous segment after
+      a stable sort by owner — "claims so far from this src" is a
+      per-segment exclusive cumsum (``_seg_exclusive_cumsum``), and an
+      entry survives iff that rank < q.  m-budget rejections cannot
+      perturb these ranks: device saturation is permanent, so m-rejected
+      entries are only ever followed by further rejections on that
+      device;
+    * the m budget (and the slot cursor) is then the exclusive cumsum of
+      the q-surviving entries down the original target order — an entry
+      claims iff its rank < m, and that rank IS its slot index.
+
+    One more cumsum over the claimed entries (same owner segments) yields
+    the a2a send-round index.  Byte-identical to ``_alg1_a2a_loop`` —
+    locked in by the randomized sweeps in tests/test_placement.py and
+    benchmarks/planner_microbench.py; measured in the planner bench (the
+    sequential per-target loop was the a2a/ring speedup gap the ROADMAP
+    carried).
 
     present: (M, E) bool, updated in place.
     """
     M = sh.num_devices
     order = np.argsort(-f)
     top_t = list(order[:max(t, 0)]) if t > 0 else list(order)
-    slots_free = np.full(M, m, np.int32)
-    pair_used = np.zeros((M, M), np.int32)       # chunks src -> dst
-    slot_next = np.zeros(M, np.int32)
     nsz = node_size or M
     d_all = np.arange(M)
 
     if t <= m:
         # lines 4-5: materialize top-t experts on ALL devices
-        targets = [(e, d_all) for e in top_t]
+        es = np.asarray(top_t, np.int64)
+        memb = np.ones((len(es), M), bool)
     else:
-        # lines 6-11: replicas ∝ load
-        tot_slots = int(slots_free.sum())
+        # lines 6-11: replicas ∝ load (sequential remaining-budget walk —
+        # tiny, early-exits; the per-target device RANKING below is the
+        # hot part and is batched)
+        tot_slots = M * m
         counts = []
         remaining = tot_slots
         fsum = max(f[top_t].sum(), 1e-9)
@@ -262,29 +294,49 @@ def _alg1_a2a(sh: ShardingPlan, l: int, f: np.ndarray, t: int, m: int,
             counts.append((e, n))
             if remaining <= 0:
                 break
+        es = np.asarray([e for e, _ in counts], np.int64)
+        ns = np.asarray([n for _, n in counts], np.int64)
         # node-aware: prefer nodes where e is NOT yet present, then
-        # devices with more free slots (stable → ascending device id)
+        # devices with more free slots — all devices still have m free
+        # slots when targets are ranked (claims happen after), so the
+        # free-slot key is constant and the reference's lexsort reduces
+        # to a stable sort on node presence, ties → ascending device id.
+        # One batched any-reduce + one argsort over the whole
+        # (target, device) grid.
         n_pad = (-M) % nsz
-        pres_pad = np.zeros(M + n_pad, bool)      # reused scratch (np.pad
-        node_of = d_all // nsz                    # per target was the 2nd
-        targets = []                              # hottest line here)
-        for e, n in counts:
-            pres_pad[:M] = present[:, e]
-            node_has = pres_pad.reshape(-1, nsz).any(1)
-            devs = np.lexsort((-slots_free, node_has[node_of]))
-            targets.append((e, devs[:n]))
+        node_of = d_all // nsz
+        pres = np.zeros((len(es), M + n_pad), bool)
+        pres[:, :M] = present[:, es].T
+        node_has = pres.reshape(len(es), -1, nsz).any(2)[:, node_of]
+        dev_order = np.argsort(node_has, axis=-1, kind="stable")
+        memb = np.zeros((len(es), M), bool)
+        np.put_along_axis(memb, dev_order,
+                          d_all[None, :] < ns[:, None], axis=1)
 
-    for e, devs in targets:
-        src = sh.owner_dev[l, e]
-        ok = (~present[devs, e] & (slots_free[devs] > 0)
-              & (pair_used[src, devs] < q) & (devs != src))
-        d_ok = devs[ok]
-        extra[l, d_ok, slot_next[d_ok]] = e
-        a2a_rows[l, src, pair_used[src, d_ok], d_ok] = sh.owner_row[l, e]
-        pair_used[src, d_ok] += 1
-        slot_next[d_ok] += 1
-        slots_free[d_ok] -= 1
-        present[d_ok, e] = True
+    if not len(es):
+        return
+    srcs = sh.owner_dev[l, es].astype(np.int64)            # (n_t,)
+    elig = memb & ~present[:, es].T                        # (n_t, M)
+    elig[np.arange(len(es)), srcs] = False                 # d != src
+    # q budget: rank within (src, device) segments, target order
+    ords = np.argsort(srcs, kind="stable")
+    srcs_g = srcs[ords]
+    starts = np.empty(len(es), bool)
+    starts[0] = True
+    starts[1:] = srcs_g[1:] != srcs_g[:-1]
+    q_rank = np.empty_like(elig, dtype=np.int64)
+    q_rank[ords] = _seg_exclusive_cumsum(elig[ords], starts)
+    qkeep = elig & (q_rank < q)
+    # m budget + slot cursor: rank among q-survivors down target order
+    m_rank = np.cumsum(qkeep, axis=0, dtype=np.int64) - qkeep
+    claimed = qkeep & (m_rank < m)
+    # a2a send round: rank among CLAIMED within (src, device) segments
+    p_rank = np.empty_like(q_rank)
+    p_rank[ords] = _seg_exclusive_cumsum(claimed[ords], starts)
+    ti, di = np.nonzero(claimed)
+    extra[l, di, m_rank[ti, di]] = es[ti]
+    a2a_rows[l, srcs[ti], p_rank[ti, di], di] = sh.owner_row[l, es[ti]]
+    present[di, es[ti]] = True
 
 
 def _alg1_a2a_loop(sh: ShardingPlan, l: int, f: np.ndarray, t: int, m: int,

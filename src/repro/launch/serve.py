@@ -3,6 +3,12 @@ decode with the KV/SSM cache engine.
 
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --smoke \
       --prompt "In the beginning " --steps 32
+
+When the checkpoint directory carries serving state (written by
+``checkpoint.store.save_serving_state`` — the (plan, version, calibration)
+triple a training-while-serving engine publishes), the engine resumes at
+the published version with the published plan tables instead of replanning
+from scratch (``--no-serve-state`` opts out).
 """
 from __future__ import annotations
 
@@ -14,6 +20,8 @@ def main():
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--checkpoint-dir", default="")
+    ap.add_argument("--no-serve-state", action="store_true",
+                    help="ignore persisted (plan, version) serving state")
     ap.add_argument("--prompt", action="append", default=None)
     ap.add_argument("--steps", type=int, default=32)
     ap.add_argument("--max-len", type=int, default=256)
@@ -26,6 +34,7 @@ def main():
 
     import repro.configs as configs
     from repro.checkpoint import store
+    from repro.core import moe as moe_core
     from repro.models import model as mdl
     from repro.serve.engine import Engine
 
@@ -33,6 +42,7 @@ def main():
            else configs.get(args.arch))
     rt = mdl.Runtime()
     params = mdl.init_params(cfg, jax.random.PRNGKey(args.seed))
+    pa, version = None, 0
     if args.checkpoint_dir:
         step = store.latest_step(args.checkpoint_dir)
         if step is not None:
@@ -41,6 +51,44 @@ def main():
             params = store.restore(args.checkpoint_dir, step,
                                    {"params": target})["params"]
             print(f"restored checkpoint step {step}")
+        if not args.no_serve_state:
+            # serving state must PAIR with the restored params: stale plan
+            # tables (e.g. from before a reshard) describe a different row
+            # ownership, so a step mismatch silently gathers wrong experts
+            # — prefer the exact step, else fall back to a fresh plan
+            serve_state = None
+            if step is not None:
+                serve_state = store.restore_serving_state(
+                    args.checkpoint_dir, step=step)
+                if serve_state is None and store.latest_serving_step(
+                        args.checkpoint_dir) is not None:
+                    print(f"serving state has no step {step} "
+                          f"(params step); ignoring serving state")
+            if serve_state is not None and int(
+                    np.max(serve_state["pa"].owner_dev)) > 0:
+                # plan from a multi-device (EP > 1) training run: this
+                # launcher decodes mesh-less, where owner_row is only
+                # meaningful per device — reading it flat would gather
+                # wrong buffer rows.  Fall back to the fresh single-host
+                # plan instead of silently decoding garbage.
+                print("serving state is from an EP > 1 run; single-host "
+                      "decode rebuilds a local plan instead")
+                version = serve_state["version"]
+                serve_state = None
+            if serve_state is not None:
+                pa = moe_core.tables_to_device(serve_state["pa"])
+                version = serve_state["version"]
+                print(f"restored serving state: step {serve_state['step']}"
+                      f", version {version}")
+
+    if cfg.moe.enabled and pa is None:
+        # no persisted serving plan: single-host default (every expert
+        # local) so MoE archs decode without a scheduler in the loop
+        from repro.core.placement import (ep_materialization,
+                                          homogeneous_sharding)
+        sh = homogeneous_sharding(moe_core.num_moe_layers(cfg),
+                                  cfg.moe.num_experts, 1)
+        pa = moe_core.plan_to_arrays(ep_materialization(sh))
 
     prompts = args.prompt or ["Hello world", "The scheduler said"]
     maxp = max(len(p) for p in prompts)
@@ -49,15 +97,16 @@ def main():
         b = np.frombuffer(p.encode(), np.uint8).astype(np.int32)
         enc[i, :len(b)] = b % cfg.vocab_size
 
-    eng = Engine(cfg, rt, params, max_len=args.max_len)
-    enc_in = None
-    if cfg.is_encoder_decoder:
-        enc_in = np.random.default_rng(0).standard_normal(
-            (len(prompts), cfg.encoder_seq_len, cfg.d_model)).astype(
-            np.float32)
-    out = eng.generate(enc, steps=args.steps,
-                       temperature=args.temperature, seed=args.seed,
-                       encoder_input=enc_in)
+    with Engine(cfg, rt, params, max_len=args.max_len, pa=pa,
+                version=version) as eng:
+        enc_in = None
+        if cfg.is_encoder_decoder:
+            enc_in = np.random.default_rng(0).standard_normal(
+                (len(prompts), cfg.encoder_seq_len, cfg.d_model)).astype(
+                np.float32)
+        out = eng.generate(enc, steps=args.steps,
+                           temperature=args.temperature, seed=args.seed,
+                           encoder_input=enc_in)
     for i, p in enumerate(prompts):
         toks = out[i].tolist()
         text = bytes(t for t in toks if 0 < t < 128).decode(errors="replace")

@@ -1,13 +1,62 @@
-"""Serving: batched prefill + decode against KV/SSM caches.
+"""Serving: batched prefill + decode against KV/SSM caches, safe against a
+parameter buffer that CHANGES while the engine is serving.
 
 ``build_serve_step`` is the function the decode-shape dry-runs lower: ONE
 new token per sequence against a ``max_len`` cache.  The demo engine does
 loop-based prefill (adequate for example-scale models; production prefill
 would fill the cache in one forward pass).
+
+The (plan, version) state machine — training-while-serving
+----------------------------------------------------------
+FSSDP makes the fully sharded chunk buffer the single source of truth for
+every MoE parameter, and the engine's only derived artifact is the
+materialized compute-slot cache (``moe_core.materialize_chunks`` — one
+stacked SparseAllGather over all L layers).  The engine therefore
+identifies its serving state by exactly two monotone counters:
+
+* **plan epoch** — bumped by ``set_plan``; which materialization plan the
+  slots were built from;
+* **version** — bumped by ``publish_params`` (a ``VersionedBuffer``
+  publication epoch); which parameter state the slots were built from.
+
+State per engine:
+
+* LIVE  — ``(self.pa, self.params, self.version)`` plus the slot cache
+  ``self._premat`` built for the live (plan epoch, version) key.  Every
+  decode step reads ONLY live state; with a fresh cache it issues ZERO
+  SparseAllGather collectives (jaxpr-asserted in
+  tests/test_serve_publish.py).
+* STAGED — at most one pending ``(pa, params, version)`` triple whose
+  slots are being built by the engine's background thread (``_staged``).
+  ``set_plan`` and ``publish_params`` both stage here; staging COMPOSES —
+  a publish staged after a plan swap (or vice versa) carries the newest
+  plan AND the newest params, so the last staged triple is always the
+  most recent of each dimension.
+
+Transitions (the swap guarantees):
+
+* ``publish_params(params, version)`` / ``set_plan(pa)`` build the next
+  state's slots on the background thread — the stacked gather is
+  dispatched OFF the decode step path and overlaps in-flight steps — and
+  never invalidate the live cache synchronously.
+* ``_step_boundary()`` (called between decode steps in ``generate``)
+  promotes the staged triple ATOMICALLY, and only if its build has
+  finished: a decode step NEVER blocks on slot building, and a step that
+  straddles a publication reads entirely old-version state (params,
+  router, buffer, slots all swap together at the boundary).
+* ``flush()`` is an explicit boundary that WAITS for the pending build —
+  for callers that need the publication visible (tests, checkpointing).
+* ``close()`` joins the background builder before dropping it, so a
+  pending build never races the buffer it captured (teardown-safe; every
+  public entry point raises after close).
+
+``checkpoint.store.save_serving_state`` persists the (plan, version,
+calibration) triple so a restarted engine resumes at the published
+version instead of re-deriving it.
 """
 from __future__ import annotations
 
-from functools import partial
+import threading
 from typing import Any, Dict, Optional
 
 import jax
@@ -16,7 +65,7 @@ import numpy as np
 
 from repro.common.config import ModelConfig
 from repro.core import moe as moe_core
-from repro.core.moe import PlanArrays
+from repro.core.moe import PlanArrays, VersionedBuffer
 from repro.models import model as mdl
 
 
@@ -53,79 +102,252 @@ def build_prefill_step(cfg: ModelConfig, rt: mdl.Runtime):
 
 
 class Engine:
-    """Minimal batched greedy/sampling decode engine for the examples.
+    """Batched greedy/sampling decode engine, double-buffered against both
+    plan swaps AND parameter publications (see the module docstring for the
+    (plan, version) state machine and swap guarantees).
 
-    MoE decode reuse: the materialization plan (and the parameter buffer)
-    is constant across decode steps, so the SparseAllGather result is too.
-    The engine materializes every layer's compute slots ONCE per plan
-    (``moe_core.materialize_chunks`` — a single stacked shard_map call)
-    and feeds them to every decode step, which then issues no
-    materialization collectives at all.
-
-    Plan swaps are DOUBLE-BUFFERED: ``set_plan`` kicks off the next plan's
-    slot construction immediately — JAX dispatch is asynchronous, so the
-    SparseAllGather collectives run while in-flight decode steps keep
-    consuming the CURRENT slots — and the engine promotes the staged
-    (plan, slots) pair at the next step boundary (``_step_boundary``,
-    called between decode steps in ``generate``).  ``set_plan(defer=False)``
-    swaps synchronously and drops the slot cache instead.
+    MoE decode reuse: plan and buffer are constant between publications, so
+    the engine materializes every layer's compute slots once per
+    (plan epoch, version) pair (``moe_core.materialize_chunks``) and every
+    decode step consumes them, issuing no materialization collectives.
     """
 
     def __init__(self, cfg: ModelConfig, rt: mdl.Runtime, params,
-                 max_len: int = 512, pa: Optional[PlanArrays] = None):
+                 max_len: int = 512, pa: Optional[PlanArrays] = None,
+                 version: int = 0):
         self.cfg, self.rt, self.params, self.pa = cfg, rt, params, pa
         self.max_len = max_len
+        self.version = version
         self.step_fn = jax.jit(build_serve_step(cfg, rt))
         self._premat = None
         self._premat_fresh = False
-        self._staged = None          # (pa, slots, buf) awaiting promotion
+        self._plan_epoch = 0
+        self._epoch_counter = 0      # monotone; staged plans draw from it
+        self._staged = None          # dict: pa, params, version, epoch, fut
+        self._executor = None
+        self._lock = threading.Lock()
+        self._closed = False
+        # observability: publications staged / boundaries that promoted /
+        # boundaries that found the staged build still in flight
+        self.publications = 0
+        self.promotions = 0
+        self.deferred_boundaries = 0
 
-    def _build_slots(self, pa, buf):
+    # ---- background slot builder --------------------------------------
+    def _pool(self):
+        if self._executor is None:
+            from concurrent.futures import ThreadPoolExecutor
+            self._executor = ThreadPoolExecutor(
+                max_workers=1, thread_name_prefix="engine-build")
+        return self._executor
+
+    def _build_slots(self, pa, buf, version=None, epoch=None):
         if (buf is None or pa is None or not self.cfg.moe.enabled
                 or self.rt.moe.mesh is None):
             return None
-        return moe_core.materialize_chunks(self.cfg, self.rt.moe, buf, pa)
+        if version is not None:
+            buf = VersionedBuffer(buf, version)
+        return moe_core.materialize_chunks(self.cfg, self.rt.moe, buf, pa,
+                                           pa_token=epoch)
+
+    def _check_open(self):
+        if self._closed:
+            raise RuntimeError("Engine is closed")
+
+    def _buf_of(self, params):
+        return params.get("moe_buffer") if self.cfg.moe.enabled else None
+
+    # ---- staging: set_plan / publish_params ----------------------------
+    def _stage(self, pa, params, version, epoch) -> None:
+        """Submit the (pa, params, version) triple's slot build to the
+        background thread and make it the staged state (lock held; the
+        ``_closed`` re-check under the lock pairs with ``close`` setting
+        it under the same lock, so a concurrent close can never leave an
+        unjoined build behind).  A previously staged triple is superseded
+        (its build, if still running, drains harmlessly on the builder
+        thread — ``close`` joins it)."""
+        self._check_open()
+        buf = self._buf_of(params)
+        fut = self._pool().submit(self._build_slots, pa, buf, version,
+                                  epoch)
+        self._staged = dict(pa=pa, params=params, version=version,
+                            epoch=epoch, fut=fut, buf=buf,
+                            base=self.params)
 
     def set_plan(self, pa: Optional[PlanArrays], *,
                  defer: bool = True) -> None:
         """Stage the next materialization plan.
 
-        With a live slot cache and ``defer`` (default), the new plan's
-        slots are built NOW (async dispatch — the collectives overlap any
-        decode steps still consuming the current slots) and swapped in at
-        the next step boundary.  Without a live cache, or with
-        ``defer=False``, the plan is installed immediately and slots
-        re-materialize lazily on the next ``_materialized`` call.
+        With a live slot cache (or a pending publication) and ``defer``
+        (default), the new plan's slots are built on the background thread
+        (the collectives overlap any decode steps still consuming the
+        current slots) and swapped in at the next step boundary.  Without
+        either, or with ``defer=False``, the plan is installed immediately
+        and slots re-materialize lazily on the next ``_materialized``
+        call.  A plan staged on top of a pending publication keeps that
+        publication's params and version (staging composes — see the
+        module docstring); the synchronous path carries a pending
+        publication's params/version forward too (it installs, never
+        silently reverts).
         """
-        buf = self.params.get("moe_buffer") if self.cfg.moe.enabled else None
-        if defer and self._premat_fresh and self._premat is not None:
-            self._staged = (pa, self._build_slots(pa, buf), buf)
-            return
-        self.pa = pa
-        self._premat, self._premat_fresh, self._staged = None, False, None
+        self._check_open()
+        with self._lock:
+            self._epoch_counter += 1
+            epoch = self._epoch_counter
+            st = self._staged
+            if defer and (st is not None or (self._premat_fresh
+                                             and self._premat is not None)):
+                params = st["params"] if st is not None else self.params
+                version = st["version"] if st is not None else self.version
+                self._stage(pa, params, version, epoch)
+                return
+            self.pa = pa
+            self._plan_epoch = epoch
+            if st is not None:              # publication survives the
+                self.params = st["params"]  # synchronous invalidation
+                self.version = st["version"]
+            self._premat, self._premat_fresh, self._staged = \
+                None, False, None
 
-    def _step_boundary(self) -> None:
-        """Promote a staged (plan, slots) pair; called between steps."""
+    _UNSET = object()
+
+    def publish_params(self, params, version: Optional[int] = None, *,
+                       pa=_UNSET, wait: bool = False) -> int:
+        """Stage a new parameter tree at ``version`` (training-while-
+        serving).  The next version's compute slots build asynchronously
+        against the CURRENT plan (or the staged plan, if a swap is already
+        pending) and the whole (params, slots, version) state swaps at the
+        next decode step boundary — in-flight steps are never invalidated.
+
+        ``version`` defaults to the last published version + 1.  ``pa``
+        stages a NEW plan together with the params, as one atomic swap —
+        required when the publication follows a reshard (the old plan's
+        ownership tables do not describe the new buffer; publishing them
+        separately would let a boundary promote a mismatched pair).
+        ``wait`` blocks until the slot build has finished (the swap still
+        happens only at a boundary) — for callers that need the next
+        boundary to promote deterministically.  Returns the staged
+        version.
+        """
+        self._check_open()
+        with self._lock:
+            st = self._staged
+            if version is None:
+                version = (st["version"] if st is not None
+                           else self.version) + 1
+            if pa is not Engine._UNSET:
+                self._epoch_counter += 1
+                epoch = self._epoch_counter
+            elif st is not None:
+                pa, epoch = st["pa"], st["epoch"]
+            else:
+                pa, epoch = self.pa, self._plan_epoch
+            self._stage(pa, params, version, epoch)
+            self.publications += 1
+            fut = self._staged["fut"]
+        if wait:
+            fut.result()
+        return version
+
+    # ---- promotion -----------------------------------------------------
+    def _boundary_locked(self) -> None:
         if self._staged is None:
             return
-        pa, slots, buf = self._staged
-        self.pa, self._staged = pa, None
-        if buf is not self.params.get("moe_buffer"):
-            # buffer swapped since staging — rebuild lazily
-            self._premat, self._premat_fresh = None, False
+        if not self._staged["fut"].done():
+            self.deferred_boundaries += 1
             return
-        self._premat, self._premat_src = slots, buf
-        self._premat_fresh = True
+        self._promote(self._staged)
 
+    def _step_boundary(self) -> None:
+        """Promote the staged (plan, params, version, slots) state; called
+        between decode steps.  NON-BLOCKING: if the staged build is still
+        in flight the boundary defers (old state keeps serving) — a decode
+        step never waits on slot construction."""
+        with self._lock:
+            self._boundary_locked()
+
+    def _snapshot(self):
+        """One decode step's consistent view: run the boundary and read
+        (params, pa, slots) in a single locked section, so a concurrent
+        flush/publish promotion can never hand a step mixed-version state
+        (e.g. new params with old slots)."""
+        with self._lock:
+            self._boundary_locked()
+            return self.params, self.pa, self._materialized()
+
+    def _promote(self, st) -> None:
+        """Install a staged triple as the live state (lock held).
+
+        If ``self.params`` was assigned DIRECTLY after this triple was
+        staged (the backdoor ``_materialized`` supports), the assignment
+        wins: the staged plan still installs, but the staged params,
+        version and slots are dropped (they describe a tree the caller
+        has since replaced) and slots rebuild lazily from the live one —
+        never silently revert a caller's params."""
+        slots = st["fut"].result()      # done — raises if the build failed
+        self.pa = st["pa"]
+        self._plan_epoch = st["epoch"]
+        if self.params is st["base"]:
+            self.params, self.version = st["params"], st["version"]
+            self._premat = slots
+            self._premat_src = st["buf"]
+            self._premat_fresh = slots is not None
+        else:
+            self._premat, self._premat_fresh = None, False
+        self._staged = None
+        self.promotions += 1
+
+    def flush(self, timeout: Optional[float] = None) -> None:
+        """An EXPLICIT step boundary that waits: join the pending build (if
+        any) and promote it.  Use between generate calls, before
+        checkpointing serving state, or in tests that need the published
+        state visible deterministically."""
+        self._check_open()
+        with self._lock:
+            st = self._staged
+            if st is None:
+                return
+            st["fut"].result(timeout=timeout)
+            self._promote(st)
+
+    def close(self) -> None:
+        """Tear down: join the background builder so a pending async build
+        (plan or version) can never race the buffer it captured, then drop
+        the staged state WITHOUT promoting it.  Idempotent.
+
+        ``_closed`` flips under the lock and ``_stage`` re-checks it under
+        the same lock, so a publish/set_plan racing close either stages
+        BEFORE the flip (its build is joined below) or raises — a build
+        can never be submitted to a recreated executor after close."""
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+            ex, self._executor = self._executor, None
+            self._staged = None
+        if ex is not None:
+            ex.shutdown(wait=True)      # joins any in-flight slot build
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    # ---- the live slot cache --------------------------------------------
     def _materialized(self):
-        """The per-(plan, buffer) slot cache: (L_moe, M, K, chunk_len) or
-        None.  Re-materializes if ``self.params`` was swapped (the cache
-        holds the buffer identity it was built from)."""
-        buf = self.params.get("moe_buffer") if self.cfg.moe.enabled else None
+        """The per-(plan, version) slot cache: (L_moe, M, K, chunk_len) or
+        None.  Re-materializes if ``self.params`` was swapped behind the
+        engine's back (the cache also tracks the buffer identity it was
+        built from — publications go through ``publish_params``, but the
+        identity check keeps direct ``eng.params = ...`` assignment
+        working)."""
+        buf = self._buf_of(self.params)
         if self._premat_fresh and getattr(self, "_premat_src", None) is not buf:
             self._premat_fresh = False
         if not self._premat_fresh:
-            self._premat = self._build_slots(self.pa, buf)
+            self._premat = self._build_slots(self.pa, buf, self.version,
+                                             self._plan_epoch)
             self._premat_src = buf
             self._premat_fresh = True
         return self._premat
@@ -135,6 +357,7 @@ class Engine:
                  encoder_input=None) -> np.ndarray:
         """prompts: (B, P) int32 (left-aligned, no padding). Returns
         (B, P+steps)."""
+        self._check_open()
         b, p = prompts.shape
         cache = mdl.init_cache(self.cfg, b, self.max_len)
         if self.cfg.is_encoder_decoder:
@@ -149,18 +372,18 @@ class Engine:
         out = [toks]
         logits = None
         for i in range(p):                       # loop prefill
-            self._step_boundary()                # promote staged plan swaps
-            premat = self._materialized()        # one spAG per plan, reused
-            logits, cache = self.step_fn(self.params, cache, toks[:, i:i + 1],
-                                         jnp.int32(i), self.pa, premat)
+            # boundary + one consistent (params, pa, slots) view; the
+            # slot cache holds one spAG per (plan, version)
+            params, pa, premat = self._snapshot()
+            logits, cache = self.step_fn(params, cache, toks[:, i:i + 1],
+                                         jnp.int32(i), pa, premat)
         for s in range(steps):
-            self._step_boundary()
-            premat = self._materialized()
+            params, pa, premat = self._snapshot()
             key, sub = jax.random.split(key)
             nxt = _sample(logits[:, -1], temperature, sub)[:, None]
             out.append(nxt)
-            logits, cache = self.step_fn(self.params, cache, nxt,
-                                         jnp.int32(p + s), self.pa, premat)
+            logits, cache = self.step_fn(params, cache, nxt,
+                                         jnp.int32(p + s), pa, premat)
         return np.asarray(jnp.concatenate(out, axis=1))
 
 

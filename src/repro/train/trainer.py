@@ -262,7 +262,8 @@ def train_loop(cfg: ModelConfig, rt, tc: TrainConfig,
                num_steps: Optional[int] = None,
                log_every: int = 10,
                callback: Optional[Callable] = None,
-               metric_logger=None):
+               metric_logger=None,
+               publish_engine=None, publish_every: int = 0):
     """Single-host training driver (used by examples + e2e tests).
 
     Planning runs OFF the critical path: the jitted step is dispatched
@@ -272,6 +273,16 @@ def train_loop(cfg: ModelConfig, rt, tc: TrainConfig,
     the step's metrics back.  ``plan_arrays()`` at the top of the next
     iteration then consumes the finished plan instead of serializing an
     Alg-1 run between steps (measured in benchmarks/planner_microbench.py).
+
+    Training-while-serving: with ``publish_engine`` (a live
+    ``repro.serve.engine.Engine``) and ``publish_every = k``, the loop
+    PUBLISHES the optimizer-updated parameter tree into the engine every k
+    steps, versioned by the step index — right after dispatching the step,
+    so the engine's background thread builds the new version's compute
+    slots (the stacked SparseAllGather) while the devices are still
+    executing and the engine swaps at its next decode-step boundary.
+    Publication is entirely off this loop's critical path: the call only
+    stages (it never builds slots or blocks on the engine).
     """
     num_steps = num_steps or tc.total_steps
     if state is None:
@@ -281,6 +292,11 @@ def train_loop(cfg: ModelConfig, rt, tc: TrainConfig,
         train_step_fn = jax.jit(step_lib.build_train_step(cfg, rt, tc))
     history = []
     it = iter(stream)
+    pending_replan = False          # reshard since the last publication?
+    # publications are versioned by the GLOBAL training step (monotone
+    # across resumed runs — a restored engine must never see its version
+    # counter regress), not this loop's local index
+    step_base = int(state.step)
     try:
         for i in range(num_steps):
             batch = {k: jnp.asarray(v) for k, v in next(it).items()}
@@ -289,10 +305,28 @@ def train_loop(cfg: ModelConfig, rt, tc: TrainConfig,
                 perm = scheduler.maybe_reshard(i)
                 if perm is not None:
                     state = apply_reshard(state, perm)
+                    pending_replan = True
                 pa = scheduler.plan_arrays()
             t0 = time.perf_counter()
             # async dispatch: the call returns with the step in flight
             state, metrics = train_step_fn(state, batch, pa)
+            if (publish_engine is not None and publish_every
+                    and (i + 1) % publish_every == 0):
+                # training-while-serving: stage the updated params into
+                # the live engine, versioned by step.  The updated arrays
+                # are still in flight — the engine's background build
+                # dispatches against them asynchronously, and the swap
+                # happens at the engine's next decode-step boundary.
+                # After a reshard the engine's plan tables describe the
+                # OLD row ownership — publish the fresh plan WITH the
+                # params so they swap as one atomic pair.
+                if pending_replan and pa is not None:
+                    publish_engine.publish_params(
+                        state.params, version=step_base + i + 1, pa=pa)
+                    pending_replan = False
+                else:
+                    publish_engine.publish_params(
+                        state.params, version=step_base + i + 1)
             if (scheduler is not None and cfg.moe.enabled
                     and i + 1 < num_steps):
                 # plan step i+1 while step i runs on-device

@@ -197,17 +197,20 @@ out2 = eng2.generate(prompts, steps=4)
 assert eng2._premat is None                       # stayed on the spAG path
 assert (out == out2).all(), (out, out2)
 # double-buffered swap: set_plan with a live cache STAGES the next plan's
-# slots (built immediately, async) and keeps serving the current ones;
-# the swap happens at the next step boundary
+# slots (built on the background thread, overlapping in-flight steps) and
+# keeps serving the current ones; the swap happens at a step boundary
+# once the build has landed (flush = an explicit boundary that waits)
 cur = eng._premat
 eng.set_plan(pa)
 assert eng._staged is not None and eng._premat is cur and eng._premat_fresh
-out3 = eng.generate(prompts, steps=4)             # boundary promotes staged
+out3 = eng.generate(prompts, steps=4)             # boundaries promote
+eng.flush()                                       # (deterministically)
 assert eng._staged is None and eng._premat is not cur
 assert (out3 == out).all(), (out3, out)
 # synchronous invalidation still available
 eng.set_plan(pa, defer=False)
 assert not eng._premat_fresh and eng._staged is None
+eng.close(); eng2.close()
 print("ENGINE PREMAT OK")
 """
 

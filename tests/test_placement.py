@@ -107,3 +107,60 @@ def test_hetero_sharding_respects_k_local():
     for l in range(4):
         counts = np.bincount(sh.owner_dev[l], minlength=4)
         assert counts.max() <= 8
+
+
+# ---------------------------------------------------------------------------
+# Batched Alg-1 a2a: byte-parity vs the retained loop reference
+# ---------------------------------------------------------------------------
+def _a2a_plans_equal(a, b) -> bool:
+    return (np.array_equal(a.extra_experts, b.extra_experts)
+            and np.array_equal(a.ring_send_rows, b.ring_send_rows)
+            and np.array_equal(a.a2a_send_rows, b.a2a_send_rows)
+            and a.m == b.m and a.q_rounds == b.q_rounds)
+
+
+@settings(max_examples=40, deadline=None)
+@given(problem(), st.integers(0, 70), st.integers(0, 6),
+       st.integers(0, 3), st.sampled_from([0, 2, 3, 5]))
+def test_alg1_a2a_batched_byte_parity(p, t, m, q, node_size):
+    """The batched per-target budget resolution in ``_alg1_a2a`` (claims,
+    slot cursors, a2a send rounds all from segment cumsums) must emit
+    BYTE-IDENTICAL plans to the sequential loop reference — across both
+    greedy branches (t <= m replicate-everywhere and t > m
+    replicas-∝-load), tight and auto q budgets, and node sizes that do
+    not divide M."""
+    L, E, M, loads = p
+    sh = homogeneous_sharding(L, E, M)
+    pv = sparse_materialization(sh, loads, t=t, m=m, impl="a2a",
+                                node_size=node_size, q_rounds=q,
+                                vectorized=True)
+    pl = sparse_materialization(sh, loads, t=t, m=m, impl="a2a",
+                                node_size=node_size, q_rounds=q,
+                                vectorized=False)
+    assert _a2a_plans_equal(pv, pl)
+    pv.validate()
+
+
+def test_alg1_a2a_batched_byte_parity_seeded():
+    """Seeded high-volume sweep of the same parity (keeps coverage dense
+    even at hypothesis' example budget), integer and continuous loads."""
+    rng = np.random.default_rng(7)
+    for trial in range(60):
+        L = int(rng.integers(1, 5))
+        E = int(rng.integers(2, 64))
+        M = int(rng.choice([2, 3, 4, 8, 16]))
+        t = int(rng.integers(0, E + 3))
+        m = int(rng.integers(0, 7))
+        ns = int(rng.choice([0, max(M // 2, 1), 3, 5]))
+        q = int(rng.integers(0, 4))
+        loads = rng.gamma(0.5, 1.0, (L, E)) * 100
+        if trial % 2:
+            loads = np.floor(loads)
+        sh = homogeneous_sharding(L, E, M)
+        pv = sparse_materialization(sh, loads, t, m, impl="a2a",
+                                    node_size=ns, q_rounds=q,
+                                    vectorized=True)
+        pl = sparse_materialization(sh, loads, t, m, impl="a2a",
+                                    node_size=ns, q_rounds=q,
+                                    vectorized=False)
+        assert _a2a_plans_equal(pv, pl), (trial, L, E, M, t, m, ns, q)

@@ -1,0 +1,336 @@
+"""Training-while-serving: the engine's (plan, version) publication
+protocol.
+
+1. Collective law of the publish path, jaxpr-asserted: a decode step with a
+   fresh slot cache contains ZERO SparseAllGather collectives; unchanged
+   (plan, version) between decode steps triggers ZERO slot builds; one
+   ``publish_params`` triggers EXACTLY ONE stacked gather — off the step
+   path, on the engine's background thread — whose jaxpr carries the full
+   L·m ring permutes + L FSDP all-gathers.
+2. Swap-at-boundary semantics: a decode step that straddles a publication
+   reads entirely old-version state (params AND slots); the next step
+   boundary promotes the whole staged triple atomically.
+3. Bit-exact parity: decode outputs after a promotion equal a fresh-built
+   engine's at the published version.
+4. Teardown: a pending async build (plan or version) joins cleanly on
+   ``close()``; boundaries never block on an in-flight build.
+5. Serving-state persistence: the (plan, version, calibration) triple
+   round-trips through ``checkpoint.store`` so a restarted engine resumes
+   consistent; ``train_loop(publish_engine=, publish_every=)`` feeds a
+   live engine versioned parameter trees.
+"""
+import time
+
+import jax
+import numpy as np
+import pytest
+
+import repro.configs as C
+from repro.common.config import TrainConfig
+from repro.checkpoint import store
+from repro.core import moe as moe_core
+from repro.data.pipeline import make_stream
+from repro.models import model as mdl
+from repro.serve.engine import Engine
+from repro.train.trainer import HecateScheduler, train_loop
+
+
+def _smoke_engine(params_seed=0, pa=None, version=0):
+    cfg = C.get_smoke("gpt-moe-s")
+    rt = mdl.Runtime()
+    if pa is None:
+        sched = HecateScheduler(cfg, ep=1, impl="ep")
+        pa = sched.plan_arrays()
+        sched.close()
+    params = mdl.init_params(cfg, jax.random.PRNGKey(params_seed))
+    return cfg, rt, params, pa, Engine(cfg, rt, params, max_len=32, pa=pa,
+                                       version=version)
+
+
+PROMPTS = np.asarray([[1, 2, 3], [4, 5, 6]], np.int32)
+
+
+def test_publish_swaps_at_boundary_and_matches_fresh_engine():
+    """Versions promote only at step boundaries, and the post-promotion
+    engine is bit-exact with a fresh engine built at the published
+    version."""
+    cfg, rt, params, pa, eng = _smoke_engine()
+    params2 = mdl.init_params(cfg, jax.random.PRNGKey(1))
+    out0 = eng.generate(PROMPTS, steps=4)
+    v = eng.publish_params(params2, wait=True)
+    assert v == 1
+    # staged, NOT live: no boundary has passed yet
+    assert eng.version == 0 and eng.params is params
+    assert eng._staged is not None
+    out1 = eng.generate(PROMPTS, steps=4)   # first boundary promotes
+    assert eng.version == 1 and eng.params is params2
+    assert eng._staged is None and eng.promotions == 1
+    with Engine(cfg, rt, params2, max_len=32, pa=pa, version=1) as fresh:
+        out2 = fresh.generate(PROMPTS, steps=4)
+    np.testing.assert_array_equal(out1, out2)
+    assert not np.array_equal(out0, out1)   # the params really changed
+    eng.close()
+
+
+def test_publish_composes_with_plan_swap_and_closes():
+    """A plan staged on top of a pending publication keeps the published
+    params (staging composes); close() is idempotent and every public
+    entry point raises after it."""
+    cfg, rt, params, pa, eng = _smoke_engine()
+    params2 = mdl.init_params(cfg, jax.random.PRNGKey(2))
+    eng.generate(PROMPTS, steps=2)          # build the live slot cache
+    eng.publish_params(params2, version=5)
+    eng.set_plan(pa)                        # swap plan on top of publish
+    eng.flush()
+    assert eng.version == 5 and eng.params is params2
+    out = eng.generate(PROMPTS, steps=2)
+    with Engine(cfg, rt, params2, max_len=32, pa=pa, version=5) as fresh:
+        np.testing.assert_array_equal(out, fresh.generate(PROMPTS, steps=2))
+    # the post-reshard path: a (pa, params) pair staged in ONE call swaps
+    # atomically — a boundary can never promote a mismatched pair
+    pa2 = jax.tree.map(lambda a: a + 0, pa)   # fresh tables object
+    eng.publish_params(params, version=6, pa=pa2, wait=True)
+    assert eng.pa is pa and eng.version == 5  # still old pair, staged only
+    eng.flush()
+    assert eng.pa is pa2 and eng.version == 6 and eng.params is params
+    eng.close()
+    eng.close()                             # idempotent
+    for call in (lambda: eng.publish_params(params2),
+                 lambda: eng.set_plan(pa),
+                 lambda: eng.flush(),
+                 lambda: eng.generate(PROMPTS, steps=1)):
+        with pytest.raises(RuntimeError):
+            call()
+
+
+def test_direct_params_assignment_wins_over_staged_promotion():
+    """``eng.params = tree`` after a publish was staged must not be
+    silently reverted by the promotion: the staged plan installs, the
+    staged params/version/slots are dropped, and decode serves the
+    directly-assigned tree."""
+    cfg, rt, params, pa, eng = _smoke_engine()
+    params2 = mdl.init_params(cfg, jax.random.PRNGKey(4))
+    params3 = mdl.init_params(cfg, jax.random.PRNGKey(5))
+    eng.generate(PROMPTS, steps=1)
+    eng.publish_params(params2, version=3, wait=True)
+    eng.params = params3              # the backdoor, AFTER staging
+    eng.flush()
+    assert eng.params is params3 and eng.version == 0
+    out = eng.generate(PROMPTS, steps=2)
+    with Engine(cfg, rt, params3, max_len=32, pa=eng.pa) as fresh:
+        np.testing.assert_array_equal(out, fresh.generate(PROMPTS, steps=2))
+    eng.close()
+
+
+def test_pending_build_joins_on_close_and_never_blocks_boundaries():
+    """The teardown guard: close() joins an in-flight staged build instead
+    of racing the buffer it captured, and _step_boundary defers (without
+    blocking) while the build runs."""
+    cfg, rt, params, pa, eng = _smoke_engine()
+    params2 = mdl.init_params(cfg, jax.random.PRNGKey(3))
+    eng.generate(PROMPTS, steps=1)
+    done = []
+    orig_build = eng._build_slots
+
+    def slow_build(pa_, buf, version=None, epoch=None):
+        time.sleep(0.8)
+        out = orig_build(pa_, buf, version, epoch)
+        done.append(version)
+        return out
+
+    eng._build_slots = slow_build
+    t0 = time.perf_counter()
+    eng.publish_params(params2, version=9)      # stages, returns at once
+    assert time.perf_counter() - t0 < 0.5
+    tb = time.perf_counter()
+    eng._step_boundary()                        # build in flight: defer
+    assert time.perf_counter() - tb < 0.5
+    assert eng.version == 0 and eng.deferred_boundaries >= 1
+    eng.close()                                 # JOINS the pending build
+    assert done == [9]                          # ran to completion first
+    assert time.perf_counter() - t0 >= 0.7
+    assert eng._staged is None and eng.version == 0    # never promoted
+
+
+def test_train_loop_publishes_versioned_params_into_engine():
+    """train_loop(publish_engine=, publish_every=k) pushes the optimizer-
+    updated tree into a live engine every k steps, versioned by step."""
+    cfg = C.get_smoke("gpt-moe-s")
+    rt = mdl.Runtime()
+    tc = TrainConfig(learning_rate=3e-3, warmup_steps=2, total_steps=8)
+    sched = HecateScheduler(cfg, ep=1, impl="ep")
+    eng = Engine(cfg, rt, mdl.init_params(cfg, jax.random.PRNGKey(0)),
+                 max_len=32, pa=sched.plan_arrays())
+    stream = make_stream(cfg.vocab_size, 32, 8, kind="bytes", seed=0)
+    state, _ = train_loop(cfg, rt, tc, stream, scheduler=sched,
+                          num_steps=8, log_every=0,
+                          publish_engine=eng, publish_every=3)
+    eng.flush()
+    assert eng.publications == 2                # steps 3 and 6
+    assert eng.version == 6
+    # the engine serves the trained params: parity with a fresh engine
+    out = eng.generate(PROMPTS, steps=3)
+    with Engine(cfg, rt, eng.params, max_len=32, pa=eng.pa,
+                version=eng.version) as fresh:
+        np.testing.assert_array_equal(out, fresh.generate(PROMPTS, steps=3))
+    eng.close()
+
+
+def test_serving_state_roundtrip(tmp_path):
+    """(plan, version, calibration) persists and restores; a restarted
+    engine at the restored state generates identically."""
+    cfg, rt, params, pa, eng = _smoke_engine(version=4)
+    calib = {"load_history": np.arange(12, dtype=np.float64).reshape(2, 6)}
+    d = str(tmp_path)
+    store.save_serving_state(d, 4, pa, eng.version, calib)
+    assert store.latest_serving_step(d) == 4
+    got = store.restore_serving_state(d)
+    assert got["version"] == 4 and got["step"] == 4
+    np.testing.assert_array_equal(got["calibration"]["load_history"],
+                                  calib["load_history"])
+    for a, b in zip(got["pa"], pa):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    out = eng.generate(PROMPTS, steps=3)
+    with Engine(cfg, rt, params, max_len=32,
+                pa=moe_core.tables_to_device(got["pa"]),
+                version=got["version"]) as eng2:
+        np.testing.assert_array_equal(out, eng2.generate(PROMPTS, steps=3))
+    # ordinary step checkpoints in the same directory are untouched
+    store.save(d, 4, {"params": {"x": np.zeros(3)}})
+    assert store.latest_step(d) == 4
+    assert store.restore_serving_state(d)["version"] == 4
+    eng.close()
+
+
+def test_restore_serving_state_missing_returns_none(tmp_path):
+    assert store.restore_serving_state(str(tmp_path)) is None
+
+
+# ---------------------------------------------------------------------------
+# Distributed: collective law + straddle semantics on a real mesh
+# ---------------------------------------------------------------------------
+PUBLISH_SCRIPT = r"""
+import numpy as np, jax, jax.numpy as jnp
+from functools import partial
+from repro.common.jaxprs import find_prims
+from repro.configs.gpt_moe_s import smoke
+from repro.core.placement import homogeneous_sharding
+from repro.core.schedule import sparse_materialization
+from repro.core import moe as moe_core
+from repro.models import model as mdl
+from repro.serve.engine import Engine
+
+cfg = smoke()
+EP = 4
+mesh = jax.make_mesh((2, EP), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+L = moe_core.num_moe_layers(cfg)
+E = cfg.moe.num_experts
+sh = homogeneous_sharding(L, E, EP)
+plan = sparse_materialization(sh, np.ones((L, E)), t=4, m=1, impl="ring")
+pa = moe_core.plan_to_arrays(plan)
+rt = mdl.Runtime(mesh=mesh, moe=moe_core.MoERuntime(
+    mesh=mesh, batch_axes=("data",), impl="ring", m=1, capacity=16,
+    use_pallas=True))
+params = mdl.init_params(cfg, jax.random.PRNGKey(0), ep=EP)
+params2 = mdl.init_params(cfg, jax.random.PRNGKey(1), ep=EP)
+params3 = mdl.init_params(cfg, jax.random.PRNGKey(2), ep=EP)
+prompts = np.asarray([[5, 7, 9], [1, 2, 3]], np.int32)
+COLL = {"ppermute", "all_gather"}
+
+# ---- 1a. the decode step with a fresh cache: ZERO spAG collectives ----
+eng = Engine(cfg, rt, params, max_len=32, pa=pa)
+premat = eng._materialized()               # the initial lazy build
+cache = mdl.init_cache(cfg, 2, 32)
+step = lambda p, c, t, pm: mdl.decode_step(cfg, rt, p, c, t, jnp.int32(0),
+                                           pa, premat=pm)
+n_step = len(find_prims(step, params, cache, prompts[:, :1], premat,
+                        prims=COLL))
+assert n_step == 0, n_step
+n_nopm = len(find_prims(lambda p, c, t: mdl.decode_step(
+    cfg, rt, p, c, t, jnp.int32(0), pa), params, cache, prompts[:, :1],
+    prims=COLL))
+assert n_nopm > 0, n_nopm         # without premat the spAG is in-step
+print(f"step collectives with/without premat: {n_step}/{n_nopm}")
+
+# ---- 1b. the publish path is ONE stacked gather with the full law ----
+build = partial(moe_core.materialize_stack, cfg, rt.moe,
+                dtype=jnp.dtype(cfg.dtype), name=False)
+eqns = find_prims(build, params["moe_buffer"], pa, prims=COLL)
+n_pp = sum(e.primitive.name == "ppermute" for e in eqns)
+n_ag = sum(e.primitive.name == "all_gather" for e in eqns)
+assert n_pp == L * plan.m, (n_pp, L, plan.m)   # ring spAG law
+assert n_ag == L, (n_ag, L)                    # FSDP half, one per layer
+print(f"stacked gather law: {n_pp} ppermutes, {n_ag} all_gathers")
+
+# ---- 1c. build counts: 0 steady-state, exactly 1 per publish ----------
+builds = []
+orig_mc = moe_core.materialize_chunks
+def counting_mc(*a, **k):
+    builds.append(k.get("pa_token"))
+    return orig_mc(*a, **k)
+moe_core.materialize_chunks = counting_mc
+out0 = eng.generate(prompts, steps=4)
+assert len(builds) == 0, builds            # cache fresh: ZERO builds
+out0b = eng.generate(prompts, steps=4)
+assert len(builds) == 0, builds            # unchanged (plan, version): 0
+assert (out0 == out0b).all()
+eng.publish_params(params2, wait=True)
+assert len(builds) == 1, builds            # exactly ONE stacked build,
+assert eng.version == 0                    # staged off the step path
+
+# ---- 2. straddle: steps during a publish read entirely old state ------
+record = []
+orig_step = eng.step_fn
+def recording_step(p, c, t, pos, pa_, pm):
+    which = 2 if p is params2 else (3 if p is params3 else 0)
+    record.append((eng.version, id(pm), which))
+    if len(record) == 4:                   # publication lands MID-step
+        eng.publish_params(params3, version=2, wait=True)
+    return orig_step(p, c, t, pos, pa_, pm)
+eng.step_fn = recording_step
+out1 = eng.generate(prompts, steps=4)
+moe_core.materialize_chunks = orig_mc
+eng.step_fn = orig_step
+assert len(builds) == 2, builds            # one more build for v2
+# the v1 publish promoted at the FIRST boundary of this generate; the
+# straddling v2 publish promoted at the NEXT boundary after it landed
+vs = [r[0] for r in record]
+ps = [r[2] for r in record]
+assert vs[0] == 1 and ps[0] == 2, record   # v1 live from first boundary
+assert vs[3] == 1 and ps[3] == 2, record   # straddling step: OLD version
+assert vs[4] == 2 and ps[4] == 3, record   # next boundary: published
+pm_ids = [r[1] for r in record]
+assert pm_ids[3] != pm_ids[4]              # slots swapped with the params
+assert len(set(pm_ids[4:])) == 1           # and stay cached afterwards
+assert eng.version == 2
+
+# ---- 3. bit-exact parity vs a fresh engine at the published version ---
+out2 = eng.generate(prompts, steps=4)
+fresh = Engine(cfg, rt, params3, max_len=32, pa=pa, version=2)
+out3 = fresh.generate(prompts, steps=4)
+assert (out2 == out3).all(), (out2, out3)
+assert not (out0 == out2).all()
+eng.close(); fresh.close()
+
+# ---- 4. direct params swap (no publish, version unchanged): the slot
+# memo must NOT serve stale chunks — buffer identity beats the counters
+eng2 = Engine(cfg, rt, params, max_len=32, pa=pa)
+o_a = eng2.generate(prompts, steps=3)
+eng2.params = params3                # swapped behind the engine's back
+o_b = eng2.generate(prompts, steps=3)
+fresh3 = Engine(cfg, rt, params3, max_len=32, pa=pa)
+assert (o_b == fresh3.generate(prompts, steps=3)).all()
+assert not (o_a == o_b).all()
+eng2.close(); fresh3.close()
+print("SERVE PUBLISH OK")
+"""
+
+
+def test_publish_collective_law_and_straddle_distributed(dist):
+    """jaxpr-asserted publish-path collective law (0 gathers steady-state,
+    1 stacked gather per publish, off the step path), swap-at-boundary
+    straddle semantics, and bit-exact decode parity vs a fresh engine —
+    on a real (2 data x 4 expert) mesh."""
+    out = dist(PUBLISH_SCRIPT, n_devices=8)
+    assert "SERVE PUBLISH OK" in out

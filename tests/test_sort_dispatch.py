@@ -7,6 +7,12 @@ import pytest
 
 from repro.core.moe import replica_dispatch, segment_ranks
 
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # CI installs hypothesis; local runs skip
+    HAVE_HYPOTHESIS = False
+
 
 def _make_tables(rng, M, K, E):
     """Random-but-consistent slot/replica tables: device d's slot j hosts
@@ -64,6 +70,27 @@ def _onehot_reference(e_safe, valid, expert_slot, replicas, n_rep_t, me, K,
     return dest, slot, pos, keep, counts.reshape(M, K)
 
 
+def _check_dispatch_parity(got, want, valid, K):
+    """Shared oracle-parity assertions: dest/slot/keep/group-size equality,
+    positions wherever they decide a scatter, and the prefix invariant the
+    group-size masking and the post-a2a compaction rely on."""
+    got = jax.tree.map(np.asarray, got)
+    np.testing.assert_array_equal(got[0][valid], want[0][valid])  # dest
+    np.testing.assert_array_equal(got[1][valid], want[1][valid])  # slot
+    np.testing.assert_array_equal(got[3], want[3])        # keep
+    np.testing.assert_array_equal(got[4], want[4])        # group sizes
+    # positions must agree wherever they matter (kept entries decide
+    # the scatter; dropped ones never reach a buffer)
+    np.testing.assert_array_equal(got[2][want[3]], want[2][want[3]])
+    # the prefix invariant: kept entries of cell c occupy exactly
+    # positions [0, counts[c])
+    kd, ks, kp = got[0][got[3]], got[1][got[3]], got[2][got[3]]
+    for c in np.unique(kd * K + ks):
+        pc = np.sort(kp[kd * K + ks == c])
+        np.testing.assert_array_equal(pc, np.arange(len(pc)))
+        assert len(pc) == got[4][c // K, c % K]
+
+
 @pytest.mark.parametrize("local_first", [True, False])
 @pytest.mark.parametrize("n,M,K,E,capacity", [
     (64, 4, 3, 8, 4), (257, 8, 4, 16, 3), (1024, 8, 8, 48, 7)])
@@ -80,21 +107,81 @@ def test_replica_dispatch_matches_onehot(n, M, K, E, capacity, local_first):
                       static_argnames=("K", "local_first"))(
             jnp.asarray(e_safe), jnp.asarray(valid), expert_slot, replicas,
             n_rep, me, K=K, capacity=capacity, local_first=local_first)
-        got = jax.tree.map(np.asarray, got)
-        np.testing.assert_array_equal(got[0][valid], want[0][valid])  # dest
-        np.testing.assert_array_equal(got[1][valid], want[1][valid])  # slot
-        np.testing.assert_array_equal(got[3], want[3])        # keep
-        np.testing.assert_array_equal(got[4], want[4])        # group sizes
-        # positions must agree wherever they matter (kept entries decide
-        # the scatter; dropped ones never reach a buffer)
-        np.testing.assert_array_equal(got[2][want[3]], want[2][want[3]])
-        # the prefix invariant the group-size masking/compaction rely on:
-        # kept entries of cell c occupy exactly positions [0, counts[c])
-        kd, ks, kp = got[0][got[3]], got[1][got[3]], got[2][got[3]]
-        for c in np.unique(kd * K + ks):
-            pc = np.sort(kp[kd * K + ks == c])
-            np.testing.assert_array_equal(pc, np.arange(len(pc)))
-            assert len(pc) == got[4][c // K, c % K]
+        _check_dispatch_parity(got, want, valid, K)
+
+
+def _dispatch_case(rng, T, k, E, M, K, capacity, assign_mode, valid_mode,
+                   local_first):
+    """One randomized dispatch-vs-oracle comparison over a flat (T·k,)
+    assignment drawn by mode (uniform / all-to-one-expert / round-robin
+    covering every expert, the k=E shape)."""
+    expert_slot, replicas, n_rep = _make_tables(rng, M, K, E)
+    n = T * k
+    if assign_mode == "one_expert":
+        e_safe = np.full((n,), int(rng.integers(0, E)), np.int32)
+    elif assign_mode == "all_experts":
+        # every token routed to every expert — the k = E degenerate case
+        e_safe = np.tile(np.arange(E, dtype=np.int32), -(-n // E))[:n]
+    else:
+        e_safe = rng.integers(0, E, (n,)).astype(np.int32)
+    if valid_mode == "all":
+        valid = np.ones((n,), bool)
+    elif valid_mode == "none":
+        valid = np.zeros((n,), bool)
+    else:
+        valid = rng.random(n) > 0.3
+    me = int(rng.integers(0, M))
+    want = _onehot_reference(e_safe, valid, np.asarray(expert_slot),
+                             np.asarray(replicas), np.asarray(n_rep),
+                             me, K, capacity, local_first)
+    # eager (un-jitted): every example is a fresh shape — jitting would
+    # compile per example
+    got = replica_dispatch(jnp.asarray(e_safe), jnp.asarray(valid),
+                           expert_slot, replicas, n_rep, me, K=K,
+                           capacity=capacity, local_first=local_first)
+    _check_dispatch_parity(got, want, valid, K)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=50, deadline=None)
+    @given(st.integers(1, 24), st.integers(1, 8), st.integers(2, 8),
+           st.integers(1, 6), st.integers(1, 6),
+           st.integers(0, 2 ** 32 - 1),
+           st.sampled_from(["uniform", "one_expert", "all_experts"]),
+           st.sampled_from(["random", "all", "none"]), st.booleans())
+    def test_replica_dispatch_property(T, kk, M, K, capacity, seed,
+                                       assign_mode, valid_mode,
+                                       local_first):
+        """Randomized (T, k, E, M, K, capacity) sweep of
+        ``replica_dispatch`` against the one-hot/cumsum oracle, including
+        the degenerate corners: k = E (every token to every expert),
+        capacity = 1, all tokens to one expert, and fully-invalid
+        batches."""
+        rng = np.random.default_rng(seed)
+        E = int(rng.integers(1, M * K + 1))
+        k = min(kk, E)                    # k = E reachable (kk >= E draws)
+        _dispatch_case(rng, T, k, E, M, K, capacity, assign_mode,
+                       valid_mode, local_first)
+
+
+@pytest.mark.parametrize("assign_mode", ["uniform", "one_expert",
+                                         "all_experts"])
+def test_replica_dispatch_degenerate_sweep(assign_mode):
+    """Seeded randomized sweep of the same property (runs without
+    hypothesis), pinning the degenerate corners: capacity=1, k=E, single
+    hot expert, empty valid mask."""
+    seeds = {"uniform": 11, "one_expert": 22, "all_experts": 33}
+    rng = np.random.default_rng(seeds[assign_mode])
+    for trial in range(12):
+        M = int(rng.integers(2, 9))
+        K = int(rng.integers(1, 7))
+        E = int(rng.integers(1, M * K + 1))
+        T = int(rng.integers(1, 25))
+        k = E if trial % 3 == 0 else int(rng.integers(1, E + 1))
+        capacity = 1 if trial % 4 == 0 else int(rng.integers(1, 7))
+        valid_mode = ["random", "all", "none"][trial % 3]
+        _dispatch_case(rng, T, k, E, M, K, capacity, assign_mode,
+                       valid_mode, bool(trial % 2))
 
 
 def test_segment_ranks_naive():
