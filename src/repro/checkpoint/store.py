@@ -1,9 +1,21 @@
-"""Atomic, versioned npz checkpoints for arbitrary pytrees.
+"""Atomic, versioned, integrity-checked npz checkpoints for pytrees.
 
 Layout:  <dir>/step_<n>/arrays.npz + meta.json (written to a tmp dir then
 renamed, so a crash never leaves a half-written checkpoint visible).
 Restores with the caller-provided target structure and (optionally) puts
 leaves onto the given shardings.
+
+Integrity: ``save`` records a per-array CRC32 in ``meta.json``
+(``format_version`` 2); ``restore`` verifies every array it reads and
+raises :class:`~repro.common.faults.CheckpointCorruptError` on mismatch,
+truncation, or an unreadable file — a torn write can therefore never be
+silently restored.  ``latest_step(verify=True)`` walks checkpoints
+newest-first and returns the newest INTACT one, which is what
+``train_loop``'s crash-safe auto-resume uses.  ``gc`` applies keep-last
+retention and removes orphaned ``.tmp_ckpt_*`` dirs left by a hard kill
+mid-save.  Fault-injection sites ``checkpoint.save_crash`` /
+``checkpoint.corrupt`` (see repro.common.faults) exercise both paths
+deterministically.
 """
 from __future__ import annotations
 
@@ -11,10 +23,18 @@ import json
 import os
 import shutil
 import tempfile
+import zlib
 from typing import Any, Optional
 
 import jax
 import numpy as np
+
+from repro.common import faults
+from repro.common.faults import CheckpointCorruptError
+
+__all__ = ["save", "restore", "verify", "latest_step", "list_steps",
+           "meta", "gc", "CheckpointCorruptError", "save_serving_state",
+           "restore_serving_state", "latest_serving_step"]
 
 
 def _flatten_with_paths(tree):
@@ -27,6 +47,11 @@ def _flatten_with_paths(tree):
     return out
 
 
+def _crc(arr: np.ndarray) -> int:
+    a = np.ascontiguousarray(arr)
+    return zlib.crc32(a.view(np.uint8) if a.dtype == object else a.data)
+
+
 def save(directory: str, step: int, tree: Any, extra_meta: Optional[dict] = None
          ) -> str:
     os.makedirs(directory, exist_ok=True)
@@ -36,30 +61,120 @@ def save(directory: str, step: int, tree: Any, extra_meta: Optional[dict] = None
         arrays = _flatten_with_paths(tree)
         np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
         meta = {"step": step, "num_arrays": len(arrays),
-                "format_version": 1, **(extra_meta or {})}
+                "format_version": 2,
+                "checksums": {k: _crc(v) for k, v in arrays.items()},
+                **(extra_meta or {})}
         with open(os.path.join(tmp, "meta.json"), "w") as f:
             json.dump(meta, f)
+        # chaos site: a crash between writing the arrays and the atomic
+        # rename must never surface a partial step_* dir
+        faults.fire("checkpoint.save_crash")
         if os.path.exists(final):
             shutil.rmtree(final)
         os.rename(tmp, final)
     except BaseException:
         shutil.rmtree(tmp, ignore_errors=True)
         raise
+    # chaos site: post-rename corruption (torn write / bit rot that made
+    # it to disk) — caught by the checksum verification on restore
+    faults.fire("checkpoint.corrupt", os.path.join(final, "arrays.npz"))
     return final
 
 
-def latest_step(directory: str) -> Optional[int]:
+def _step_dirs(directory: str):
+    """Decodable (step, dirname) pairs, skipping stray non-numeric
+    ``step_*`` entries (e.g. a user-created ``step_final/``)."""
+    out = []
+    for d in os.listdir(directory):
+        if not d.startswith("step_"):
+            continue
+        try:
+            out.append((int(d.split("_", 1)[1]), d))
+        except ValueError:
+            continue
+    return sorted(out)
+
+
+def list_steps(directory: str) -> list:
+    """All decodable checkpoint steps in ``directory``, sorted ascending
+    (no integrity verification — pair with ``verify_step``)."""
+    if not os.path.isdir(directory):
+        return []
+    return [s for s, _ in _step_dirs(directory)]
+
+
+def latest_step(directory: str, *, verify: bool = False) -> Optional[int]:
+    """Newest checkpoint step in ``directory`` (None when empty).
+
+    With ``verify=True`` the newest INTACT checkpoint wins: candidates are
+    checked newest-first (existence, readability, per-array checksums) and
+    corrupt ones are skipped — the crash-safe resume path."""
     if not os.path.isdir(directory):
         return None
-    steps = [int(d.split("_")[1]) for d in os.listdir(directory)
-             if d.startswith("step_")]
-    return max(steps) if steps else None
+    steps = [s for s, _ in _step_dirs(directory)]
+    if not verify:
+        return max(steps) if steps else None
+    for s in sorted(steps, reverse=True):
+        if verify_step(directory, s):
+            return s
+    return None
+
+
+def _load_verified(path: str):
+    """Load ``<path>/arrays.npz`` + meta, verifying checksums when the
+    checkpoint records them.  Raises CheckpointCorruptError on anything
+    short of a fully intact checkpoint."""
+    npz = os.path.join(path, "arrays.npz")
+    try:
+        data = np.load(npz)
+        arrays = {k: np.asarray(data[k]) for k in data.files}
+    except CheckpointCorruptError:
+        raise
+    except Exception as e:              # missing / truncated / unreadable
+        raise CheckpointCorruptError(f"{npz}: unreadable ({e})") from e
+    try:
+        with open(os.path.join(path, "meta.json")) as f:
+            m = json.load(f)
+    except Exception as e:
+        raise CheckpointCorruptError(
+            f"{path}/meta.json: unreadable ({e})") from e
+    sums = m.get("checksums")
+    if sums is not None:
+        if set(sums) != set(arrays):
+            raise CheckpointCorruptError(
+                f"{npz}: array set mismatch vs meta.json")
+        for k, want in sums.items():
+            got = _crc(arrays[k])
+            if got != want:
+                raise CheckpointCorruptError(
+                    f"{npz}: checksum mismatch for {k!r} "
+                    f"({got:#010x} != {want:#010x})")
+    return arrays, m
+
+
+def verify_step(directory: str, step: int) -> bool:
+    """True iff checkpoint ``step`` exists and passes integrity checks."""
+    path = os.path.join(directory, f"step_{step:08d}")
+    if not os.path.isdir(path):
+        return False
+    try:
+        _load_verified(path)
+        return True
+    except CheckpointCorruptError:
+        return False
+
+
+# back-compat alias (some callers read better with the noun)
+verify = verify_step
 
 
 def restore(directory: str, step: int, target: Any,
             shardings: Any = None) -> Any:
+    """Restore ``step`` into ``target``'s structure, verifying per-array
+    checksums first (checkpoints written before integrity support restore
+    unchecked).  Raises CheckpointCorruptError on a damaged checkpoint."""
     path = os.path.join(directory, f"step_{step:08d}")
-    data = np.load(os.path.join(path, "arrays.npz"))
+    data, _ = _load_verified(path)
     flat, treedef = jax.tree_util.tree_flatten_with_path(target)
     shard_flat = (treedef.flatten_up_to(shardings)
                   if shardings is not None else [None] * len(flat))
@@ -67,6 +182,9 @@ def restore(directory: str, step: int, target: Any,
     for (pth, leaf), shd in zip(flat, shard_flat):
         key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
                        for p in pth)
+        if key not in data:
+            raise CheckpointCorruptError(
+                f"{path}: missing array {key!r} for restore target")
         arr = data[key]
         assert arr.shape == tuple(leaf.shape), (key, arr.shape, leaf.shape)
         leaves.append(jax.device_put(arr, shd) if shd is not None
@@ -79,6 +197,31 @@ def meta(directory: str, step: int) -> dict:
         return json.load(f)
 
 
+def gc(directory: str, keep_last: int = 3) -> list:
+    """Retention + crash cleanup: delete all but the newest ``keep_last``
+    numeric ``step_*`` checkpoints and every orphaned ``.tmp_ckpt_*`` dir
+    (a hard kill mid-``save`` leaves one behind).  Single-writer
+    assumption: the caller is the only process saving into ``directory``,
+    so any tmp dir present here is dead.  Non-numeric ``step_*`` entries
+    and the ``serving/`` subdir are left untouched.  Returns the removed
+    paths."""
+    if not os.path.isdir(directory):
+        return []
+    removed = []
+    steps = _step_dirs(directory)
+    drop = steps[:-keep_last] if keep_last > 0 else steps
+    for _, d in drop:
+        p = os.path.join(directory, d)
+        shutil.rmtree(p, ignore_errors=True)
+        removed.append(p)
+    for d in os.listdir(directory):
+        if d.startswith(".tmp_ckpt_"):
+            p = os.path.join(directory, d)
+            shutil.rmtree(p, ignore_errors=True)
+            removed.append(p)
+    return removed
+
+
 # ---------------------------------------------------------------------------
 # Serving state: the (plan, version, calibration) triple a live engine needs
 # to resume consistent after a restart (training-while-serving).
@@ -87,7 +230,8 @@ _SERVE_SUBDIR = "serving"
 
 
 def save_serving_state(directory: str, step: int, pa, version: int,
-                       calibration: Optional[dict] = None) -> str:
+                       calibration: Optional[dict] = None,
+                       sharding: Optional[dict] = None) -> str:
     """Persist a serve engine's (plan tables, published version,
     calibration) state under ``<directory>/serving/step_<n>/``.
 
@@ -95,41 +239,54 @@ def save_serving_state(directory: str, step: int, pa, version: int,
     ``version`` is the engine's published parameter version (pair it with
     the parameter checkpoint of the same step); ``calibration`` is an
     optional dict of numpy arrays (e.g. the load predictor's history) so
-    the restarted scheduler does not re-plan from a cold predictor.  Atomic
-    like ``save`` — a crash never leaves a half-written state visible.
+    the restarted scheduler does not re-plan from a cold predictor;
+    ``sharding`` is an optional dict of numpy arrays/scalars describing
+    the live ``ShardingPlan`` (owner_dev/owner_row/num_devices/
+    rows_per_device/k_local) — REQUIRED for correct resume of a run that
+    reshards, because ``apply_reshard`` physically permutes the
+    checkpointed buffer rows and only this record says how.  Atomic
+    and checksummed like ``save`` — a crash never leaves a half-written
+    state visible, and a corrupted one is skipped on restore.
     """
     tree = {"plan": dict(pa._asdict()),
-            "calibration": dict(calibration or {})}
+            "calibration": dict(calibration or {}),
+            "sharding": dict(sharding or {})}
     return save(os.path.join(directory, _SERVE_SUBDIR), step, tree,
                 extra_meta={"kind": "serving_state",
                             "serve_version": int(version)})
 
 
-def latest_serving_step(directory: str) -> Optional[int]:
-    return latest_step(os.path.join(directory, _SERVE_SUBDIR))
+def latest_serving_step(directory: str, *, verify: bool = False
+                        ) -> Optional[int]:
+    return latest_step(os.path.join(directory, _SERVE_SUBDIR),
+                       verify=verify)
 
 
 def restore_serving_state(directory: str, step: Optional[int] = None
                           ) -> Optional[dict]:
     """Load the serving state saved by ``save_serving_state``; ``step``
-    defaults to the latest.  Returns ``{"pa": PlanArrays (numpy),
-    "version": int, "calibration": {name: array}, "step": int}`` — put the
-    tables on device with ``moe_core.tables_to_device`` — or None when no
-    serving state exists."""
+    defaults to the latest INTACT one.  Returns ``{"pa": PlanArrays
+    (numpy), "version": int, "calibration": {name: array},
+    "sharding": {name: array}, "step": int}`` — put the tables on device
+    with ``moe_core.tables_to_device``; ``sharding`` is empty for states
+    saved before sharding persistence — or None when no (intact) serving
+    state exists.  An explicitly requested corrupt step raises
+    CheckpointCorruptError."""
     sub = os.path.join(directory, _SERVE_SUBDIR)
     if step is None:
-        step = latest_step(sub)
+        step = latest_step(sub, verify=True)
         if step is None:
             return None
     from repro.core.moe import PlanArrays
     path = os.path.join(sub, f"step_{step:08d}")
     if not os.path.isdir(path):     # explicit step with no serving state
         return None
-    data = np.load(os.path.join(path, "arrays.npz"))
+    data, m = _load_verified(path)
     plan = {k.split("/", 1)[1]: np.asarray(data[k])
-            for k in data.files if k.startswith("plan/")}
+            for k in data if k.startswith("plan/")}
     calib = {k.split("/", 1)[1]: np.asarray(data[k])
-             for k in data.files if k.startswith("calibration/")}
-    m = meta(sub, step)
+             for k in data if k.startswith("calibration/")}
+    shard = {k.split("/", 1)[1]: np.asarray(data[k])
+             for k in data if k.startswith("sharding/")}
     return {"pa": PlanArrays(**plan), "version": int(m["serve_version"]),
-            "calibration": calib, "step": step}
+            "calibration": calib, "sharding": shard, "step": step}

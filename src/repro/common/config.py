@@ -292,6 +292,23 @@ class TrainConfig:
     total_steps: int = 1000
     seed: int = 0
     microbatch: int = 0                 # 0 = no gradient accumulation
+    # --- fault tolerance (repro.train.trainer.train_loop) -------------
+    # Step-health guard: skip the optimizer update when the loss or the
+    # gradient global norm is non-finite (the check rides the clipping
+    # gnorm and the existing metrics readback — no extra device sync).
+    # The skipped step's params/moments are bit-identical to the step
+    # before it; state.step still advances (one batch was consumed).
+    step_guard: bool = True
+    # Consecutive skipped steps tolerated before train_loop aborts with
+    # rollback to the last intact checkpoint (TrainAbortError).
+    max_bad_steps: int = 3
+    # Crash-safe training: "" disables periodic checkpointing.
+    checkpoint_dir: str = ""
+    checkpoint_every: int = 0           # steps between saves (0 = off)
+    keep_checkpoints: int = 3           # keep-last retention (store.gc)
+    # Auto-resume from the newest INTACT checkpoint when train_loop is
+    # started without an explicit state.
+    auto_resume: bool = True
 
 
 # TPU v5e hardware model (roofline constants).

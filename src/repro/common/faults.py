@@ -1,0 +1,228 @@
+"""Deterministic fault injection for the train->publish->serve loop.
+
+Every failure mode the fault-tolerance layer defends against has a NAMED
+injection point threaded through the production code.  Tests (and the CI
+``chaos`` job) arm a site with :func:`inject`; production code calls
+:func:`fire` at the site.  When nothing is armed ``fire`` is a single
+module-global boolean check (``_ARMED``) — zero allocation, zero locking,
+zero overhead on the hot path.  Injection is count-based (``after`` /
+``times`` hit windows), never random: a test that arms a site gets the
+same failure at the same step on every run.
+
+Injection points and the guarantee each one exercises
+-----------------------------------------------------
+``train.nan_grads``
+    Fired by ``train_loop`` with the step's batch as payload.  Arm with
+    ``mutate=faults.poison_grads`` to scale the step's gradients by NaN
+    (the batch grows a ``GRAD_SCALE_KEY`` entry that
+    ``build_train_step`` multiplies into the grads).  Guarantee: the
+    step-health guard skips the optimizer update (params bit-identical
+    across the step), ``skipped_steps`` increments, training continues;
+    after ``tc.max_bad_steps`` CONSECUTIVE bad steps ``train_loop``
+    aborts with rollback to the last intact checkpoint
+    (``TrainAbortError``).
+
+``scheduler.plan_job``
+    Fired inside the plan-ahead worker's job (background thread).  Arm
+    with ``exc=...`` to make the Alg-1 job raise.  Guarantee:
+    ``HecateScheduler.plan()`` catches the failure at ``_take_pending``,
+    logs once, falls back to the SYNCHRONOUS plan path (same plan the
+    worker would have produced), and increments ``plan_fallbacks`` —
+    training never sees the exception.
+
+``scheduler.plan_job_hang``
+    Fired inside the same job.  Arm with ``hang_s=...`` to stall the
+    worker.  Guarantee: ``plan()`` bounds the wait with
+    ``fut.result(timeout=plan_timeout_s)``, falls back synchronously,
+    counts the fallback, and DISABLES further plan-ahead submissions
+    (the single worker is wedged — degraded-to-synchronous planning,
+    ``plan_ahead_disabled``); ``close()`` must not block on the hung
+    job.  ``clear()`` releases every armed hang (the sleep waits on an
+    Event), so tests never leak a sleeping thread.
+
+``engine.publish_build``
+    Fired at the head of ``serve.Engine._build_slots`` (background
+    builder thread).  Arm with ``exc=...``.  Guarantee: the staged
+    publication is DROPPED at the next step boundary / ``flush`` — the
+    engine keeps serving the previous (params, plan, version) state, no
+    decode-path call ever raises, ``publish_drops`` increments and
+    ``last_publish_error`` holds the exception.
+
+``checkpoint.save_crash``
+    Fired inside ``store.save`` after the arrays are written but BEFORE
+    the atomic rename.  Arm with ``exc=...`` to simulate a crash
+    mid-save.  Guarantee: the half-written checkpoint is never visible
+    under ``step_*`` (the tmp dir is cleaned up, and even an orphaned
+    ``.tmp_ckpt_*`` left by a hard kill is removed by ``store.gc``);
+    resume falls back to the previous intact step.
+
+``checkpoint.corrupt``
+    Fired by ``store.save`` with the FINAL ``arrays.npz`` path after the
+    rename — a torn/bit-rotted write that made it to disk.  Arm with
+    ``mutate=faults.truncate_file`` or ``mutate=faults.bitflip_file``.
+    Guarantee: ``store.restore`` verifies per-array checksums and raises
+    ``CheckpointCorruptError``; ``store.latest_step(verify=True)`` (and
+    therefore ``train_loop`` auto-resume) falls back to the newest
+    INTACT checkpoint.
+
+Usage::
+
+    from repro.common import faults
+    faults.inject("train.nan_grads", mutate=faults.poison_grads,
+                  after=3, times=1)
+    try:
+        ...  # run the loop
+    finally:
+        faults.clear()
+
+``clear()`` (or the ``times`` budget running out on every site)
+disarms the registry and restores the zero-overhead path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Any, Callable, Dict, Optional
+
+import numpy as np
+
+# Batch key carrying an injected gradient scale through the jitted train
+# step (see repro.train.step.build_train_step).  Adding/removing the key
+# retraces once; an unarmed run never carries it.
+GRAD_SCALE_KEY = "__fault_grad_scale"
+
+
+class FaultError(RuntimeError):
+    """Default exception raised by an armed ``exc``-less injection."""
+
+
+class CheckpointCorruptError(RuntimeError):
+    """An integrity check failed on restore (see repro.checkpoint.store).
+
+    Lives here so the checkpoint store and its consumers share one
+    import-light home for failure types."""
+
+
+@dataclasses.dataclass
+class _Fault:
+    site: str
+    times: Optional[int] = 1            # fire budget; None = unlimited
+    after: int = 0                      # skip the first `after` hits
+    exc: Optional[Callable[[], BaseException]] = None
+    hang_s: float = 0.0
+    mutate: Optional[Callable[[Any], Any]] = None
+    hits: int = 0
+    fired: int = 0
+    release: threading.Event = dataclasses.field(
+        default_factory=threading.Event)
+
+
+_ARMED = False                          # the zero-overhead fast path
+_LOCK = threading.Lock()
+_SITES: Dict[str, _Fault] = {}
+
+
+def inject(site: str, *, times: Optional[int] = 1, after: int = 0,
+           exc: Optional[Callable[[], BaseException]] = None,
+           hang_s: float = 0.0,
+           mutate: Optional[Callable[[Any], Any]] = None) -> None:
+    """Arm ``site``.  The fault fires on hits ``after < n <= after+times``
+    (unlimited when ``times`` is None).  Exactly one of the behaviours
+    applies per firing, in order: hang (``hang_s``), payload mutation
+    (``mutate``), raise (``exc()``, default :class:`FaultError`).  A
+    mutating fault returns the mutated payload without raising."""
+    global _ARMED
+    with _LOCK:
+        _SITES[site] = _Fault(site, times=times, after=after, exc=exc,
+                              hang_s=hang_s, mutate=mutate)
+        _ARMED = True
+
+
+def clear(site: Optional[str] = None) -> None:
+    """Disarm one site (or all).  Releases any in-flight hangs."""
+    global _ARMED
+    with _LOCK:
+        if site is None:
+            victims = list(_SITES.values())
+            _SITES.clear()
+        else:
+            victims = [_SITES.pop(site)] if site in _SITES else []
+        for f in victims:
+            f.release.set()
+        _ARMED = bool(_SITES)
+
+
+def fired(site: str) -> int:
+    """How many times ``site`` has actually fired (not just been hit)."""
+    with _LOCK:
+        f = _SITES.get(site)
+        return f.fired if f is not None else 0
+
+
+def armed(site: Optional[str] = None) -> bool:
+    if not _ARMED:
+        return False
+    with _LOCK:
+        return site in _SITES if site is not None else bool(_SITES)
+
+
+def fire(site: str, payload: Any = None) -> Any:
+    """The injection point.  Returns ``payload`` (possibly mutated).
+
+    Disarmed (the common case): one global-boolean check, nothing else.
+    Armed: counts the hit; if inside the fire window, hangs / mutates /
+    raises per the site's spec."""
+    if not _ARMED:                      # zero-overhead fast path
+        return payload
+    with _LOCK:
+        f = _SITES.get(site)
+        if f is None:
+            return payload
+        f.hits += 1
+        due = (f.hits > f.after
+               and (f.times is None or f.fired < f.times))
+        if not due:
+            return payload
+        f.fired += 1
+        release, hang_s = f.release, f.hang_s
+        mutate, exc = f.mutate, f.exc
+    # act OUTSIDE the lock — a hang must not wedge the registry
+    if hang_s > 0:
+        release.wait(timeout=hang_s)
+        return payload
+    if mutate is not None:
+        return mutate(payload)
+    raise (exc() if exc is not None
+           else FaultError(f"injected fault at {site!r}"))
+
+
+# ---------------------------------------------------------------------------
+# Canned mutators for the standard sites
+# ---------------------------------------------------------------------------
+def poison_grads(batch: dict) -> dict:
+    """``train.nan_grads`` mutator: make this step's gradients NaN."""
+    batch = dict(batch)
+    batch[GRAD_SCALE_KEY] = np.float32(np.nan)
+    return batch
+
+
+def truncate_file(path: str, keep_frac: float = 0.5) -> str:
+    """``checkpoint.corrupt`` mutator: torn write — drop the file tail."""
+    import os
+    n = os.path.getsize(path)
+    with open(path, "r+b") as f:
+        f.truncate(max(int(n * keep_frac), 1))
+    return path
+
+
+def bitflip_file(path: str, offset: Optional[int] = None) -> str:
+    """``checkpoint.corrupt`` mutator: flip one byte mid-file."""
+    import os
+    n = os.path.getsize(path)
+    off = (n // 2) if offset is None else min(offset, n - 1)
+    with open(path, "r+b") as f:
+        f.seek(off)
+        b = f.read(1)
+        f.seek(off)
+        f.write(bytes([b[0] ^ 0xFF]))
+    return path

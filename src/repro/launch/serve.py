@@ -44,7 +44,10 @@ def main():
     params = mdl.init_params(cfg, jax.random.PRNGKey(args.seed))
     pa, version = None, 0
     if args.checkpoint_dir:
-        step = store.latest_step(args.checkpoint_dir)
+        # verify=True: a corrupt newest checkpoint falls back to the
+        # newest intact step (same walk train resume uses) instead of
+        # raising CheckpointCorruptError out of restore at startup
+        step = store.latest_step(args.checkpoint_dir, verify=True)
         if step is not None:
             target = jax.tree.map(
                 lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), params)

@@ -32,7 +32,19 @@ def main():
     ap.add_argument("--microbatch", type=int, default=0)
     ap.add_argument("--resharding-interval", type=int, default=100)
     ap.add_argument("--checkpoint-dir", default="")
-    ap.add_argument("--checkpoint-every", type=int, default=0)
+    ap.add_argument("--checkpoint-every", type=int, default=0,
+                    help="crash-safe periodic checkpointing interval "
+                         "(atomic + checksummed; 0 = final save only)")
+    ap.add_argument("--keep-checkpoints", type=int, default=3,
+                    help="keep-last retention for store.gc")
+    ap.add_argument("--no-resume", action="store_true",
+                    help="do not auto-resume from the newest intact "
+                         "checkpoint in --checkpoint-dir")
+    ap.add_argument("--no-step-guard", action="store_true",
+                    help="disable the non-finite loss/grad skip guard")
+    ap.add_argument("--max-bad-steps", type=int, default=3,
+                    help="consecutive skipped steps before abort with "
+                         "rollback to the last intact checkpoint")
     ap.add_argument("--data", default="synthetic",
                     choices=["synthetic", "bytes"])
     ap.add_argument("--skew", type=float, default=0.0)
@@ -49,7 +61,6 @@ def main():
     import numpy as np
 
     import repro.configs as configs
-    from repro.checkpoint import store
     from repro.common.config import TrainConfig
     from repro.core.schedule import ReshardingPolicy
     from repro.data.pipeline import make_stream
@@ -67,7 +78,13 @@ def main():
 
     tc = TrainConfig(learning_rate=args.lr, total_steps=args.steps,
                      warmup_steps=max(args.steps // 10, 1), seed=args.seed,
-                     microbatch=args.microbatch)
+                     microbatch=args.microbatch,
+                     step_guard=not args.no_step_guard,
+                     max_bad_steps=args.max_bad_steps,
+                     checkpoint_dir=args.checkpoint_dir,
+                     checkpoint_every=args.checkpoint_every,
+                     keep_checkpoints=args.keep_checkpoints,
+                     auto_resume=not args.no_resume)
     stream = make_stream(cfg.vocab_size, args.seq_len, args.global_batch,
                          kind=args.data, seed=args.seed, skew=args.skew)
     scheduler = None
@@ -76,17 +93,14 @@ def main():
             cfg, ep=ep, impl=args.impl,
             resharding=ReshardingPolicy(interval=args.resharding_interval))
 
-    def cb(i, state, metrics):
-        if (args.checkpoint_dir and args.checkpoint_every
-                and i and i % args.checkpoint_every == 0):
-            store.save(args.checkpoint_dir, i,
-                       {"params": state.params, "opt_count": state.opt.count})
-
+    # periodic checkpointing + auto-resume now live INSIDE train_loop
+    # (crash-safe: atomic renames, per-array checksums, keep-last GC,
+    # resume from the newest intact step — see repro.train.trainer)
     state, history = train_loop(cfg, rt, tc, stream, scheduler=scheduler,
-                                num_steps=args.steps, callback=cb)
+                                num_steps=args.steps)
     if args.checkpoint_dir:
-        store.save(args.checkpoint_dir, args.steps,
-                   {"params": state.params, "opt_count": state.opt.count})
+        from repro.train.trainer import save_train_state
+        save_train_state(tc, int(state.step), state, scheduler)
     if args.log_json:
         with open(args.log_json, "w") as f:
             json.dump(history, f)

@@ -82,10 +82,14 @@ def ssd_chunked(x, dt, A, Bm, Cm, chunk: int, initial_state=None):
     cum = jnp.cumsum(logdec, axis=2)                    # L_t
     # --- intra-chunk (quadratic within the chunk) ---------------------
     cb = jnp.einsum("bcqn,bcsn->bcqs", Cc, Bc)          # (B,nc,Q,Q)
-    dec = jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :])  # (B,nc,Q,Q,H)
-    tri = jnp.tril(jnp.ones((Q, Q), bool))
-    m = cb[..., None] * dec * dtc[:, :, None, :, :]
-    m = jnp.where(tri[None, None, :, :, None], m, 0.0)
+    tri = jnp.tril(jnp.ones((Q, Q), bool))[None, None, :, :, None]
+    # mask the EXPONENT, not just the product: above the diagonal
+    # cum_q - cum_s > 0 and exp overflows to inf — the forward where()
+    # would hide it, but exp's VJP then multiplies the masked-out zero
+    # cotangent by inf and NaNs every gradient upstream
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,nc,Q,Q,H)
+    dec = jnp.exp(jnp.where(tri, diff, 0.0))
+    m = jnp.where(tri, cb[..., None] * dec * dtc[:, :, None, :, :], 0.0)
     y_intra = jnp.einsum("bcqsh,bcshp->bcqhp", m, xc)
     # --- chunk summary states -----------------------------------------
     dec_end = jnp.exp(cum[:, :, -1:, :] - cum)          # decay from t to chunk end

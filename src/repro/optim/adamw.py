@@ -43,10 +43,27 @@ def global_norm(tree) -> jnp.ndarray:
     return jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves))
 
 
-def update(grads, state: OptState, params, tc: TrainConfig):
-    """Returns (new_params, new_state, metrics)."""
-    count = state.count + 1
+def update(grads, state: OptState, params, tc: TrainConfig, *,
+           skip_nonfinite: bool = False, extra_ok=None):
+    """Returns (new_params, new_state, metrics).
+
+    skip_nonfinite: step-health guard (fault tolerance).  The global grad
+    norm is already computed for clipping, so checking it for NaN/Inf is
+    FREE — no extra device sync, no extra reduction.  On a bad step every
+    parameter and moment is where-selected back to its old value and
+    ``count`` does not advance: the update is skipped bit-exactly, and
+    ``metrics["step_ok"]`` (0.0/1.0) rides the step's existing metrics
+    readback so the host-side skip policy (``train_loop``) costs nothing.
+    ``extra_ok`` ANDs in additional health predicates (e.g. a finite
+    loss).  On a good step the where-selects pick the freshly computed
+    values — numerics are bit-identical to the unguarded update."""
     gnorm = global_norm(grads)
+    ok = None
+    if skip_nonfinite:
+        ok = jnp.isfinite(gnorm)
+        if extra_ok is not None:
+            ok = jnp.logical_and(ok, extra_ok)
+    count = state.count + (1 if ok is None else ok.astype(jnp.int32))
     scale = jnp.minimum(1.0, tc.grad_clip / jnp.maximum(gnorm, 1e-9)) \
         if tc.grad_clip > 0 else jnp.ones(())
     lr = lr_schedule(tc, count)
@@ -54,14 +71,21 @@ def update(grads, state: OptState, params, tc: TrainConfig):
     c1 = 1 - b1 ** count.astype(jnp.float32)
     c2 = 1 - b2 ** count.astype(jnp.float32)
 
-    def upd(g, m, v, p):
+    def upd(g, m0, v0, p):
         g = g.astype(jnp.float32) * scale
-        m = b1 * m + (1 - b1) * g
-        v = b2 * v + (1 - b2) * g * g
+        m = b1 * m0 + (1 - b1) * g
+        v = b2 * v0 + (1 - b2) * g * g
         step_ = (m / c1) / (jnp.sqrt(v / c2) + tc.eps)
         newp = p.astype(jnp.float32) - lr * (step_ + tc.weight_decay
                                              * p.astype(jnp.float32))
-        return newp.astype(p.dtype), m, v
+        newp = newp.astype(p.dtype)
+        if ok is not None:
+            # skip bit-exactly: where SELECTS (never multiplies), so the
+            # NaNs a bad step produced cannot leak into the kept state
+            newp = jnp.where(ok, newp, p)
+            m = jnp.where(ok, m, m0)
+            v = jnp.where(ok, v, v0)
+        return newp, m, v
 
     flat_p, treedef = jax.tree.flatten(params)
     flat_g = treedef.flatten_up_to(grads)
@@ -72,4 +96,7 @@ def update(grads, state: OptState, params, tc: TrainConfig):
     new_p = treedef.unflatten([o[0] for o in out])
     new_m = treedef.unflatten([o[1] for o in out])
     new_v = treedef.unflatten([o[2] for o in out])
-    return new_p, OptState(new_m, new_v, count), {"grad_norm": gnorm, "lr": lr}
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    if ok is not None:
+        metrics["step_ok"] = ok.astype(jnp.float32)
+    return new_p, OptState(new_m, new_v, count), metrics

@@ -49,6 +49,13 @@ Transitions (the swap guarantees):
 * ``close()`` joins the background builder before dropping it, so a
   pending build never races the buffer it captured (teardown-safe; every
   public entry point raises after close).
+* A staged build that FAILED (its future holds an exception) is dropped
+  at the boundary instead of promoted: the engine keeps serving the
+  previous (params, plan, version) state, the decode path NEVER raises,
+  ``publish_drops`` counts the drop and ``last_publish_error`` holds the
+  exception (fault-injected via ``engine.publish_build`` in
+  tests/test_fault_tolerance.py).  ``flush()`` applies the same policy —
+  a failed build is dropped, not re-raised into the caller.
 
 ``checkpoint.store.save_serving_state`` persists the (plan, version,
 calibration) triple so a restarted engine resumes at the published
@@ -57,12 +64,14 @@ version instead of re-deriving it.
 from __future__ import annotations
 
 import threading
+from concurrent.futures import TimeoutError as FuturesTimeout
 from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.common import faults
 from repro.common.config import ModelConfig
 from repro.core import moe as moe_core
 from repro.core.moe import PlanArrays, VersionedBuffer
@@ -128,10 +137,14 @@ class Engine:
         self._lock = threading.Lock()
         self._closed = False
         # observability: publications staged / boundaries that promoted /
-        # boundaries that found the staged build still in flight
+        # boundaries that found the staged build still in flight /
+        # staged builds dropped because they FAILED (old version kept
+        # serving; the exception lands in last_publish_error)
         self.publications = 0
         self.promotions = 0
         self.deferred_boundaries = 0
+        self.publish_drops = 0
+        self.last_publish_error: Optional[BaseException] = None
 
     # ---- background slot builder --------------------------------------
     def _pool(self):
@@ -150,6 +163,14 @@ class Engine:
         return moe_core.materialize_chunks(self.cfg, self.rt.moe, buf, pa,
                                            pa_token=epoch)
 
+    def _staged_build(self, pa, buf, version, epoch):
+        """The background-thread body of a staged build.  The chaos site
+        lives HERE (not in ``_build_slots``) so injected failures hit the
+        publication path only — the lazy decode-path rebuild in
+        ``_materialized`` is never poisoned."""
+        faults.fire("engine.publish_build")
+        return self._build_slots(pa, buf, version, epoch)
+
     def _check_open(self):
         if self._closed:
             raise RuntimeError("Engine is closed")
@@ -165,10 +186,17 @@ class Engine:
         it under the same lock, so a concurrent close can never leave an
         unjoined build behind).  A previously staged triple is superseded
         (its build, if still running, drains harmlessly on the builder
-        thread — ``close`` joins it)."""
+        thread — ``close`` joins it); a superseded build that already
+        FAILED is counted as a drop first, so the failure surfaces in
+        ``publish_drops``/``last_publish_error`` even when no boundary
+        ever observed it."""
         self._check_open()
+        st = self._staged
+        if (st is not None and st["fut"].done()
+                and st["fut"].exception() is not None):
+            self._drop_failed(st)
         buf = self._buf_of(params)
-        fut = self._pool().submit(self._build_slots, pa, buf, version,
+        fut = self._pool().submit(self._staged_build, pa, buf, version,
                                   epoch)
         self._staged = dict(pa=pa, params=params, version=version,
                             epoch=epoch, fut=fut, buf=buf,
@@ -250,11 +278,22 @@ class Engine:
         return version
 
     # ---- promotion -----------------------------------------------------
+    def _drop_failed(self, st) -> None:
+        """A staged build raised: drop the triple at the boundary (lock
+        held).  The live (params, plan, version) state keeps serving —
+        the decode path never sees the failure."""
+        self.last_publish_error = st["fut"].exception()
+        self._staged = None
+        self.publish_drops += 1
+
     def _boundary_locked(self) -> None:
         if self._staged is None:
             return
         if not self._staged["fut"].done():
             self.deferred_boundaries += 1
+            return
+        if self._staged["fut"].exception() is not None:
+            self._drop_failed(self._staged)
             return
         self._promote(self._staged)
 
@@ -301,13 +340,22 @@ class Engine:
         """An EXPLICIT step boundary that waits: join the pending build (if
         any) and promote it.  Use between generate calls, before
         checkpointing serving state, or in tests that need the published
-        state visible deterministically."""
+        state visible deterministically.  A build that FAILED is dropped
+        (``publish_drops`` / ``last_publish_error``) exactly as a passive
+        boundary would — flush re-raises only a timeout, never the
+        build's own failure."""
         self._check_open()
         with self._lock:
             st = self._staged
             if st is None:
                 return
-            st["fut"].result(timeout=timeout)
+            try:
+                st["fut"].result(timeout=timeout)
+            except FuturesTimeout:
+                raise
+            except Exception:
+                self._drop_failed(st)
+                return
             self._promote(st)
 
     def close(self) -> None:

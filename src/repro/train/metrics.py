@@ -1,8 +1,10 @@
-"""Training metrics: JSONL sink, moving averages, throughput, and the
+"""Training metrics: JSONL sink, moving averages, throughput, the
 FSSDP load-balance observables (expert counts entropy, device-load
-imbalance) that the paper's Figure 3 tracks."""
+imbalance) that the paper's Figure 3 tracks, and the robustness counters
+(`RobustnessCounters`) the fault-tolerance layer surfaces per step."""
 from __future__ import annotations
 
+import dataclasses
 import json
 import os
 import time
@@ -10,6 +12,35 @@ from collections import deque
 from typing import Any, Dict, Optional
 
 import numpy as np
+
+
+@dataclasses.dataclass
+class RobustnessCounters:
+    """Cumulative fault-tolerance observables, surfaced in every
+    ``train_loop`` history record (and therefore in the JSONL sink via
+    ``MetricLogger``) so benches and e2e examples can assert on them.
+
+    skipped_steps:  optimizer updates skipped by the step-health guard
+                    (non-finite loss/grad norm; params bit-identical
+                    across the skip).
+    plan_fallbacks: plan-ahead jobs that raised or hung, answered by the
+                    synchronous Alg-1 path (HecateScheduler).
+    publish_drops:  parameter publications dropped at the engine boundary
+                    (failed slot build, or a publish call that raised) —
+                    the engine keeps serving the previous version.
+    resumes:        automatic restarts from the newest intact checkpoint.
+    rollbacks:      aborts that rolled state back to the last intact
+                    checkpoint after the consecutive-bad-step budget.
+    """
+
+    skipped_steps: int = 0
+    plan_fallbacks: int = 0
+    publish_drops: int = 0
+    resumes: int = 0
+    rollbacks: int = 0
+
+    def as_dict(self) -> Dict[str, int]:
+        return dataclasses.asdict(self)
 
 
 def expert_stats(counts: np.ndarray) -> Dict[str, float]:

@@ -33,6 +33,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.common.config import ModelConfig, TrainConfig
+from repro.common.faults import GRAD_SCALE_KEY
 from repro.core import moe as moe_core
 from repro.core.moe import MoEAux, PlanArrays, num_moe_layers
 from repro.models import model as mdl
@@ -174,6 +175,12 @@ def build_train_step(cfg: ModelConfig, rt: mdl.Runtime, tc: TrainConfig,
         return out, g, gp
 
     def train_step(state: TrainState, batch, pa: Optional[PlanArrays]):
+        # fault-injection hook (repro.common.faults, "train.nan_grads"):
+        # an armed run adds GRAD_SCALE_KEY to the batch and the step
+        # multiplies it into the grads — an unarmed batch never carries
+        # the key, so the production trace is unchanged
+        batch = dict(batch)
+        fault_scale = batch.pop(GRAD_SCALE_KEY, None)
         hoisted = hoist and pa is not None and n > 1
         premat = None
         if hoisted:
@@ -234,8 +241,17 @@ def build_train_step(cfg: ModelConfig, rt: mdl.Runtime, tc: TrainConfig,
                     + dbuf.astype(jnp.float32) * inv
             if "expert_counts" in metrics:
                 metrics["expert_counts"] = metrics["expert_counts"] * n
+        if fault_scale is not None:
+            grads = jax.tree.map(
+                lambda g: g * jnp.asarray(fault_scale, g.dtype), grads)
+        # step-health guard (tc.step_guard): skip the optimizer update on
+        # a non-finite loss or grad global norm.  The gnorm is already on
+        # the clipping path and step_ok rides the step's one metrics
+        # readback — no extra device sync.
+        extra_ok = jnp.isfinite(metrics["loss"]) if tc.step_guard else None
         new_params, new_opt, opt_metrics = adamw.update(
-            grads, state.opt, state.params, tc)
+            grads, state.opt, state.params, tc,
+            skip_nonfinite=tc.step_guard, extra_ok=extra_ok)
         metrics.update(opt_metrics)
         return TrainState(new_params, new_opt, state.step + 1), metrics
 

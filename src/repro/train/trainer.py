@@ -15,20 +15,43 @@ Per iteration (paper Fig. 5):
 from __future__ import annotations
 
 import dataclasses
+import os
+import queue
+import threading
 import time
+import warnings
+from concurrent.futures import Future
+from concurrent.futures import TimeoutError as _FutTimeout
 from typing import Any, Callable, Dict, Iterable, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint import store
+from repro.common import faults
 from repro.common.config import ModelConfig, TrainConfig
 from repro.core import moe as moe_core
 from repro.core.placement import (MaterializationPlan, ShardingPlan,
                                   ep_materialization, homogeneous_sharding)
 from repro.core.schedule import (LoadPredictor, ReshardingPolicy,
                                  sparse_materialization)
+from repro.train import metrics as metrics_lib
 from repro.train import step as step_lib
+
+
+class TrainAbortError(RuntimeError):
+    """Raised by ``train_loop`` when the consecutive-bad-step budget
+    (``tc.max_bad_steps``) is exhausted.  ``state`` carries the training
+    state AFTER rollback to the last intact checkpoint (or the live state
+    when no checkpointing was configured), ``history`` the per-step
+    records up to the abort, ``step`` the global step that aborted."""
+
+    def __init__(self, msg: str, state=None, history=None, step: int = -1):
+        super().__init__(msg)
+        self.state = state
+        self.history = history or []
+        self.step = step
 
 
 def placement_latency_safe(ctx, plan, loads, layer):
@@ -47,6 +70,46 @@ def reshard_perm(old: ShardingPlan, new: ShardingPlan) -> np.ndarray:
     new_g = new.owner_dev.astype(np.int64) * new.rows_per_device + new.owner_row
     perm[new_g.reshape(-1)] = old_g.reshape(-1)
     return perm
+
+
+class _PlanWorker:
+    """Single background DAEMON thread running plan-ahead jobs.
+
+    Deliberately not a ``ThreadPoolExecutor``: its threads are non-daemon
+    and ``concurrent.futures`` registers an atexit join, so a genuinely
+    hung Alg-1 job would wedge interpreter shutdown even after the
+    scheduler routed around it (``shutdown(wait=False)`` only makes the
+    *call* non-blocking).  A daemon thread can simply be abandoned — a
+    wedged job dies with the process instead of blocking its exit."""
+
+    def __init__(self):
+        self._q = queue.SimpleQueue()
+        self._thread = threading.Thread(target=self._run,
+                                        name="hecate-plan", daemon=True)
+        self._thread.start()
+
+    def _run(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            fut, fn = item
+            if not fut.set_running_or_notify_cancel():
+                continue                # cancelled before it started
+            try:
+                fut.set_result(fn())
+            except BaseException as e:
+                fut.set_exception(e)
+
+    def submit(self, fn) -> Future:
+        fut = Future()
+        self._q.put((fut, fn))
+        return fut
+
+    def stop(self) -> None:
+        """Ask the thread to exit after the in-flight job (never blocks;
+        a wedged job just leaves the daemon parked until process exit)."""
+        self._q.put(None)
 
 
 @dataclasses.dataclass
@@ -87,6 +150,7 @@ class HecateScheduler:
     calibration_margin: float = 0.05
     tokens_per_step: float = 0.0    # for the latency model; 0 = est later
     async_plan: bool = True         # plan step i+1 while step i runs
+    plan_timeout_s: float = 30.0    # bound on joining a plan-ahead job
 
     def __post_init__(self):
         L = moe_core.num_moe_layers(self.cfg)
@@ -100,13 +164,16 @@ class HecateScheduler:
         self._prefetched_tables = None
         self.calibration_events = 0
         self.plan_ahead_hits = 0
+        # degraded-mode accounting: background jobs that raised or hung
+        # and were answered by the synchronous plan path instead
+        self.plan_fallbacks = 0
+        self._fallback_warned = False
+        self._worker_poisoned = False   # a job hung; the worker is wedged
 
     # ---- plan-ahead machinery ----------------------------------------
-    def _pool(self):
+    def _pool(self) -> _PlanWorker:
         if self._executor is None:
-            from concurrent.futures import ThreadPoolExecutor
-            self._executor = ThreadPoolExecutor(
-                max_workers=1, thread_name_prefix="hecate-plan")
+            self._executor = _PlanWorker()
         return self._executor
 
     def plan_ahead(self) -> None:
@@ -125,6 +192,11 @@ class HecateScheduler:
         sh = self.sharding
 
         def job():
+            # chaos sites (repro.common.faults): an armed exception/hang
+            # here must degrade to synchronous planning, never kill the
+            # training loop
+            faults.fire("scheduler.plan_job")
+            faults.fire("scheduler.plan_job_hang")
             plan = sparse_materialization(
                 sh, pred, t=self.t, m=self.cfg.moe.slots_per_device,
                 impl=self.impl)
@@ -132,8 +204,24 @@ class HecateScheduler:
 
         self._pending = (self._pool().submit(job), sh)
 
+    def _warn_fallback_once(self, msg: str) -> None:
+        if not self._fallback_warned:
+            self._fallback_warned = True
+            warnings.warn(f"HecateScheduler: {msg}", RuntimeWarning,
+                          stacklevel=3)
+
     def _take_pending(self):
-        """Returns (plan, numpy tables) or None."""
+        """Returns (plan, numpy tables) or None.
+
+        DEGRADED MODE: a background job that raised is swallowed here
+        (logged once, ``plan_fallbacks`` counted) and the caller falls
+        back to the synchronous plan path — a planner bug costs one
+        on-path Alg-1 run, never the training run.  The join is bounded
+        by ``plan_timeout_s``: a HUNG job additionally poisons the
+        single-thread worker (a running thread cannot be cancelled), so
+        plan-ahead is disabled for the rest of this scheduler's life and
+        every later plan is computed synchronously; ``close()`` will not
+        block on the wedged job."""
         if self._pending is None:
             return None
         fut, sh = self._pending
@@ -141,7 +229,23 @@ class HecateScheduler:
         if sh is not self.sharding:         # resharded since — stale plan
             fut.cancel()
             return None
-        return fut.result()
+        try:
+            return fut.result(timeout=self.plan_timeout_s)
+        except _FutTimeout:
+            self._worker_poisoned = True
+            self.async_plan = False         # degrade: sync planning only
+            self.plan_fallbacks += 1
+            self._warn_fallback_once(
+                f"plan-ahead job hung (> {self.plan_timeout_s:.1f}s); "
+                "disabling plan-ahead and falling back to synchronous "
+                "planning")
+            return None
+        except Exception as e:
+            self.plan_fallbacks += 1
+            self._warn_fallback_once(
+                f"plan-ahead job failed ({e!r}); falling back to "
+                "synchronous planning")
+            return None
 
     def _drop_pending(self) -> None:
         """Discard a prefetched plan WITHOUT joining it — the worker may
@@ -153,10 +257,13 @@ class HecateScheduler:
             self._pending = None
 
     def close(self) -> None:
-        """Join the plan-ahead worker (tests / clean shutdown)."""
-        self._pending = None
+        """Release the plan-ahead worker (tests / clean shutdown).  Never
+        blocks: the worker is a DAEMON thread (see ``_PlanWorker``), so a
+        poisoned worker (hung job) is abandoned — it can wedge neither
+        this call nor interpreter shutdown."""
+        self._drop_pending()
         if self._executor is not None:
-            self._executor.shutdown(wait=True)
+            self._executor.stop()
             self._executor = None
 
     # ---- planning ----------------------------------------------------
@@ -254,6 +361,133 @@ def apply_reshard(state: step_lib.TrainState, perm: np.ndarray
     return step_lib.TrainState(new_params, new_opt, state.step)
 
 
+def _state_tree(state: step_lib.TrainState) -> Dict[str, Any]:
+    """The checkpointed pytree: params + FULL optimizer state + step —
+    everything an exact-resume needs (kill-and-resume parity ≤ 1e-5 is
+    asserted in tests/test_fault_tolerance.py)."""
+    return {"params": state.params, "opt": state.opt, "step": state.step}
+
+
+def _sharding_tree(sh: ShardingPlan) -> Dict[str, np.ndarray]:
+    """The persisted form of a ShardingPlan (see ``_sharding_from_tree``)."""
+    return {"owner_dev": np.asarray(sh.owner_dev, np.int32),
+            "owner_row": np.asarray(sh.owner_row, np.int32),
+            "num_devices": np.int64(sh.num_devices),
+            "rows_per_device": np.int64(sh.rows_per_device),
+            "k_local": np.int64(sh.k_local)}
+
+
+def _sharding_from_tree(shard: Dict[str, np.ndarray]) -> ShardingPlan:
+    od = np.asarray(shard["owner_dev"], np.int32)
+    plan = ShardingPlan(
+        num_layers=od.shape[0], num_experts=od.shape[1],
+        num_devices=int(shard["num_devices"]),
+        rows_per_device=int(shard["rows_per_device"]),
+        owner_dev=od, owner_row=np.asarray(shard["owner_row"], np.int32),
+        k_local=int(shard["k_local"]))
+    plan.validate()
+    return plan
+
+
+def save_train_state(tc: TrainConfig, gstep: int,
+                     state: step_lib.TrainState,
+                     scheduler: Optional[HecateScheduler] = None) -> None:
+    """One crash-safe checkpoint: train state (atomic, checksummed) plus
+    — when a scheduler is live and has planned — its predictor history,
+    current plan tables AND current ShardingPlan via the serving-state
+    path, then keep-last retention + orphaned-tmp GC for both.
+
+    The ShardingPlan is load-bearing, not advisory: ``apply_reshard``
+    physically permutes the checkpointed ``moe_buffer`` rows, so a resume
+    that re-plans under a fresh homogeneous sharding would silently map
+    experts to the wrong rows.  ``resume_train_state`` restores it (and
+    refuses to resume a resharding-enabled run without it)."""
+    store.save(tc.checkpoint_dir, gstep, _state_tree(state))
+    if scheduler is not None and scheduler._last_plan is not None:
+        calib = ({"load_history": np.stack(scheduler.predictor.history)}
+                 if scheduler.predictor.history else None)
+        store.save_serving_state(
+            tc.checkpoint_dir, gstep,
+            moe_core.plan_tables(scheduler._last_plan),
+            version=gstep, calibration=calib,
+            sharding=_sharding_tree(scheduler.sharding))
+    if tc.keep_checkpoints > 0:
+        store.gc(tc.checkpoint_dir, keep_last=tc.keep_checkpoints)
+        store.gc(os.path.join(tc.checkpoint_dir, "serving"),
+                 keep_last=tc.keep_checkpoints)
+
+
+def resume_train_state(cfg: ModelConfig, tc: TrainConfig,
+                       scheduler: Optional[HecateScheduler] = None,
+                       ep: int = 1):
+    """Restore (TrainState, global_step) from the newest RESTORABLE
+    checkpoint in ``tc.checkpoint_dir``.  The walk goes newest-first and
+    skips (a) corrupt/truncated checkpoints — torn writes, bit rot, a
+    crash mid-save — via the per-array checksum verification, and (b)
+    checkpoints that verify but cannot restore today's tree (e.g. an
+    old-format ``{params, opt_count}`` save from before full-state
+    checkpointing), warning and falling back to the next-newest.
+
+    Also rehydrates the scheduler from the serving-state saved alongside:
+    the load-predictor history (so the resumed run re-plans from the same
+    window the killed run saw) and the ShardingPlan that was live at save
+    time.  The latter is a correctness requirement, not an optimization —
+    a reshard physically permuted the checkpointed buffer rows, and a
+    fresh scheduler's homogeneous sharding would silently train with the
+    wrong expert-to-row mapping.  When resharding is enabled but the
+    checkpoint carries no sharding record, resume is REFUSED (fresh init
+    with a warning) rather than guessed.
+
+    Returns (None, 0) when no restorable checkpoint exists."""
+    if not os.path.isdir(tc.checkpoint_dir):
+        return None, 0
+    target = step_lib.init_state(cfg, jax.random.PRNGKey(tc.seed), ep)
+    state = gstep = None
+    for cand in reversed(store.list_steps(tc.checkpoint_dir)):
+        if not store.verify_step(tc.checkpoint_dir, cand):
+            continue                    # torn / bit-rotted — skip
+        try:
+            data = store.restore(tc.checkpoint_dir, cand,
+                                 _state_tree(target))
+        except store.CheckpointCorruptError as e:
+            warnings.warn(
+                f"resume: checkpoint step {cand} is intact but not "
+                f"restorable into the current train state ({e}); trying "
+                f"an older one", RuntimeWarning)
+            continue
+        state = step_lib.TrainState(data["params"], data["opt"],
+                                    data["step"])
+        gstep = cand
+        break
+    if state is None:
+        return None, 0
+    if scheduler is not None:
+        try:
+            ss = store.restore_serving_state(tc.checkpoint_dir, step=gstep)
+        except store.CheckpointCorruptError:
+            ss = None                   # params intact, serving state torn
+        shard = (ss or {}).get("sharding") or {}
+        if shard:
+            scheduler._drop_pending()   # planned against the old sharding
+            scheduler.sharding = _sharding_from_tree(shard)
+            scheduler._calibrated = None
+            scheduler._last_plan = None
+            scheduler._prefetched_tables = None
+        elif (scheduler.resharding is not None
+              and scheduler.impl not in ("ep", "dense")):
+            warnings.warn(
+                f"resume: checkpoint step {gstep} carries no sharding "
+                f"plan but resharding is enabled — its buffer rows may "
+                f"have been permuted by a reshard this process cannot "
+                f"reconstruct; refusing to resume (fresh init)",
+                RuntimeWarning)
+            return None, 0
+        hist = (ss or {}).get("calibration", {}).get("load_history")
+        if hist is not None:
+            scheduler.predictor.history = [np.asarray(h) for h in hist]
+    return state, int(state.step)
+
+
 def train_loop(cfg: ModelConfig, rt, tc: TrainConfig,
                stream: Iterable[Dict[str, np.ndarray]],
                *, scheduler: Optional[HecateScheduler] = None,
@@ -283,8 +517,48 @@ def train_loop(cfg: ModelConfig, rt, tc: TrainConfig,
     executing and the engine swaps at its next decode-step boundary.
     Publication is entirely off this loop's critical path: the call only
     stages (it never builds slots or blocks on the engine).
+
+    Fault tolerance (all knobs on ``tc``; counters in every history
+    record — see ``repro.train.metrics.RobustnessCounters``):
+
+    * **Skip policy** (``tc.step_guard``): a step whose loss or grad
+      global norm is non-finite does NOT update params/optimizer state
+      (bit-identical skip, fused into the jitted step — zero extra device
+      syncs); the loop counts it (``skipped_steps``) and continues.
+      After ``tc.max_bad_steps`` CONSECUTIVE bad steps the loop aborts
+      with :class:`TrainAbortError`, first rolling ``.state`` back to the
+      newest intact checkpoint when checkpointing is on (``rollbacks``).
+    * **Crash-safe resume**: with ``tc.checkpoint_dir`` +
+      ``tc.checkpoint_every``, the loop checkpoints params + full
+      optimizer state + step atomically with per-array checksums, applies
+      keep-last retention and orphaned-tmp GC (``store.gc``), and — when
+      started without an explicit ``state`` and ``tc.auto_resume`` —
+      resumes from the newest INTACT checkpoint: corrupt checkpoints are
+      skipped, the stream is fast-forwarded by the restored step count so
+      the data order matches an uninterrupted run, and the scheduler's
+      predictor window AND ShardingPlan are rehydrated via the
+      serving-state path (``resumes``) — the sharding restore keeps the
+      physically-permuted (resharded) buffer rows consistent with future
+      plans; a resharding-enabled run whose checkpoint lacks a sharding
+      record starts fresh instead of guessing.  ``num_steps`` is the
+      TOTAL step target: a run resumed at step k executes steps
+      k..num_steps.
+    * **Degraded modes**: a plan-ahead job that raises or hangs falls
+      back to synchronous planning (``plan_fallbacks``; a hang also
+      disables further plan-ahead — see ``HecateScheduler``); a closed or
+      failing ``publish_engine`` never kills training — the failed
+      publication is counted (``publish_drops``), a closed engine stops
+      further publications, and the engine itself drops failed slot
+      builds at its boundary without ever raising on the decode path.
     """
     num_steps = num_steps or tc.total_steps
+    counters = metrics_lib.RobustnessCounters()
+    start = 0
+    if state is None and tc.checkpoint_dir and tc.auto_resume:
+        state, start = resume_train_state(cfg, tc, scheduler,
+                                          scheduler.ep if scheduler else 1)
+        if state is not None:
+            counters.resumes += 1
     if state is None:
         state = step_lib.init_state(cfg, jax.random.PRNGKey(tc.seed),
                                     scheduler.ep if scheduler else 1)
@@ -292,14 +566,29 @@ def train_loop(cfg: ModelConfig, rt, tc: TrainConfig,
         train_step_fn = jax.jit(step_lib.build_train_step(cfg, rt, tc))
     history = []
     it = iter(stream)
+    for _ in range(start):          # align data order with the killed run
+        next(it)
     pending_replan = False          # reshard since the last publication?
     # publications are versioned by the GLOBAL training step (monotone
     # across resumed runs — a restored engine must never see its version
     # counter regress), not this loop's local index
     step_base = int(state.step)
+    bad_streak = 0
+    publish_warned = False
+    loop_pub_failures = 0
+    # engine/scheduler-side counters are read as deltas from here, so a
+    # pre-used engine's or scheduler's history (e.g. a restart after
+    # TrainAbortError) does not leak into this run's counters
+    eng_drops0 = getattr(publish_engine, "publish_drops", 0) or 0
+    eng_drops = 0
+    plan_fb0 = scheduler.plan_fallbacks if scheduler is not None else 0
     try:
-        for i in range(num_steps):
+        for i in range(start, num_steps):
+            gstep = step_base + (i - start) + 1     # global step AFTER i
             batch = {k: jnp.asarray(v) for k, v in next(it).items()}
+            # chaos site: tests arm this with faults.poison_grads to make
+            # THIS step's gradients NaN (see repro.common.faults)
+            batch = faults.fire("train.nan_grads", batch)
             pa = None
             if scheduler is not None and cfg.moe.enabled:
                 perm = scheduler.maybe_reshard(i)
@@ -319,14 +608,28 @@ def train_loop(cfg: ModelConfig, rt, tc: TrainConfig,
                 # happens at the engine's next decode-step boundary.
                 # After a reshard the engine's plan tables describe the
                 # OLD row ownership — publish the fresh plan WITH the
-                # params so they swap as one atomic pair.
-                if pending_replan and pa is not None:
-                    publish_engine.publish_params(
-                        state.params, version=step_base + i + 1, pa=pa)
-                    pending_replan = False
-                else:
-                    publish_engine.publish_params(
-                        state.params, version=step_base + i + 1)
+                # params so they swap as one atomic pair.  A failing or
+                # closed engine must not kill training: the publication
+                # is dropped (counted), and a closed engine disables
+                # further publications for this run.
+                try:
+                    if pending_replan and pa is not None:
+                        publish_engine.publish_params(
+                            state.params, version=gstep, pa=pa)
+                        pending_replan = False
+                    else:
+                        publish_engine.publish_params(
+                            state.params, version=gstep)
+                except Exception as e:
+                    loop_pub_failures += 1
+                    if not publish_warned:
+                        publish_warned = True
+                        warnings.warn(
+                            f"train_loop: parameter publication failed "
+                            f"({e!r}); training continues unpublished",
+                            RuntimeWarning)
+                    if getattr(publish_engine, "_closed", False):
+                        publish_engine = None
             if (scheduler is not None and cfg.moe.enabled
                     and i + 1 < num_steps):
                 # plan step i+1 while step i runs on-device
@@ -335,8 +638,23 @@ def train_loop(cfg: ModelConfig, rt, tc: TrainConfig,
             dt = time.perf_counter() - t0
             if scheduler is not None and "expert_counts" in metrics:
                 scheduler.observe(metrics["expert_counts"])
+            # ---- step-health skip policy (rides the readback above) ----
+            step_ok = float(metrics.get("step_ok", 1.0)) >= 0.5
+            if not step_ok:
+                counters.skipped_steps += 1
+                bad_streak += 1
+            else:
+                bad_streak = 0
+            if scheduler is not None:
+                counters.plan_fallbacks = (scheduler.plan_fallbacks
+                                           - plan_fb0)
+            if publish_engine is not None:
+                eng_drops = (getattr(publish_engine, "publish_drops", 0)
+                             or 0) - eng_drops0
+            counters.publish_drops = loop_pub_failures + eng_drops
             rec = {"step": i, "loss": float(metrics["loss"]),
-                   "xent": float(metrics["xent"]), "time_s": dt}
+                   "xent": float(metrics["xent"]), "time_s": dt,
+                   "step_ok": float(step_ok), **counters.as_dict()}
             if "dropped_frac" in metrics:
                 rec["dropped_frac"] = float(metrics["dropped_frac"])
             if "pad_frac" in metrics:
@@ -346,6 +664,30 @@ def train_loop(cfg: ModelConfig, rt, tc: TrainConfig,
             history.append(rec)
             if callback:
                 callback(i, state, metrics)
+            if bad_streak >= tc.max_bad_steps > 0:
+                # budget exhausted: roll back to the last intact
+                # checkpoint (params poisoned-in-flight are abandoned)
+                # and surface the abort instead of training on garbage
+                if tc.checkpoint_dir:
+                    rolled, rstep = resume_train_state(
+                        cfg, tc, scheduler,
+                        scheduler.ep if scheduler else 1)
+                    if rolled is not None:
+                        state = rolled
+                        counters.rollbacks += 1
+                        if history:
+                            history[-1].update(counters.as_dict())
+                tail = ("state rolled back to last intact checkpoint"
+                        if counters.rollbacks
+                        else "no checkpoint to roll back to")
+                raise TrainAbortError(
+                    f"aborting: {bad_streak} consecutive bad steps "
+                    f"(tc.max_bad_steps={tc.max_bad_steps}) at global "
+                    f"step {gstep}; {tail}",
+                    state=state, history=history, step=gstep)
+            if (tc.checkpoint_dir and tc.checkpoint_every
+                    and step_ok and gstep % tc.checkpoint_every == 0):
+                save_train_state(tc, gstep, state, scheduler)
             if log_every and i % log_every == 0:
                 print(f"step {i:5d}  loss {rec['loss']:.4f}  "
                       f"xent {rec['xent']:.4f}  {dt*1e3:.0f} ms")

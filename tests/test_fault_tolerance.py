@@ -1,0 +1,532 @@
+"""Fault-tolerance layer: step guards, crash-safe resume, degraded modes.
+
+Every failure is injected deterministically through the named sites in
+``repro.common.faults`` (the module docstring there specifies each site's
+guarantee).  The CI ``chaos`` job runs this file with a per-test timeout,
+so a hang regression fails fast instead of wedging the runner.
+"""
+import dataclasses
+import os
+import time
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+import repro.configs as C
+from repro.checkpoint import store
+from repro.common import faults
+from repro.common.config import ModelConfig, MoEConfig, TrainConfig
+from repro.core.placement import homogeneous_sharding
+from repro.core.schedule import ReshardingPolicy
+from repro.data.pipeline import make_stream
+from repro.models import model as mdl
+from repro.train import step as step_lib
+from repro.train.trainer import (HecateScheduler, TrainAbortError,
+                                 resume_train_state, train_loop)
+
+
+@pytest.fixture(autouse=True)
+def _disarm_faults():
+    """No test may leak an armed injection site into the next."""
+    yield
+    faults.clear()
+
+
+def _dense_cfg():
+    return C.get_smoke("smollm-360m")
+
+
+def _stream(cfg, seed=0):
+    return make_stream(cfg.vocab_size, 16, 4, kind="bytes", seed=seed)
+
+
+def _tc(**kw):
+    kw.setdefault("learning_rate", 3e-3)
+    kw.setdefault("warmup_steps", 2)
+    kw.setdefault("total_steps", 8)
+    return TrainConfig(**kw)
+
+
+def _moe_cfg():
+    return ModelConfig(name="t", arch_type="moe", num_layers=2, d_model=64,
+                       num_heads=4, num_kv_heads=4, d_ff=128, vocab_size=64,
+                       moe=MoEConfig(num_experts=8, experts_per_token=2,
+                                     d_ff=64, slots_per_device=2),
+                       dtype="float32")
+
+
+# ---------------------------------------------------------------------------
+# Step-health guard
+# ---------------------------------------------------------------------------
+def test_nan_grads_skips_update_and_training_continues():
+    """Injected NaN grads: the optimizer update is skipped BIT-EXACTLY
+    (params identical across the skipped step), the very next step
+    updates again, and the skip is surfaced in the history counters."""
+    cfg, rt = _dense_cfg(), mdl.Runtime()
+    snaps = {}
+
+    def cb(i, state, metrics):
+        snaps[i] = jax.tree.map(np.asarray, state.params)
+
+    faults.inject("train.nan_grads", mutate=faults.poison_grads,
+                  after=3, times=1)
+    state, hist = train_loop(cfg, rt, _tc(), _stream(cfg), num_steps=8,
+                             log_every=0, callback=cb)
+    assert [h["step_ok"] for h in hist] == [1, 1, 1, 0, 1, 1, 1, 1]
+    assert hist[-1]["skipped_steps"] == 1
+    # bit-identical across the skip: the NaN never touched params/moments
+    for a, b in zip(jax.tree.leaves(snaps[2]), jax.tree.leaves(snaps[3])):
+        assert (np.asarray(a) == np.asarray(b)).all()
+    # ...and the guard did not freeze training: the next step updated
+    assert any((np.asarray(a) != np.asarray(b)).any() for a, b in
+               zip(jax.tree.leaves(snaps[3]), jax.tree.leaves(snaps[4])))
+    # step index (batches consumed) still advanced through the skip
+    assert int(state.step) == 8
+
+
+def test_guard_is_bit_exact_on_healthy_steps(tmp_path):
+    """step_guard=True must not change the numerics of a healthy run."""
+    cfg, rt = _dense_cfg(), mdl.Runtime()
+    s1, h1 = train_loop(cfg, rt, _tc(step_guard=True), _stream(cfg),
+                        num_steps=4, log_every=0)
+    s2, h2 = train_loop(cfg, rt, _tc(step_guard=False), _stream(cfg),
+                        num_steps=4, log_every=0)
+    for a, b in zip(jax.tree.leaves(s1.params), jax.tree.leaves(s2.params)):
+        assert (np.asarray(a) == np.asarray(b)).all()
+    assert [h["loss"] for h in h1] == [h["loss"] for h in h2]
+
+
+def test_abort_after_budget_with_rollback(tmp_path):
+    """Persistent NaNs: training skips max_bad_steps consecutive steps,
+    then aborts with TrainAbortError whose state is rolled back to the
+    newest intact checkpoint."""
+    cfg, rt = _dense_cfg(), mdl.Runtime()
+    d = str(tmp_path / "ckpt")
+    tc = _tc(total_steps=12, checkpoint_dir=d, checkpoint_every=2,
+             max_bad_steps=3)
+    faults.inject("train.nan_grads", mutate=faults.poison_grads,
+                  after=6, times=None)
+    with pytest.raises(TrainAbortError) as ei:
+        train_loop(cfg, rt, tc, _stream(cfg), num_steps=12, log_every=0)
+    e = ei.value
+    assert e.step == 9                       # 3 bad steps after step 6
+    assert e.history[-1]["skipped_steps"] == 3
+    assert e.history[-1]["rollbacks"] == 1
+    # the rolled-back state IS the last intact checkpoint (step 6)
+    assert int(e.state.step) == 6
+    ckpt = store.restore(d, 6, {"params": e.state.params,
+                                "opt": e.state.opt, "step": e.state.step})
+    for a, b in zip(jax.tree.leaves(ckpt["params"]),
+                    jax.tree.leaves(e.state.params)):
+        assert (np.asarray(a) == np.asarray(b)).all()
+
+
+# ---------------------------------------------------------------------------
+# Crash-safe checkpointing + resume
+# ---------------------------------------------------------------------------
+def test_kill_and_resume_parity(tmp_path):
+    """Kill at step 5 (checkpoints at 2 and 4), auto-resume, and the
+    loss/metrics trajectory matches an uninterrupted run to <= 1e-5."""
+    cfg, rt = _dense_cfg(), mdl.Runtime()
+    sA, hA = train_loop(cfg, rt, _tc(), _stream(cfg), num_steps=8,
+                        log_every=0)
+    d = str(tmp_path / "ckpt")
+    tc = _tc(checkpoint_dir=d, checkpoint_every=2)
+    train_loop(cfg, rt, tc, _stream(cfg), num_steps=5, log_every=0)  # "kill"
+    sB, hB = train_loop(cfg, rt, tc, _stream(cfg), num_steps=8, log_every=0)
+    assert hB[0]["step"] == 4 and hB[0]["resumes"] == 1
+    lossA = {h["step"]: (h["loss"], h["xent"]) for h in hA}
+    for h in hB:
+        la, xa = lossA[h["step"]]
+        assert abs(h["loss"] - la) <= 1e-5 and abs(h["xent"] - xa) <= 1e-5
+    for a, b in zip(jax.tree.leaves(sA.params), jax.tree.leaves(sB.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_resume_skips_checkpoint_truncated_mid_save(tmp_path):
+    """A torn write on the LAST checkpoint (injected truncation) must not
+    poison resume: the walk falls back to the previous intact step and
+    the trajectory still matches the uninterrupted run."""
+    cfg, rt = _dense_cfg(), mdl.Runtime()
+    _, hA = train_loop(cfg, rt, _tc(), _stream(cfg), num_steps=8,
+                       log_every=0)
+    d = str(tmp_path / "ckpt")
+    tc = _tc(checkpoint_dir=d, checkpoint_every=2)
+    # saves land at steps 2, 4, 6 — corrupt the third (step 6)
+    faults.inject("checkpoint.corrupt", mutate=faults.truncate_file,
+                  after=2, times=1)
+    train_loop(cfg, rt, tc, _stream(cfg), num_steps=7, log_every=0)
+    faults.clear()
+    assert store.latest_step(d) == 6                    # present on disk...
+    assert store.latest_step(d, verify=True) == 4       # ...but not intact
+    _, hB = train_loop(cfg, rt, tc, _stream(cfg), num_steps=8, log_every=0)
+    assert hB[0]["step"] == 4                           # resumed below 6
+    lossA = {h["step"]: h["loss"] for h in hA}
+    for h in hB:
+        assert abs(h["loss"] - lossA[h["step"]]) <= 1e-5
+
+
+def test_crash_mid_save_leaves_no_partial_checkpoint(tmp_path):
+    d = str(tmp_path / "ckpt")
+    tree = {"w": np.arange(6, dtype=np.float32)}
+    store.save(d, 1, tree)
+    faults.inject("checkpoint.save_crash")
+    with pytest.raises(faults.FaultError):
+        store.save(d, 2, tree)
+    faults.clear()
+    assert store.latest_step(d) == 1
+    assert not [x for x in os.listdir(d) if x.startswith(".tmp_ckpt_")]
+
+
+def test_moe_resume_restores_scheduler_predictor(tmp_path):
+    """Scheduler predictor state survives kill-and-resume via the
+    serving-state path, and the MoE trajectory matches uninterrupted."""
+    cfg, rt = C.get_smoke("gpt-moe-s"), mdl.Runtime()
+
+    def sched():
+        return HecateScheduler(cfg, ep=1, impl="ep")
+
+    def stream():
+        return make_stream(cfg.vocab_size, 16, 4, kind="bytes", seed=3)
+
+    schedA = sched()
+    _, hA = train_loop(cfg, rt, _tc(), stream(), scheduler=schedA,
+                       num_steps=8, log_every=0)
+    d = str(tmp_path / "ckpt")
+    tc = _tc(checkpoint_dir=d, checkpoint_every=2)
+    train_loop(cfg, rt, tc, stream(), scheduler=sched(), num_steps=5,
+               log_every=0)                              # "kill" at 5
+    schedB = sched()
+    _, hB = train_loop(cfg, rt, tc, stream(), scheduler=schedB,
+                       num_steps=8, log_every=0)
+    assert hB[0]["step"] == 4 and hB[0]["resumes"] == 1
+    lossA = {h["step"]: h["loss"] for h in hA}
+    for h in hB:
+        assert abs(h["loss"] - lossA[h["step"]]) <= 1e-5
+    # the predictor window matches the uninterrupted run's observation
+    # for observation — the restored history fed the resumed steps
+    assert len(schedB.predictor.history) == len(schedA.predictor.history)
+    for a, b in zip(schedA.predictor.history, schedB.predictor.history):
+        np.testing.assert_allclose(a, b)
+
+
+class _ForcedPermuteReshard:
+    """Test-only resharding policy: exactly ONE row-permuting reshard at
+    step ``at``.  With M=1 ownership cannot move, but the buffer rows
+    still shuffle — ``apply_reshard`` physically permutes params and
+    optimizer moments, which is the hazard resume must survive."""
+
+    def __init__(self, at: int, seed: int = 0):
+        self.at, self.seed = at, seed
+
+    def maybe_reshard(self, step, current, predictor):
+        if step != self.at:
+            return current, False
+        perm = np.random.default_rng(self.seed).permutation(
+            current.rows_per_device).astype(np.int32)
+        new = dataclasses.replace(current, owner_row=perm[current.owner_row])
+        new.validate()
+        return new, True
+
+
+def test_reshard_then_resume_restores_sharding(tmp_path):
+    """Reshard (physical row permutation), checkpoint, kill, auto-resume:
+    the resumed scheduler must plan against the CHECKPOINTED sharding —
+    a fresh scheduler's homogeneous sharding would silently train with
+    the wrong expert-to-row mapping (no error, corrupt updates)."""
+    cfg, rt = C.get_smoke("gpt-moe-s"), mdl.Runtime()
+
+    def sched():
+        return HecateScheduler(cfg, ep=1, impl="ring", calibrate=False,
+                               resharding=_ForcedPermuteReshard(at=3))
+
+    def stream():
+        return make_stream(cfg.vocab_size, 16, 4, kind="bytes", seed=5)
+
+    sA, hA = train_loop(cfg, rt, _tc(), stream(), scheduler=sched(),
+                        num_steps=8, log_every=0)
+    d = str(tmp_path / "ckpt")
+    tc = _tc(checkpoint_dir=d, checkpoint_every=2)
+    train_loop(cfg, rt, tc, stream(), scheduler=sched(), num_steps=5,
+               log_every=0)    # reshard at 3, checkpoint at 4, "kill" at 5
+    schedB = sched()
+    sB, hB = train_loop(cfg, rt, tc, stream(), scheduler=schedB,
+                        num_steps=8, log_every=0)
+    assert hB[0]["step"] == 4 and hB[0]["resumes"] == 1
+    # the restored sharding is the PERMUTED one, not fresh-homogeneous
+    hom = homogeneous_sharding(schedB.sharding.num_layers,
+                               cfg.moe.num_experts, 1)
+    assert not np.array_equal(schedB.sharding.owner_row, hom.owner_row)
+    lossA = {h["step"]: (h["loss"], h["xent"]) for h in hA}
+    for h in hB:
+        la, xa = lossA[h["step"]]
+        assert abs(h["loss"] - la) <= 1e-5 and abs(h["xent"] - xa) <= 1e-5
+    for a, b in zip(jax.tree.leaves(sA.params), jax.tree.leaves(sB.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_resume_refuses_resharding_without_saved_sharding(tmp_path):
+    """A checkpoint with no sharding record + a resharding-enabled
+    scheduler: the rows may have been permuted by a reshard this process
+    cannot reconstruct — resume must fall back to fresh init with a
+    warning, never train on a guessed mapping."""
+    cfg = C.get_smoke("gpt-moe-s")
+    d = str(tmp_path / "ckpt")
+    tc = _tc(checkpoint_dir=d)
+    state = step_lib.init_state(cfg, jax.random.PRNGKey(tc.seed), 1)
+    store.save(d, 4, {"params": state.params, "opt": state.opt,
+                      "step": np.int32(4)})
+    sched_r = HecateScheduler(cfg, ep=1, impl="ring",
+                              resharding=ReshardingPolicy(interval=2))
+    with pytest.warns(RuntimeWarning, match="refusing to resume"):
+        st, start = resume_train_state(cfg, tc, sched_r, ep=1)
+    assert st is None and start == 0
+    # without resharding the rows cannot have moved: same checkpoint is ok
+    sched_n = HecateScheduler(cfg, ep=1, impl="ring")
+    st, start = resume_train_state(cfg, tc, sched_n, ep=1)
+    assert st is not None and start == 4
+
+
+def test_resume_falls_back_past_old_format_checkpoint(tmp_path):
+    """An old-format checkpoint ({params, opt_count} — what the pre-PR
+    launcher wrote) at the NEWEST step verifies (its own arrays are
+    intact) but cannot restore today's full train state.  Resume must
+    fall back to the next-newest restorable step — or fresh init when
+    none exists — instead of crashing at startup."""
+    cfg, rt = _dense_cfg(), mdl.Runtime()
+    d = str(tmp_path / "ckpt")
+    tc = _tc(checkpoint_dir=d, checkpoint_every=2)
+    train_loop(cfg, rt, tc, _stream(cfg), num_steps=5, log_every=0)
+    state = step_lib.init_state(cfg, jax.random.PRNGKey(0))
+    store.save(d, 9, {"params": state.params, "opt_count": np.int64(0)})
+    assert store.latest_step(d, verify=True) == 9       # intact on disk
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        st, start = resume_train_state(cfg, tc)
+    assert st is not None and start == 4                # fell back past 9
+    assert any("not restorable" in str(x.message) for x in w)
+    # ONLY the old-format checkpoint present: fresh init, not a crash
+    d2 = str(tmp_path / "ckpt2")
+    store.save(d2, 9, {"params": state.params, "opt_count": np.int64(0)})
+    tc2 = _tc(checkpoint_dir=d2)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        st, start = resume_train_state(cfg, tc2)
+    assert st is None and start == 0
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        _, hist = train_loop(cfg, rt, tc2, _stream(cfg), num_steps=2,
+                             log_every=0)
+    assert hist[0]["step"] == 0 and hist[0]["resumes"] == 0
+
+
+def test_latest_step_ignores_stray_entries(tmp_path):
+    d = str(tmp_path / "ckpt")
+    store.save(d, 3, {"w": np.ones(2)})
+    os.makedirs(os.path.join(d, "step_final"))          # user-created
+    os.makedirs(os.path.join(d, ".tmp_ckpt_orphan"))    # crash leftover
+    assert store.latest_step(d) == 3
+    assert store.latest_step(d, verify=True) == 3
+    removed = store.gc(d, keep_last=2)
+    assert os.path.join(d, ".tmp_ckpt_orphan") in removed
+    assert os.path.isdir(os.path.join(d, "step_final"))  # never managed
+    assert store.latest_step(d) == 3
+
+
+def test_gc_retention(tmp_path):
+    d = str(tmp_path / "ckpt")
+    for s in (1, 2, 3, 4):
+        store.save(d, s, {"w": np.full(3, s, np.float32)})
+    store.gc(d, keep_last=2)
+    assert [s for s, _ in store._step_dirs(d)] == [3, 4]
+
+
+def test_restore_detects_bitflip(tmp_path):
+    d = str(tmp_path / "ckpt")
+    tree = {"w": np.arange(128, dtype=np.float32)}
+    store.save(d, 1, tree)
+    faults.inject("checkpoint.corrupt", mutate=faults.bitflip_file)
+    store.save(d, 2, tree)
+    faults.clear()
+    with pytest.raises(store.CheckpointCorruptError):
+        store.restore(d, 2, tree)
+    assert store.verify_step(d, 1) and not store.verify_step(d, 2)
+    assert store.latest_step(d, verify=True) == 1
+    r = store.restore(d, 1, tree)                       # intact one loads
+    np.testing.assert_array_equal(np.asarray(r["w"]), tree["w"])
+
+
+# ---------------------------------------------------------------------------
+# Degraded-mode background work
+# ---------------------------------------------------------------------------
+def test_planner_job_exception_falls_back_synchronously():
+    """Regression (satellite): a background-job exception used to
+    propagate out of plan() via _take_pending's fut.result().  Now it is
+    caught, logged once, counted, and answered by the sync path with the
+    IDENTICAL plan."""
+    cfg = _moe_cfg()
+    sched = HecateScheduler(cfg, ep=4, impl="ring", calibrate=False)
+    sync = HecateScheduler(cfg, ep=4, impl="ring", calibrate=False,
+                           async_plan=False)
+    loads = np.abs(np.random.default_rng(1).normal(100, 5, (2, 8)))
+    for _ in range(5):
+        sched.observe(loads)
+        sync.observe(loads)
+    faults.inject("scheduler.plan_job")
+    sched.plan_ahead()
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        plan = sched.plan()                 # must NOT raise
+    faults.clear()
+    assert sched.plan_fallbacks == 1
+    assert any("plan-ahead job failed" in str(x.message) for x in w)
+    ref = sync.plan()
+    np.testing.assert_array_equal(plan.extra_experts, ref.extra_experts)
+    np.testing.assert_array_equal(plan.ring_send_rows, ref.ring_send_rows)
+    # an exception does not poison the worker: plan-ahead recovers
+    assert sched.async_plan
+    sched.plan_ahead()
+    sched.plan()
+    assert sched.plan_ahead_hits == 1
+    sched.close()
+    sync.close()
+
+
+def test_planner_job_hang_bounded_fallback_and_close():
+    """A hung job: plan() waits at most plan_timeout_s, falls back
+    synchronously, disables plan-ahead (the worker is wedged), and
+    close() returns without inheriting the hang."""
+    cfg = _moe_cfg()
+    sched = HecateScheduler(cfg, ep=4, impl="ring", calibrate=False,
+                            plan_timeout_s=0.2)
+    loads = np.abs(np.random.default_rng(2).normal(100, 5, (2, 8)))
+    for _ in range(5):
+        sched.observe(loads)
+    faults.inject("scheduler.plan_job_hang", hang_s=120)
+    sched.plan_ahead()
+    t0 = time.perf_counter()
+    plan = sched.plan()                     # bounded, answered sync
+    assert time.perf_counter() - t0 < 10
+    assert plan is not None
+    assert sched.plan_fallbacks == 1
+    assert not sched.async_plan and sched._worker_poisoned
+    # the worker is a DAEMON thread: even a genuinely hung job (one
+    # faults.clear() never releases) cannot wedge interpreter shutdown —
+    # a ThreadPoolExecutor's non-daemon threads would be joined atexit
+    assert sched._executor._thread.daemon
+    sched.plan_ahead()                      # degraded: no-op now
+    assert sched._pending is None
+    t0 = time.perf_counter()
+    sched.close()                           # must not block 120s
+    assert time.perf_counter() - t0 < 10
+    faults.clear()                          # releases the sleeping worker
+
+
+def test_plan_fallbacks_reported_as_this_runs_delta():
+    """A scheduler reused across train_loop calls (e.g. a restart after
+    TrainAbortError) must not leak prior-run fallbacks into this run's
+    history counters."""
+    cfg, rt = C.get_smoke("gpt-moe-s"), mdl.Runtime()
+    sched = HecateScheduler(cfg, ep=1, impl="ep")
+    sched.plan_fallbacks = 7                    # prior-run history
+    stream = make_stream(cfg.vocab_size, 16, 4, kind="bytes", seed=0)
+    _, hist = train_loop(cfg, rt, _tc(), stream, scheduler=sched,
+                         num_steps=2, log_every=0)
+    assert all(h["plan_fallbacks"] == 0 for h in hist)
+
+
+def test_publish_build_failure_drops_and_keeps_serving():
+    """A failed publication slot build is dropped at the boundary: the
+    engine keeps serving the old version, zero decode-path raises, and
+    the failure surfaces via last_publish_error / publish_drops."""
+    cfg, rt = _dense_cfg(), mdl.Runtime()
+    params = mdl.init_params(cfg, jax.random.PRNGKey(0))
+    from repro.serve.engine import Engine
+    eng = Engine(cfg, rt, params, max_len=32)
+    prompts = np.array([[1, 2, 3], [4, 5, 6]], np.int32)
+    out0 = eng.generate(prompts, steps=4)
+    faults.inject("engine.publish_build")
+    eng.publish_params(dict(params))
+    deadline = time.perf_counter() + 30
+    while not eng._staged["fut"].done() and time.perf_counter() < deadline:
+        time.sleep(0.01)
+    out1 = eng.generate(prompts, steps=4)   # boundary drops, never raises
+    faults.clear()
+    assert eng.publish_drops == 1
+    assert isinstance(eng.last_publish_error, faults.FaultError)
+    assert eng.version == 0                 # old version kept serving
+    np.testing.assert_array_equal(out0, out1)
+    # a later healthy publish still promotes past the dropped one
+    eng.publish_params(dict(params), wait=True)
+    eng.flush()
+    assert eng.version == 1 and eng.promotions == 1
+    eng.close()
+
+
+def test_flush_swallows_failed_build():
+    cfg, rt = _dense_cfg(), mdl.Runtime()
+    params = mdl.init_params(cfg, jax.random.PRNGKey(0))
+    from repro.serve.engine import Engine
+    eng = Engine(cfg, rt, params, max_len=16)
+    faults.inject("engine.publish_build")
+    eng.publish_params(dict(params))
+    eng.flush()                             # must not raise
+    faults.clear()
+    assert eng.publish_drops == 1 and eng.version == 0
+    eng.close()
+
+
+def test_train_loop_tolerates_closed_publish_engine():
+    cfg, rt = _dense_cfg(), mdl.Runtime()
+    params = mdl.init_params(cfg, jax.random.PRNGKey(0))
+    from repro.serve.engine import Engine
+    eng = Engine(cfg, rt, params, max_len=16)
+    eng.close()
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        _, hist = train_loop(cfg, rt, _tc(), _stream(cfg), num_steps=6,
+                             log_every=0, publish_engine=eng,
+                             publish_every=2)
+    assert hist[-1]["loss"] < hist[0]["loss"] + 1.0     # trained through
+    assert hist[-1]["publish_drops"] >= 1
+    assert any("publication failed" in str(x.message) for x in w)
+
+
+def test_train_loop_surfaces_engine_side_drops():
+    """A publication whose BUILD fails (engine-side drop) lands in the
+    loop's publish_drops counter too."""
+    cfg, rt = _dense_cfg(), mdl.Runtime()
+    params = mdl.init_params(cfg, jax.random.PRNGKey(0))
+    from repro.serve.engine import Engine
+    eng = Engine(cfg, rt, params, max_len=16)
+    faults.inject("engine.publish_build")
+    _, hist = train_loop(cfg, rt, _tc(), _stream(cfg), num_steps=6,
+                         log_every=0, publish_engine=eng, publish_every=2)
+    eng.flush()
+    faults.clear()
+    assert eng.publish_drops == 1
+    assert isinstance(eng.last_publish_error, faults.FaultError)
+    assert hist[-1]["publish_drops"] == 1   # surfaced in history records
+    eng.close()
+
+
+# ---------------------------------------------------------------------------
+# Registry semantics the guarantees above lean on
+# ---------------------------------------------------------------------------
+def test_faults_registry_windows_and_zero_overhead():
+    assert not faults.armed()
+    assert faults.fire("nope", {"x": 1}) == {"x": 1}    # disarmed no-op
+    faults.inject("site", after=2, times=2)
+    hits = []
+    for _ in range(5):
+        try:
+            faults.fire("site")
+            hits.append(0)
+        except faults.FaultError:
+            hits.append(1)
+    assert hits == [0, 0, 1, 1, 0]          # fires hits 3-4 only
+    assert faults.fired("site") == 2
+    faults.clear("site")
+    assert not faults.armed()
