@@ -15,6 +15,12 @@ verifies bit-exact parity against a fresh engine at the final published
 version, persists the (plan, version, calibration) serving state next to
 the parameter checkpoint, and restores both into a new engine to show a
 restarted server resumes consistent.
+
+With ``--replicas N`` the trainer publishes through a
+``repro.serve.bus.PublicationBus`` into an N-replica fleet instead of a
+single engine (the train loop cannot tell the difference — the bus
+duck-types the engine's publication surface), and the script additionally
+asserts every healthy replica decodes bit-exactly the same completions.
 """
 import argparse
 import os
@@ -56,6 +62,9 @@ def main():
     ap.add_argument("--publish-every", type=int, default=30)
     ap.add_argument("--sample-every", type=int, default=60)
     ap.add_argument("--decode-steps", type=int, default=32)
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="publish into N engine replicas via a "
+                         "PublicationBus (default: 1, engine direct)")
     ap.add_argument("--ckpt-dir", default="")
     args = ap.parse_args()
 
@@ -70,7 +79,17 @@ def main():
     enc = encode(PROMPTS)
 
     # the LIVE engine: serves throughout training, receives publications
-    eng = Engine(cfg, rt, state.params, max_len=96, pa=pa)
+    # (with --replicas, the first of a fleet fed through a PublicationBus)
+    bus, engines = None, []
+    if args.replicas > 1:
+        from repro.serve.bus import PublicationBus
+        engines = [Engine(cfg, rt, state.params, max_len=96, pa=pa,
+                          name=f"replica-{i}")
+                   for i in range(args.replicas)]
+        bus = PublicationBus([(e.name, e) for e in engines])
+        eng = engines[0]
+    else:
+        eng = Engine(cfg, rt, state.params, max_len=96, pa=pa)
 
     def cb(i, st_, metrics):
         if args.sample_every and i and i % args.sample_every == 0:
@@ -84,9 +103,21 @@ def main():
     state, hist = train_loop(cfg, rt, tc, stream, scheduler=sched,
                              state=state, num_steps=args.steps,
                              log_every=max(args.steps // 6, 1),
-                             callback=cb, publish_engine=eng,
+                             callback=cb, publish_engine=bus or eng,
                              publish_every=args.publish_every)
-    eng.flush()                       # promote the last publication
+    if bus is not None:
+        bus.flush()                   # broadcast + promote fleet-wide
+        fleet = bus.route()
+        outs = [e.generate(enc, steps=args.decode_steps) for e in fleet]
+        assert all((o == outs[0]).all() for o in outs[1:])
+        print(f"fleet parity across {len(fleet)} replicas at version "
+              f"{eng.version}: OK ({bus.dedup_hits} deduped builds, "
+              f"{bus.replica_evictions} evictions)")
+        bus.close()
+        for e in engines[1:]:
+            e.close()
+    else:
+        eng.flush()                   # promote the last publication
     print(f"trained {args.steps} steps; engine at version {eng.version} "
           f"({eng.publications} publications, {eng.promotions} promotions,"
           f" {eng.deferred_boundaries} deferred boundaries)")

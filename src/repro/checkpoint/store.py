@@ -33,8 +33,19 @@ from repro.common import faults
 from repro.common.faults import CheckpointCorruptError
 
 __all__ = ["save", "restore", "verify", "latest_step", "list_steps",
-           "meta", "gc", "CheckpointCorruptError", "save_serving_state",
-           "restore_serving_state", "latest_serving_step"]
+           "meta", "gc", "CheckpointCorruptError", "CheckpointShapeError",
+           "save_serving_state", "restore_serving_state",
+           "latest_serving_step"]
+
+
+class CheckpointShapeError(CheckpointCorruptError):
+    """A restored array's shape does not match the restore target.
+
+    Subclasses :class:`CheckpointCorruptError` so existing newest-first
+    resume walks treat a layout-incompatible checkpoint like a damaged
+    one (skip and fall back) — but callers that can RESHAPE (the
+    mesh-shape-elastic restore in ``train.trainer``) catch this type
+    specifically and retry with a ``remap``."""
 
 
 def _flatten_with_paths(tree):
@@ -169,10 +180,22 @@ verify = verify_step
 
 
 def restore(directory: str, step: int, target: Any,
-            shardings: Any = None) -> Any:
+            shardings: Any = None, *, remap: Optional[dict] = None) -> Any:
     """Restore ``step`` into ``target``'s structure, verifying per-array
     checksums first (checkpoints written before integrity support restore
-    unchecked).  Raises CheckpointCorruptError on a damaged checkpoint."""
+    unchecked).  Raises CheckpointCorruptError on a damaged checkpoint and
+    :class:`CheckpointShapeError` when an (intact) array does not fit the
+    target's shape.
+
+    ``remap`` maps a leaf's FINAL path component (e.g. ``"moe_buffer"`` —
+    it matches ``params/moe_buffer`` as well as the optimizer-moment
+    leaves ``opt/.mu/moe_buffer`` / ``opt/.nu/moe_buffer``) to a
+    host-side ``np.ndarray -> np.ndarray`` transform applied BEFORE the
+    shape check and device put.  The mesh-shape-elastic restore path uses
+    it to re-lay-out chunk rows saved under one (dp, ep) layout onto a
+    different mesh shape — the saved arrays are full host copies, so this
+    is the "gather to host, reshard on the CPU mirror" step and the
+    device put below is the reshard."""
     path = os.path.join(directory, f"step_{step:08d}")
     data, _ = _load_verified(path)
     flat, treedef = jax.tree_util.tree_flatten_with_path(target)
@@ -186,7 +209,13 @@ def restore(directory: str, step: int, target: Any,
             raise CheckpointCorruptError(
                 f"{path}: missing array {key!r} for restore target")
         arr = data[key]
-        assert arr.shape == tuple(leaf.shape), (key, arr.shape, leaf.shape)
+        fn = remap.get(key.rsplit("/", 1)[-1]) if remap else None
+        if fn is not None:
+            arr = fn(np.asarray(arr))
+        if arr.shape != tuple(leaf.shape):
+            raise CheckpointShapeError(
+                f"{path}: array {key!r} has shape {arr.shape}, restore "
+                f"target wants {tuple(leaf.shape)}")
         leaves.append(jax.device_put(arr, shd) if shd is not None
                       else jax.numpy.asarray(arr))
     return jax.tree_util.tree_unflatten(treedef, leaves)

@@ -65,6 +65,41 @@ Injection points and the guarantee each one exercises
     therefore ``train_loop`` auto-resume) falls back to the newest
     INTACT checkpoint.
 
+Fleet sites (serve.bus — the multi-replica publication layer).  All four
+carry the REPLICA NAME (or a mesh-shape pair) as payload; arm with
+``only=<name>`` to target one replica deterministically — the builder
+threads of N replicas race, so hit-count windows alone cannot single one
+out:
+
+``bus.broadcast_drop``
+    Fired by ``PublicationBus`` once per (publication, replica) send,
+    payload = replica name.  Arm with ``exc=...`` (and a ``times``
+    budget) for a TRANSIENT network drop.  Guarantee: the bus retries
+    with backoff; the replica stays HEALTHY if a retry lands, and the
+    other replicas' sends are unaffected either way.
+
+``replica.build_hang``
+    Fired on a replica engine's background builder thread (payload =
+    ``Engine.name``) before the staged slot build.  Arm with
+    ``hang_s=...``.  Guarantee: the replica's staged build age grows
+    past the bus deadline → LAGGING (drained by the router, old version
+    keeps serving), then past the evict deadline → EVICTED; no decode
+    step on ANY replica ever blocks.  ``clear()`` releases the hang.
+
+``replica.crash``
+    Fired in the bus's per-replica send path (payload = replica name).
+    Arm with ``exc=...`` and ``times=None`` for a dead replica.
+    Guarantee: retries exhaust, the replica is EVICTED without blocking
+    the fleet, the other replicas promote the published version, and a
+    later ``rejoin`` catches the replica up to the newest published
+    version bit-exactly.
+
+``restore.mesh_mismatch``
+    Fired by ``resume_train_state`` at the head of the mesh-shape-elastic
+    restore path, payload = ``(saved_ep, current_ep)``.  Arm with
+    ``exc=...``.  Guarantee: a failed elastic restore degrades to fresh
+    init with a warning — resume never crashes on a layout change.
+
 Usage::
 
     from repro.common import faults
@@ -111,6 +146,7 @@ class _Fault:
     exc: Optional[Callable[[], BaseException]] = None
     hang_s: float = 0.0
     mutate: Optional[Callable[[Any], Any]] = None
+    only: Any = None                    # fire only when payload == only
     hits: int = 0
     fired: int = 0
     release: threading.Event = dataclasses.field(
@@ -125,16 +161,22 @@ _SITES: Dict[str, _Fault] = {}
 def inject(site: str, *, times: Optional[int] = 1, after: int = 0,
            exc: Optional[Callable[[], BaseException]] = None,
            hang_s: float = 0.0,
-           mutate: Optional[Callable[[Any], Any]] = None) -> None:
+           mutate: Optional[Callable[[Any], Any]] = None,
+           only: Any = None) -> None:
     """Arm ``site``.  The fault fires on hits ``after < n <= after+times``
     (unlimited when ``times`` is None).  Exactly one of the behaviours
     applies per firing, in order: hang (``hang_s``), payload mutation
     (``mutate``), raise (``exc()``, default :class:`FaultError`).  A
-    mutating fault returns the mutated payload without raising."""
+    mutating fault returns the mutated payload without raising.
+
+    ``only`` restricts the site to firings whose PAYLOAD equals it (e.g.
+    a replica name) — non-matching hits pass through uncounted, which is
+    what makes per-replica injection deterministic when N replicas race
+    through the same site."""
     global _ARMED
     with _LOCK:
         _SITES[site] = _Fault(site, times=times, after=after, exc=exc,
-                              hang_s=hang_s, mutate=mutate)
+                              hang_s=hang_s, mutate=mutate, only=only)
         _ARMED = True
 
 
@@ -178,6 +220,8 @@ def fire(site: str, payload: Any = None) -> Any:
         f = _SITES.get(site)
         if f is None:
             return payload
+        if f.only is not None and payload != f.only:
+            return payload              # targeted at another payload
         f.hits += 1
         due = (f.hits > f.after
                and (f.times is None or f.fired < f.times))

@@ -11,6 +11,7 @@ from __future__ import annotations
 from typing import Dict, Optional, Sequence, Tuple, Union
 
 import jax
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 MeshAxes = Union[None, str, Tuple[str, ...]]
@@ -146,6 +147,71 @@ def tree_shardings(logical_tree, mesh: Mesh,
     rules = resolve_rules(mesh, overrides)
     return jax.tree.map(lambda spec: NamedSharding(mesh, spec),
                         tree_pspecs(logical_tree, rules))
+
+
+# ---------------------------------------------------------------------------
+# Mesh-shape-elastic buffer re-layout (host-side numpy).
+#
+# The FSSDP chunk buffer is a flat (global_rows, chunk_len) array whose row
+# layout is DEFINED by the live ShardingPlan: expert (l, e) lives at global
+# row  owner_dev * rows_per_device + owner_row.  A checkpoint saved under an
+# (dp, ep) layout therefore cannot be restored verbatim onto a different EP
+# size — even when the total row count happens to match (L=2, E=8: both
+# ep=2 and ep=4 give 16 rows), the expert→row mapping differs and a verbatim
+# restore would silently serve the wrong experts.  These helpers compute the
+# per-row gather that re-lays-out the saved host arrays (params AND AdamW
+# moments — any array whose leading dim is the global row dim) onto the new
+# plan; trainer.resume_train_state wires them into store.restore(remap=...).
+# ---------------------------------------------------------------------------
+def _plan_global_rows(plan) -> np.ndarray:
+    """Duck-typed ``ShardingPlan.global_rows()`` (keeps this module free of
+    a core.placement import)."""
+    return (np.asarray(plan.owner_dev, np.int64) * int(plan.rows_per_device)
+            + np.asarray(plan.owner_row, np.int64))
+
+
+def elastic_row_remap(old_plan, new_plan,
+                      out_rows: Optional[int] = None
+                      ) -> Tuple[np.ndarray, np.ndarray]:
+    """Row remap table taking a buffer laid out by ``old_plan`` to the
+    layout of ``new_plan`` (any (L, E)-compatible pair of ShardingPlans,
+    regardless of device count).
+
+    Returns ``(src, valid)``, both of length ``out_rows`` (default: the
+    new plan's total rows): new global row ``i`` is fed from old global
+    row ``src[i]`` when ``valid[i]``, and is a PAD row (zero-filled by
+    :func:`remap_buffer_rows`) otherwise.  Pure numpy — runs on the host
+    CPU mirror of the checkpoint."""
+    if (old_plan.num_layers != new_plan.num_layers
+            or old_plan.num_experts != new_plan.num_experts):
+        raise ValueError(
+            f"elastic remap needs matching (L, E): saved "
+            f"({old_plan.num_layers}, {old_plan.num_experts}) vs new "
+            f"({new_plan.num_layers}, {new_plan.num_experts})")
+    old_g = _plan_global_rows(old_plan).reshape(-1)
+    new_g = _plan_global_rows(new_plan).reshape(-1)
+    if out_rows is None:
+        out_rows = int(new_plan.rows_per_device) * int(new_plan.num_devices)
+    if int(new_g.max(initial=-1)) >= out_rows:
+        raise ValueError(
+            f"new plan addresses row {int(new_g.max())} but the target "
+            f"buffer has only {out_rows} rows")
+    src = np.zeros(out_rows, np.int64)
+    valid = np.zeros(out_rows, bool)
+    src[new_g] = old_g
+    valid[new_g] = True
+    return src, valid
+
+
+def remap_buffer_rows(arr: np.ndarray, src: np.ndarray,
+                      valid: np.ndarray) -> np.ndarray:
+    """Apply an :func:`elastic_row_remap` table to one saved host array
+    (leading dim = old global rows): gather the expert rows into their new
+    positions, zero-fill the new layout's pad rows, preserve dtype."""
+    arr = np.asarray(arr)
+    out = arr[np.where(valid, src, 0)]
+    out[~valid] = 0
+    return out
 
 
 def constrain(x, logical_axes: Sequence[Optional[str]],

@@ -74,6 +74,15 @@ class ShardingPlan:
             counts = np.bincount(self.owner_dev[l], minlength=M)
             assert counts.max() <= self.k_local, (l, counts.max(), self.k_local)
 
+    def global_rows(self) -> np.ndarray:
+        """(L, E) int64: each expert's row in the GLOBAL flat buffer —
+        ``owner_dev * rows_per_device + owner_row``.  The canonical row
+        addressing shared by live resharding (``trainer.reshard_perm``)
+        and the mesh-shape-elastic restore path
+        (``common.sharding.elastic_row_remap``)."""
+        return (self.owner_dev.astype(np.int64) * self.rows_per_device
+                + self.owner_row.astype(np.int64))
+
     def owned_rows_table(self) -> Tuple[np.ndarray, np.ndarray]:
         """Per (layer, device): which buffer rows hold its owned experts.
 

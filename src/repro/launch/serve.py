@@ -9,6 +9,12 @@ When the checkpoint directory carries serving state (written by
 triple a training-while-serving engine publishes), the engine resumes at
 the published version with the published plan tables instead of replanning
 from scratch (``--no-serve-state`` opts out).
+
+``--replicas N`` brings up a FLEET instead of a single engine: N named
+replicas behind a ``repro.serve.bus.PublicationBus`` (one shared host
+group, so the bus's same-host dedup applies), an initial publication
+broadcast through the bus, prompts routed to the healthy replicas, and a
+per-replica health report at the end.
 """
 from __future__ import annotations
 
@@ -19,6 +25,9 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="serve with N engine replicas behind a "
+                         "PublicationBus (default: 1, no bus)")
     ap.add_argument("--checkpoint-dir", default="")
     ap.add_argument("--no-serve-state", action="store_true",
                     help="ignore persisted (plan, version) serving state")
@@ -100,16 +109,45 @@ def main():
         b = np.frombuffer(p.encode(), np.uint8).astype(np.int32)
         enc[i, :len(b)] = b % cfg.vocab_size
 
-    with Engine(cfg, rt, params, max_len=args.max_len, pa=pa,
-                version=version) as eng:
-        enc_in = None
-        if cfg.is_encoder_decoder:
-            enc_in = np.random.default_rng(0).standard_normal(
-                (len(prompts), cfg.encoder_seq_len, cfg.d_model)).astype(
-                np.float32)
-        out = eng.generate(enc, steps=args.steps,
-                           temperature=args.temperature, seed=args.seed,
-                           encoder_input=enc_in)
+    enc_in = None
+    if cfg.is_encoder_decoder:
+        enc_in = np.random.default_rng(0).standard_normal(
+            (len(prompts), cfg.encoder_seq_len, cfg.d_model)).astype(
+            np.float32)
+
+    if args.replicas <= 1:
+        with Engine(cfg, rt, params, max_len=args.max_len, pa=pa,
+                    version=version) as eng:
+            out = eng.generate(enc, steps=args.steps,
+                               temperature=args.temperature,
+                               seed=args.seed, encoder_input=enc_in)
+    else:
+        from repro.serve.bus import PublicationBus
+        engines = [Engine(cfg, rt, params, max_len=args.max_len, pa=pa,
+                          version=version, name=f"replica-{i}")
+                   for i in range(args.replicas)]
+        bus = PublicationBus([(e.name, e) for e in engines])
+        try:
+            # exercise the broadcast path once so the fleet promotes a
+            # bus-published version before taking traffic
+            bus.publish_params(params, version=version + 1, pa=pa,
+                               wait=True)
+            fleet = bus.route()
+            if not fleet:
+                raise SystemExit("no healthy replicas after broadcast")
+            out = fleet[0].generate(enc, steps=args.steps,
+                                    temperature=args.temperature,
+                                    seed=args.seed, encoder_input=enc_in)
+            for name, st in sorted(bus.poll().items()):
+                print(f"replica {name}: {st.state.lower()} "
+                      f"version {st.version}")
+            print(f"fleet: {len(fleet)}/{args.replicas} healthy, "
+                  f"{bus.dedup_hits} deduped builds")
+        finally:
+            bus.close()
+            for e in engines:
+                e.close()
+
     for i, p in enumerate(prompts):
         toks = out[i].tolist()
         text = bytes(t for t in toks if 0 < t < 128).decode(errors="replace")

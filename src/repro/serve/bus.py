@@ -1,0 +1,446 @@
+"""Publication bus: fan-out of (params, pa, version) triples from ONE
+trainer to N ``serve.Engine`` replicas, with per-replica fault isolation.
+
+``train_loop(publish_engine=...)`` was built against a single engine;
+the bus presents the SAME duck-typed surface (``publish_params``,
+``publish_drops``, ``_closed``) so the trainer cannot tell one replica
+from a fleet — and, like the engine, the publish call only STAGES: it
+records the newest (params, pa, version) triple and wakes the broadcast
+worker, never building slots or blocking the training step.
+
+The replica state machine
+-------------------------
+Each registered replica is in exactly one state::
+
+    HEALTHY ──(staged build age > build_deadline_s)──▶ LAGGING
+    HEALTHY/LAGGING ──(send retries exhausted, engine closed,
+                       or build age > evict_deadline_s)──▶ EVICTED
+    LAGGING ──(build finally completed)──▶ HEALTHY  (caught up to the
+                                                     newest version)
+    EVICTED ──(rejoin())──▶ REJOINING ──(catch-up publish promoted)──▶
+                                                     HEALTHY
+
+* **HEALTHY** replicas receive every publication and are routable.
+* **LAGGING** — the replica's staged slot build exceeded
+  ``build_deadline_s`` (polled via the engine's lock-free ``health()``
+  snapshot).  The router DRAINS it (``route()`` excludes it) and the bus
+  stops sending it new publications — its OLD promoted version keeps
+  serving untouched, because the engine never blocks a decode step on a
+  staged build.  If the build completes later the replica is re-marked
+  HEALTHY and caught up to the newest published version.
+* **EVICTED** — the replica raised through every send retry, its engine
+  closed, or its build hung past ``evict_deadline_s``.  The fleet moves
+  on without it; nothing ever blocks on an evicted replica.
+* **REJOINING** — ``rejoin(name[, engine])`` re-admits a restarted
+  replica: the bus replays the NEWEST published triple into it and waits
+  for the catch-up build, so the rejoined replica serves bit-exactly
+  what the never-failed replicas serve (same params object, same plan
+  tables, same slot build).
+
+Dedup keying — one stacked gather per host per publication
+----------------------------------------------------------
+N replicas on one host share the device buffer, so N staged builds would
+issue N identical stacked SparseAllGathers.  The bus instead builds ONCE
+per (host, publication): replicas are grouped by their ``host`` tag, the
+first replica's runtime runs ``moe_core.materialize_chunks`` keyed
+``(bus, broadcast epoch)`` as the plan token, and every replica in the
+group receives the prebuilt slots via ``Engine.publish_params(...,
+slots=...)`` — its staged "build" is a no-op hand-off, promotion stays
+per-replica.  ``dedup_hits`` counts the builds avoided (group size − 1
+per group per publication).  A rejoin catch-up reuses the same memo key,
+so it costs zero collectives when the triple was already built.
+
+Fault sites (see ``repro.common.faults``): ``bus.broadcast_drop`` and
+``replica.crash`` in the per-replica send path, ``replica.build_hang``
+on the engine builder thread — all payload the replica name for
+``only=``-targeted injection.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+import warnings
+from collections import OrderedDict
+from typing import Any, Dict, List, Optional
+
+from repro.common import faults
+from repro.core import moe as moe_core
+from repro.core.moe import VersionedBuffer
+
+HEALTHY = "HEALTHY"
+LAGGING = "LAGGING"
+EVICTED = "EVICTED"
+REJOINING = "REJOINING"
+
+_KEEP = object()            # publication without a plan: keep bus.pa
+_SELF_BUILD = object()      # host build failed: replicas build their own
+
+
+class ReplicaHandle:
+    """One registered replica: its engine, host tag, and bus-side state."""
+
+    def __init__(self, name: str, engine, host: str = "host-0"):
+        self.name = name
+        self.engine = engine
+        self.host = host
+        self.state = HEALTHY
+        self.sent_version: Optional[int] = None   # newest version sent
+        self.last_error: Optional[BaseException] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplicaStatus:
+    """One replica's row in ``PublicationBus.health()`` — bus state plus
+    the engine's own lock-free snapshot."""
+    name: str
+    host: str
+    state: str
+    version: int                      # promoted version
+    staged_version: Optional[int]
+    staged_pending: bool
+    staged_age_s: float
+    publish_drops: int
+    last_error: Optional[str]
+
+
+class PublicationBus:
+    """Broadcasts trainer publications to a fleet of decode replicas.
+
+    Drop-in for ``train_loop(publish_engine=)``: ``publish_params`` only
+    stages (latest-wins) and wakes a background DAEMON worker that runs
+    the per-host deduped slot builds and the per-replica sends with
+    retry/backoff — a slow or failing fleet never blocks the step path,
+    and a wedged broadcast dies with the process instead of blocking
+    interpreter exit (same rationale as the scheduler's plan worker).
+
+    Counters (cumulative; ``train_loop`` reads them as deltas into its
+    ``RobustnessCounters``): ``publications``, ``publish_drops`` (sends
+    that permanently failed after retries), ``replica_evictions``,
+    ``replica_rejoins``, ``dedup_hits``, ``broadcast_retries``.
+    """
+
+    def __init__(self, replicas=(), *, build_deadline_s: float = 5.0,
+                 evict_deadline_s: Optional[float] = None,
+                 max_retries: int = 2, backoff_s: float = 0.05,
+                 pa=None):
+        self._replicas: "OrderedDict[str, ReplicaHandle]" = OrderedDict()
+        self.build_deadline_s = build_deadline_s
+        self.evict_deadline_s = (evict_deadline_s
+                                 if evict_deadline_s is not None
+                                 else 2.0 * build_deadline_s)
+        self.max_retries = max_retries
+        self.backoff_s = backoff_s
+        self.pa = pa                    # newest published plan tables
+        self.version = 0                # newest fully broadcast version
+        self._latest = None             # (params, pa, version) for rejoin
+        self._pending = None            # latest-wins staged triple
+        self._evt = threading.Event()
+        self._lock = threading.Lock()       # small shared state
+        self._fleet_lock = threading.Lock()  # broadcast/poll/rejoin body
+        self._worker: Optional[threading.Thread] = None
+        self._busy = False              # worker is mid-broadcast
+        self._closed = False
+        self._bus_epoch = 0             # dedup plan-token per broadcast
+        self._next_version = 0
+        # observability / RobustnessCounters feed
+        self.publications = 0
+        self.publish_drops = 0
+        self.broadcast_retries = 0
+        self.replica_evictions = 0
+        self.replica_rejoins = 0
+        self.dedup_hits = 0
+        self.last_publish_error: Optional[BaseException] = None
+        for rep in replicas:
+            if isinstance(rep, ReplicaHandle):
+                self.add_replica(rep.name, rep.engine, host=rep.host)
+            else:
+                self.add_replica(*rep)
+
+    # ---- registration / routing ---------------------------------------
+    def add_replica(self, name: str, engine, host: str = "host-0"
+                    ) -> ReplicaHandle:
+        if self._closed:
+            raise RuntimeError("PublicationBus is closed")
+        h = ReplicaHandle(name, engine, host)
+        with self._lock:
+            if name in self._replicas:
+                raise ValueError(f"replica {name!r} already registered")
+            self._replicas[name] = h
+            if self.pa is None:         # adopt the fleet's plan tables
+                self.pa = getattr(engine, "pa", None)
+        return h
+
+    def replica(self, name: str) -> ReplicaHandle:
+        return self._replicas[name]
+
+    def healthy(self) -> List[ReplicaHandle]:
+        return [h for h in self._replicas.values() if h.state == HEALTHY]
+
+    def route(self) -> List[Any]:
+        """The router's view: engines safe to hand requests to.  LAGGING
+        and EVICTED replicas are DRAINED — excluded here — while their
+        engines (if alive) keep serving whatever they already promoted."""
+        return [h.engine for h in self.healthy()]
+
+    # ---- the train_loop-facing surface --------------------------------
+    def publish_params(self, params, version: Optional[int] = None, *,
+                       pa=None, wait: bool = False) -> int:
+        """Stage a publication for the whole fleet; returns immediately
+        (latest-wins — an unbroadcast staged triple is superseded, like
+        the engine's own staging).  ``wait`` blocks until the broadcast
+        worker has drained (then flushes each healthy engine), for tests
+        and checkpoint barriers."""
+        if self._closed:
+            raise RuntimeError("PublicationBus is closed")
+        with self._lock:
+            if version is None:
+                version = self._next_version + 1
+            self._next_version = max(self._next_version, version)
+            self._pending = (params, pa if pa is not None else _KEEP,
+                             version)
+            self.publications += 1
+            self._ensure_worker()
+            self._evt.set()
+        if wait:
+            self.flush()
+        return version
+
+    def flush(self, timeout: Optional[float] = None) -> None:
+        """Wait until every staged publication has been broadcast, then
+        promote it on every HEALTHY replica (bounded per-engine flush;
+        a replica that fails its flush is evicted, never re-raised)."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        while True:
+            with self._lock:
+                idle = (self._pending is None and not self._busy
+                        and not self._evt.is_set())
+            if idle:
+                break
+            if deadline is not None and time.monotonic() > deadline:
+                raise TimeoutError("PublicationBus.flush timed out")
+            time.sleep(0.002)
+        with self._fleet_lock:
+            for h in list(self._replicas.values()):
+                if h.state != HEALTHY:
+                    continue
+                try:
+                    h.engine.flush(timeout=timeout)
+                except Exception as e:
+                    self._evict(h, e)
+
+    # ---- the broadcast worker ------------------------------------------
+    def _ensure_worker(self) -> None:
+        if self._worker is None or not self._worker.is_alive():
+            self._worker = threading.Thread(target=self._run,
+                                            name="publication-bus",
+                                            daemon=True)
+            self._worker.start()
+
+    def _run(self) -> None:
+        while True:
+            self._evt.wait()
+            with self._lock:
+                job, self._pending = self._pending, None
+                self._evt.clear()
+                closed = self._closed
+                self._busy = job is not None
+            if job is not None:
+                try:
+                    with self._fleet_lock:
+                        self._broadcast(*job)
+                except Exception as e:      # never kill the worker
+                    self.last_publish_error = e
+                    self.publish_drops += 1
+                finally:
+                    with self._lock:
+                        self._busy = False
+            elif closed:
+                return
+
+    def _broadcast(self, params, pa, version) -> None:
+        if pa is _KEEP:
+            pa = self.pa
+        groups: "OrderedDict[str, List[ReplicaHandle]]" = OrderedDict()
+        for h in self._replicas.values():
+            if h.state == HEALTHY:
+                groups.setdefault(h.host, []).append(h)
+        self._bus_epoch += 1
+        for group in groups.values():
+            slots = self._host_build(group[0].engine, params, pa, version)
+            if slots is not _SELF_BUILD:
+                self.dedup_hits += max(0, len(group) - 1)
+            for h in group:
+                self._send(h, params, pa, version, slots)
+        with self._lock:
+            self._latest = (params, pa, version)
+            self.version = max(self.version, version)
+            self.pa = pa
+        self._poll_locked()
+
+    def _host_build(self, engine, params, pa, version):
+        """ONE stacked gather for every replica of a host group.  Keyed
+        (bus identity, broadcast epoch) in the slot-result memo, so a
+        rejoin catch-up for the same triple is a memo hit (zero
+        collectives).  On failure falls back to per-replica builds — a
+        broken dedup path must degrade, not take the publication down."""
+        try:
+            cfg, rt = engine.cfg, engine.rt
+            if (not cfg.moe.enabled or pa is None
+                    or rt.moe.mesh is None):
+                return None             # nothing to build: no-slot triple
+            buf = params.get("moe_buffer")
+            if buf is None:
+                return None
+            return moe_core.materialize_chunks(
+                cfg, rt.moe, VersionedBuffer(buf, version), pa,
+                pa_token=("bus", id(self), version))
+        except Exception as e:
+            self.last_publish_error = e
+            return _SELF_BUILD
+
+    def _send(self, h: ReplicaHandle, params, pa, version, slots) -> bool:
+        """Deliver one triple to one replica, with retry/backoff.  A send
+        that exhausts its retries EVICTS the replica — the rest of the
+        fleet is already served (or about to be) and never waits."""
+        for attempt in range(self.max_retries + 1):
+            try:
+                faults.fire("bus.broadcast_drop", h.name)
+                faults.fire("replica.crash", h.name)
+                kw: Dict[str, Any] = {}
+                if pa is not None:
+                    kw["pa"] = pa
+                if slots is not _SELF_BUILD:
+                    kw["slots"] = slots
+                h.engine.publish_params(params, version=version, **kw)
+                h.sent_version = version
+                h.last_error = None
+                return True
+            except Exception as e:
+                h.last_error = e
+                self.last_publish_error = e
+                if attempt < self.max_retries:
+                    self.broadcast_retries += 1
+                    time.sleep(self.backoff_s * (2 ** attempt))
+        self.publish_drops += 1
+        self._evict(h, h.last_error)
+        return False
+
+    # ---- the replica state machine ------------------------------------
+    def _evict(self, h: ReplicaHandle, err: Optional[BaseException] = None
+               ) -> None:
+        if h.state == EVICTED:
+            return
+        h.state = EVICTED
+        if err is not None:
+            h.last_error = err
+        self.replica_evictions += 1
+        warnings.warn(
+            f"PublicationBus: replica {h.name!r} evicted "
+            f"({h.last_error!r}); fleet continues with "
+            f"{len(self.healthy())} healthy replicas", RuntimeWarning)
+
+    def poll(self) -> Dict[str, ReplicaStatus]:
+        """Apply the state machine from each replica's non-blocking
+        health snapshot; returns the fleet health.  Cheap enough for a
+        router to call per scheduling decision: no locks are taken on
+        any engine, and the bus's own fleet lock only serializes against
+        an in-flight broadcast."""
+        with self._fleet_lock:
+            self._poll_locked()
+        return self.health()
+
+    def _poll_locked(self) -> None:
+        for h in list(self._replicas.values()):
+            if h.state == EVICTED:
+                continue
+            hs = h.engine.health()
+            if hs.closed:
+                self._evict(h, RuntimeError("engine closed"))
+                continue
+            if hs.staged_pending:
+                if hs.staged_age_s >= self.evict_deadline_s:
+                    self._evict(h, RuntimeError(
+                        f"staged build hung {hs.staged_age_s:.2f}s "
+                        f"(> evict deadline {self.evict_deadline_s}s)"))
+                elif (hs.staged_age_s >= self.build_deadline_s
+                        and h.state == HEALTHY):
+                    h.state = LAGGING       # drained, old version serves
+            elif h.state == LAGGING:
+                # the build completed after all: catch the replica up to
+                # the newest published triple, then route to it again
+                h.state = HEALTHY
+                with self._lock:
+                    latest = self._latest
+                if latest is not None and h.sent_version != latest[2]:
+                    params, pa, version = latest
+                    slots = self._host_build(h.engine, params, pa, version)
+                    self._send(h, params, pa, version, slots)
+
+    def rejoin(self, name: str, engine=None, *,
+               timeout: Optional[float] = None) -> bool:
+        """Re-admit an evicted replica (optionally with a fresh engine —
+        a restarted process).  Replays the newest published triple and
+        WAITS for its catch-up build, so on success the replica serves
+        bit-exactly what the never-failed replicas serve.  Returns False
+        (replica stays EVICTED) if the catch-up itself fails."""
+        if self._closed:
+            raise RuntimeError("PublicationBus is closed")
+        with self._fleet_lock:
+            h = self._replicas[name]
+            if engine is not None:
+                h.engine = engine
+            h.state = REJOINING
+            h.last_error = None
+            with self._lock:
+                latest = self._latest
+            if latest is not None:
+                params, pa, version = latest
+                slots = self._host_build(h.engine, params, pa, version)
+                if not self._send(h, params, pa, version, slots):
+                    return False        # _send evicted it again
+                try:
+                    h.engine.flush(timeout=timeout)
+                except Exception as e:
+                    self._evict(h, e)
+                    return False
+            h.state = HEALTHY
+            self.replica_rejoins += 1
+            return True
+
+    # ---- observability --------------------------------------------------
+    def health(self) -> Dict[str, ReplicaStatus]:
+        """Fleet snapshot keyed by replica name — non-blocking (engine
+        health is lock-free; bus state is read without the fleet lock)."""
+        out = {}
+        for h in self._replicas.values():
+            hs = h.engine.health()
+            out[h.name] = ReplicaStatus(
+                name=h.name, host=h.host, state=h.state,
+                version=hs.version, staged_version=hs.staged_version,
+                staged_pending=hs.staged_pending,
+                staged_age_s=hs.staged_age_s,
+                publish_drops=hs.publish_drops,
+                last_error=(repr(h.last_error) if h.last_error else None))
+        return out
+
+    # ---- lifecycle ------------------------------------------------------
+    def close(self, timeout: float = 5.0) -> None:
+        """Stop the broadcast worker (drains a staged publication first).
+        Idempotent; does NOT close the replica engines — the caller owns
+        them.  The worker is a daemon: a wedged broadcast can delay this
+        join at most ``timeout`` and never blocks process exit."""
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+            self._evt.set()             # wake the worker so it can exit
+            w = self._worker
+        if w is not None and w.is_alive():
+            w.join(timeout=timeout)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()

@@ -63,7 +63,9 @@ version instead of re-deriving it.
 """
 from __future__ import annotations
 
+import dataclasses
 import threading
+import time
 from concurrent.futures import TimeoutError as FuturesTimeout
 from typing import Any, Dict, Optional
 
@@ -76,6 +78,34 @@ from repro.common.config import ModelConfig
 from repro.core import moe as moe_core
 from repro.core.moe import PlanArrays, VersionedBuffer
 from repro.models import model as mdl
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineHealth:
+    """A cheap, LOCK-FREE snapshot of an engine's publication state.
+
+    Taken without acquiring the staging lock (``Engine.health`` reads the
+    ``_staged`` dict reference once — the dict is never mutated after
+    staging, only replaced), so a health poller can never stall the
+    decode path or a promotion.  This is what ``serve.bus`` polls to
+    drive the replica state machine, replacing the ad-hoc counter pokes
+    tests used to do.
+
+    ``staged_version``/``staged_pending``/``staged_age_s`` describe the
+    pending publication: the version being built, whether the build is
+    still in flight, and for how long (0.0 when done or nothing staged).
+    """
+    name: str
+    version: int
+    staged_version: Optional[int]
+    staged_pending: bool
+    staged_age_s: float
+    publications: int
+    promotions: int
+    deferred_boundaries: int
+    publish_drops: int
+    last_publish_error: Optional[BaseException]
+    closed: bool
 
 
 def build_serve_step(cfg: ModelConfig, rt: mdl.Runtime):
@@ -123,10 +153,11 @@ class Engine:
 
     def __init__(self, cfg: ModelConfig, rt: mdl.Runtime, params,
                  max_len: int = 512, pa: Optional[PlanArrays] = None,
-                 version: int = 0):
+                 version: int = 0, name: str = "engine"):
         self.cfg, self.rt, self.params, self.pa = cfg, rt, params, pa
         self.max_len = max_len
         self.version = version
+        self.name = name            # replica identity (bus / fault sites)
         self.step_fn = jax.jit(build_serve_step(cfg, rt))
         self._premat = None
         self._premat_fresh = False
@@ -146,6 +177,8 @@ class Engine:
         self.publish_drops = 0
         self.last_publish_error: Optional[BaseException] = None
 
+    _UNSET = object()           # "not passed" sentinel (pa= / slots=)
+
     # ---- background slot builder --------------------------------------
     def _pool(self):
         if self._executor is None:
@@ -163,12 +196,20 @@ class Engine:
         return moe_core.materialize_chunks(self.cfg, self.rt.moe, buf, pa,
                                            pa_token=epoch)
 
-    def _staged_build(self, pa, buf, version, epoch):
-        """The background-thread body of a staged build.  The chaos site
-        lives HERE (not in ``_build_slots``) so injected failures hit the
+    def _staged_build(self, pa, buf, version, epoch, slots=_UNSET):
+        """The background-thread body of a staged build.  The chaos sites
+        live HERE (not in ``_build_slots``) so injected failures hit the
         publication path only — the lazy decode-path rebuild in
-        ``_materialized`` is never poisoned."""
+        ``_materialized`` is never poisoned.  ``replica.build_hang``
+        carries the engine NAME so a fleet test can wedge exactly one
+        replica's builder.  With prebuilt ``slots`` (a bus deduped the
+        stacked gather across same-host replicas) the build is a no-op
+        hand-off — the sites still fire, so per-replica injection works
+        identically on the deduped path."""
         faults.fire("engine.publish_build")
+        faults.fire("replica.build_hang", self.name)
+        if slots is not Engine._UNSET:
+            return slots
         return self._build_slots(pa, buf, version, epoch)
 
     def _check_open(self):
@@ -179,7 +220,7 @@ class Engine:
         return params.get("moe_buffer") if self.cfg.moe.enabled else None
 
     # ---- staging: set_plan / publish_params ----------------------------
-    def _stage(self, pa, params, version, epoch) -> None:
+    def _stage(self, pa, params, version, epoch, slots=_UNSET) -> None:
         """Submit the (pa, params, version) triple's slot build to the
         background thread and make it the staged state (lock held; the
         ``_closed`` re-check under the lock pairs with ``close`` setting
@@ -197,10 +238,10 @@ class Engine:
             self._drop_failed(st)
         buf = self._buf_of(params)
         fut = self._pool().submit(self._staged_build, pa, buf, version,
-                                  epoch)
+                                  epoch, slots)
         self._staged = dict(pa=pa, params=params, version=version,
                             epoch=epoch, fut=fut, buf=buf,
-                            base=self.params)
+                            base=self.params, staged_at=time.monotonic())
 
     def set_plan(self, pa: Optional[PlanArrays], *,
                  defer: bool = True) -> None:
@@ -237,10 +278,9 @@ class Engine:
             self._premat, self._premat_fresh, self._staged = \
                 None, False, None
 
-    _UNSET = object()
-
     def publish_params(self, params, version: Optional[int] = None, *,
-                       pa=_UNSET, wait: bool = False) -> int:
+                       pa=_UNSET, wait: bool = False,
+                       slots=_UNSET) -> int:
         """Stage a new parameter tree at ``version`` (training-while-
         serving).  The next version's compute slots build asynchronously
         against the CURRENT plan (or the staged plan, if a swap is already
@@ -254,8 +294,13 @@ class Engine:
         separately would let a boundary promote a mismatched pair).
         ``wait`` blocks until the slot build has finished (the swap still
         happens only at a boundary) — for callers that need the next
-        boundary to promote deterministically.  Returns the staged
-        version.
+        boundary to promote deterministically.  ``slots`` hands the
+        engine PREBUILT compute slots for this (params, pa, version)
+        triple — a publication bus that already ran the stacked gather
+        for another same-host replica passes them here, so this engine's
+        staged "build" is a no-op hand-off instead of a second gather
+        (one stacked gather per host per publication, N promotions).
+        Returns the staged version.
         """
         self._check_open()
         with self._lock:
@@ -270,7 +315,7 @@ class Engine:
                 pa, epoch = st["pa"], st["epoch"]
             else:
                 pa, epoch = self.pa, self._plan_epoch
-            self._stage(pa, params, version, epoch)
+            self._stage(pa, params, version, epoch, slots)
             self.publications += 1
             fut = self._staged["fut"]
         if wait:
@@ -304,6 +349,31 @@ class Engine:
         step never waits on slot construction."""
         with self._lock:
             self._boundary_locked()
+
+    def health(self) -> EngineHealth:
+        """Non-blocking health snapshot — see :class:`EngineHealth`.
+
+        Deliberately does NOT take the staging lock: the ``_staged``
+        reference is read once (staged dicts are replaced, never mutated
+        in place), so polling health can never contend with a decode
+        step's boundary or a publish.  The snapshot may therefore be one
+        transition stale — fine for a poller, which re-polls."""
+        st = self._staged
+        staged_version, pending, age = None, False, 0.0
+        if st is not None:
+            staged_version = st["version"]
+            pending = not st["fut"].done()
+            if pending:
+                age = time.monotonic() - st["staged_at"]
+        return EngineHealth(
+            name=self.name, version=self.version,
+            staged_version=staged_version, staged_pending=pending,
+            staged_age_s=age, publications=self.publications,
+            promotions=self.promotions,
+            deferred_boundaries=self.deferred_boundaries,
+            publish_drops=self.publish_drops,
+            last_publish_error=self.last_publish_error,
+            closed=self._closed)
 
     def _snapshot(self):
         """One decode step's consistent view: run the boundary and read

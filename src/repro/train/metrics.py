@@ -31,6 +31,20 @@ class RobustnessCounters:
     resumes:        automatic restarts from the newest intact checkpoint.
     rollbacks:      aborts that rolled state back to the last intact
                     checkpoint after the consecutive-bad-step budget.
+
+    Fleet counters (``serve.bus.PublicationBus`` feeding N replicas):
+
+    replica_evictions: replicas EVICTED by the bus (send retries
+                    exhausted, engine closed, or a staged build hung past
+                    the evict deadline) — the fleet kept serving.
+    replica_rejoins: evicted replicas re-admitted and caught up to the
+                    newest published version.
+    dedup_hits:     staged slot builds AVOIDED by same-host dedup (one
+                    stacked gather per host per publication instead of
+                    one per replica).
+    elastic_restores: resumes that re-laid-out the chunk buffer (params
+                    + AdamW moments) from a checkpoint saved under a
+                    different mesh shape (mesh-shape-elastic restore).
     """
 
     skipped_steps: int = 0
@@ -38,6 +52,10 @@ class RobustnessCounters:
     publish_drops: int = 0
     resumes: int = 0
     rollbacks: int = 0
+    replica_evictions: int = 0
+    replica_rejoins: int = 0
+    dedup_hits: int = 0
+    elastic_restores: int = 0
 
     def as_dict(self) -> Dict[str, int]:
         return dataclasses.asdict(self)

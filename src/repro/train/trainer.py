@@ -31,6 +31,7 @@ import numpy as np
 from repro.checkpoint import store
 from repro.common import faults
 from repro.common.config import ModelConfig, TrainConfig
+from repro.common.sharding import elastic_row_remap, remap_buffer_rows
 from repro.core import moe as moe_core
 from repro.core.placement import (MaterializationPlan, ShardingPlan,
                                   ep_materialization, homogeneous_sharding)
@@ -66,9 +67,7 @@ def reshard_perm(old: ShardingPlan, new: ShardingPlan) -> np.ndarray:
     """perm[new_global_row] = old_global_row (identity on pad rows)."""
     rows = old.rows_per_device * old.num_devices
     perm = np.arange(rows, dtype=np.int32)
-    old_g = old.owner_dev.astype(np.int64) * old.rows_per_device + old.owner_row
-    new_g = new.owner_dev.astype(np.int64) * new.rows_per_device + new.owner_row
-    perm[new_g.reshape(-1)] = old_g.reshape(-1)
+    perm[new.global_rows().reshape(-1)] = old.global_rows().reshape(-1)
     return perm
 
 
@@ -417,9 +416,26 @@ def save_train_state(tc: TrainConfig, gstep: int,
                  keep_last=tc.keep_checkpoints)
 
 
+def _elastic_remap(cfg: ModelConfig, old_plan: ShardingPlan, ep: int):
+    """Build the ``store.restore(remap=...)`` transform + the new
+    ShardingPlan for a checkpoint saved under a different EP size.  The
+    saved arrays are full host copies (the gather-to-host already
+    happened at save time), so the re-layout is a pure numpy row gather
+    on the CPU mirror; the device put inside ``store.restore`` is the
+    reshard onto the new mesh."""
+    new_plan = homogeneous_sharding(old_plan.num_layers,
+                                    old_plan.num_experts, ep)
+    rows = moe_core.buffer_rows(cfg, ep)
+    src, valid = elastic_row_remap(old_plan, new_plan, out_rows=rows)
+    remap = {"moe_buffer": lambda a: remap_buffer_rows(a, src, valid)}
+    return remap, new_plan
+
+
 def resume_train_state(cfg: ModelConfig, tc: TrainConfig,
                        scheduler: Optional[HecateScheduler] = None,
-                       ep: int = 1):
+                       ep: int = 1,
+                       counters: Optional[metrics_lib.RobustnessCounters]
+                       = None):
     """Restore (TrainState, global_step) from the newest RESTORABLE
     checkpoint in ``tc.checkpoint_dir``.  The walk goes newest-first and
     skips (a) corrupt/truncated checkpoints — torn writes, bit rot, a
@@ -428,27 +444,65 @@ def resume_train_state(cfg: ModelConfig, tc: TrainConfig,
     old-format ``{params, opt_count}`` save from before full-state
     checkpointing), warning and falling back to the next-newest.
 
+    MESH-SHAPE-ELASTIC: when the candidate's saved ShardingPlan was built
+    for a different EP size than this process runs (``num_devices != ep``
+    — detected from the plan record, never from array shapes, which can
+    coincide across EP sizes with different row layouts), the chunk
+    buffer AND its AdamW moments are re-laid-out row-by-row onto this
+    run's homogeneous sharding before the restore
+    (``common.sharding.elastic_row_remap``), so a trainer that lost
+    devices resumes smaller — trajectory parity vs an unresized run is
+    asserted in tests/test_serve_fleet.py.  ``counters`` (when given)
+    records the event in ``elastic_restores``; a failed elastic re-layout
+    (fault site ``restore.mesh_mismatch``) degrades to fresh init with a
+    warning, never a crash.
+
     Also rehydrates the scheduler from the serving-state saved alongside:
     the load-predictor history (so the resumed run re-plans from the same
     window the killed run saw) and the ShardingPlan that was live at save
-    time.  The latter is a correctness requirement, not an optimization —
-    a reshard physically permuted the checkpointed buffer rows, and a
-    fresh scheduler's homogeneous sharding would silently train with the
-    wrong expert-to-row mapping.  When resharding is enabled but the
-    checkpoint carries no sharding record, resume is REFUSED (fresh init
-    with a warning) rather than guessed.
+    time — or, after an elastic restore, the NEW plan the rows were
+    re-laid-out onto.  The plan restore is a correctness requirement, not
+    an optimization — a reshard physically permuted the checkpointed
+    buffer rows, and a fresh scheduler's homogeneous sharding would
+    silently train with the wrong expert-to-row mapping.  When resharding
+    is enabled but the checkpoint carries no sharding record, resume is
+    REFUSED (fresh init with a warning) rather than guessed.
 
     Returns (None, 0) when no restorable checkpoint exists."""
     if not os.path.isdir(tc.checkpoint_dir):
         return None, 0
     target = step_lib.init_state(cfg, jax.random.PRNGKey(tc.seed), ep)
-    state = gstep = None
+    state = gstep = ss = elastic_plan = None
     for cand in reversed(store.list_steps(tc.checkpoint_dir)):
         if not store.verify_step(tc.checkpoint_dir, cand):
             continue                    # torn / bit-rotted — skip
+        # the sharding record saved WITH this candidate defines its
+        # buffer row layout — read it BEFORE restoring the arrays
+        try:
+            ss = store.restore_serving_state(tc.checkpoint_dir, step=cand)
+        except store.CheckpointCorruptError:
+            ss = None                   # params intact, serving state torn
+        old_plan = remap = elastic_plan = None
+        shard = (ss or {}).get("sharding") or {}
+        if shard:
+            try:
+                old_plan = _sharding_from_tree(shard)
+            except Exception:
+                old_plan = None         # unreadable record: treat as none
+        if old_plan is not None and old_plan.num_devices != ep:
+            try:
+                faults.fire("restore.mesh_mismatch",
+                            (old_plan.num_devices, ep))
+                remap, elastic_plan = _elastic_remap(cfg, old_plan, ep)
+            except Exception as e:
+                warnings.warn(
+                    f"resume: mesh-shape-elastic restore of step {cand} "
+                    f"(saved ep={old_plan.num_devices}, running ep={ep}) "
+                    f"failed ({e!r}); starting fresh", RuntimeWarning)
+                return None, 0
         try:
             data = store.restore(tc.checkpoint_dir, cand,
-                                 _state_tree(target))
+                                 _state_tree(target), remap=remap)
         except store.CheckpointCorruptError as e:
             warnings.warn(
                 f"resume: checkpoint step {cand} is intact but not "
@@ -461,15 +515,19 @@ def resume_train_state(cfg: ModelConfig, tc: TrainConfig,
         break
     if state is None:
         return None, 0
+    if elastic_plan is not None:
+        warnings.warn(
+            f"resume: checkpoint step {gstep} was saved on ep="
+            f"{int(old_plan.num_devices)}; chunk buffer + AdamW moments "
+            f"re-laid-out onto ep={ep}", RuntimeWarning)
+        if counters is not None:
+            counters.elastic_restores += 1
     if scheduler is not None:
-        try:
-            ss = store.restore_serving_state(tc.checkpoint_dir, step=gstep)
-        except store.CheckpointCorruptError:
-            ss = None                   # params intact, serving state torn
         shard = (ss or {}).get("sharding") or {}
-        if shard:
+        if elastic_plan is not None or shard:
             scheduler._drop_pending()   # planned against the old sharding
-            scheduler.sharding = _sharding_from_tree(shard)
+            scheduler.sharding = (elastic_plan if elastic_plan is not None
+                                  else _sharding_from_tree(shard))
             scheduler._calibrated = None
             scheduler._last_plan = None
             scheduler._prefetched_tables = None
@@ -509,7 +567,11 @@ def train_loop(cfg: ModelConfig, rt, tc: TrainConfig,
     Alg-1 run between steps (measured in benchmarks/planner_microbench.py).
 
     Training-while-serving: with ``publish_engine`` (a live
-    ``repro.serve.engine.Engine``) and ``publish_every = k``, the loop
+    ``repro.serve.engine.Engine`` — or a ``repro.serve.bus.
+    PublicationBus`` fanning the same publications out to N replicas; the
+    bus duck-types the engine surface, stages without blocking, and its
+    per-replica failures are evictions counted here as fleet counters,
+    never exceptions on this path) and ``publish_every = k``, the loop
     PUBLISHES the optimizer-updated parameter tree into the engine every k
     steps, versioned by the step index — right after dispatching the step,
     so the engine's background thread builds the new version's compute
@@ -556,7 +618,8 @@ def train_loop(cfg: ModelConfig, rt, tc: TrainConfig,
     start = 0
     if state is None and tc.checkpoint_dir and tc.auto_resume:
         state, start = resume_train_state(cfg, tc, scheduler,
-                                          scheduler.ep if scheduler else 1)
+                                          scheduler.ep if scheduler else 1,
+                                          counters=counters)
         if state is not None:
             counters.resumes += 1
     if state is None:
@@ -581,6 +644,10 @@ def train_loop(cfg: ModelConfig, rt, tc: TrainConfig,
     # TrainAbortError) does not leak into this run's counters
     eng_drops0 = getattr(publish_engine, "publish_drops", 0) or 0
     eng_drops = 0
+    # fleet counters exist when publish_engine is a PublicationBus; on a
+    # bare Engine the getattr defaults keep every delta at 0
+    _FLEET = ("replica_evictions", "replica_rejoins", "dedup_hits")
+    fleet0 = {k: getattr(publish_engine, k, 0) or 0 for k in _FLEET}
     plan_fb0 = scheduler.plan_fallbacks if scheduler is not None else 0
     try:
         for i in range(start, num_steps):
@@ -651,6 +718,10 @@ def train_loop(cfg: ModelConfig, rt, tc: TrainConfig,
             if publish_engine is not None:
                 eng_drops = (getattr(publish_engine, "publish_drops", 0)
                              or 0) - eng_drops0
+                for k in _FLEET:
+                    setattr(counters, k,
+                            (getattr(publish_engine, k, 0) or 0)
+                            - fleet0[k])
             counters.publish_drops = loop_pub_failures + eng_drops
             rec = {"step": i, "loss": float(metrics["loss"]),
                    "xent": float(metrics["xent"]), "time_s": dt,
@@ -671,7 +742,8 @@ def train_loop(cfg: ModelConfig, rt, tc: TrainConfig,
                 if tc.checkpoint_dir:
                     rolled, rstep = resume_train_state(
                         cfg, tc, scheduler,
-                        scheduler.ep if scheduler else 1)
+                        scheduler.ep if scheduler else 1,
+                        counters=counters)
                     if rolled is not None:
                         state = rolled
                         counters.rollbacks += 1

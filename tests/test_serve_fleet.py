@@ -1,0 +1,641 @@
+"""Elastic serving fleet: the PublicationBus fan-out + mesh-shape-elastic
+restore.
+
+1. Broadcast: one ``publish_params`` into the bus promotes every HEALTHY
+   replica to the same version, bit-exact with a fresh engine.
+2. Replica state machine under deterministic fault injection
+   (``only=``-targeted sites — see repro.common.faults): a crashing
+   replica is EVICTED without blocking the fleet and REJOINS bit-exact; a
+   hung staged build goes HEALTHY → LAGGING (drained, old version keeps
+   serving, decode never blocks) → EVICTED past the deadline; a transient
+   ``bus.broadcast_drop`` is retried and the replica stays HEALTHY.
+3. ``train_loop`` publishes through the bus exactly as through a single
+   engine (duck-typed surface) and surfaces the fleet counters
+   (replica_evictions / replica_rejoins / dedup_hits) in every history
+   record.
+4. Mesh-shape-elastic restore: a checkpoint saved under one EP layout
+   resumes on another — chunk buffer AND AdamW moments re-laid-out row by
+   row (``common.sharding.elastic_row_remap``), detected from the saved
+   ShardingPlan (never from array shapes, which can coincide across EP
+   sizes); the ``restore.mesh_mismatch`` fault degrades to fresh init.
+5. ``store.gc`` racing ``latest_step(verify=True)``: a reader walking
+   newest-first while retention deletes its candidate falls back to the
+   next intact step, never crashes.
+
+Distributed (forced-host-device subprocesses): the same-host dedup law —
+4 replicas, EXACTLY ONE stacked gather per publication (call-counted AND
+jaxpr-asserted) — and (dp=2, ep=2) → (dp=1, ep=4) optimizer-state restore
+with per-step trajectory parity ≤ 1e-5 vs the unresized run.
+"""
+import shutil
+import time
+
+import jax
+import numpy as np
+import pytest
+
+import repro.configs as C
+from repro.checkpoint import store
+from repro.common import faults
+from repro.common.config import TrainConfig
+from repro.common.sharding import elastic_row_remap, remap_buffer_rows
+from repro.core.placement import homogeneous_sharding
+from repro.data.pipeline import make_stream
+from repro.models import model as mdl
+from repro.serve.bus import (EVICTED, HEALTHY, LAGGING, PublicationBus)
+from repro.serve.engine import Engine
+from repro.train.metrics import RobustnessCounters
+from repro.train.trainer import (HecateScheduler, resume_train_state,
+                                 save_train_state, train_loop)
+from repro.train import step as step_lib
+
+PROMPTS = np.asarray([[1, 2, 3], [4, 5, 6]], np.int32)
+
+
+@pytest.fixture(autouse=True)
+def _disarm():
+    yield
+    faults.clear()
+
+
+def _fleet(n=3, params_seed=0, **bus_kw):
+    cfg = C.get_smoke("gpt-moe-s")
+    rt = mdl.Runtime()
+    sched = HecateScheduler(cfg, ep=1, impl="ep")
+    pa = sched.plan_arrays()
+    sched.close()
+    params = mdl.init_params(cfg, jax.random.PRNGKey(params_seed))
+    engines = [Engine(cfg, rt, params, max_len=32, pa=pa, name=f"r{i}")
+               for i in range(n)]
+    bus = PublicationBus([(e.name, e) for e in engines], **bus_kw)
+    return cfg, rt, params, pa, engines, bus
+
+
+def _teardown(bus, engines):
+    bus.close()
+    for e in engines:
+        e.close()
+
+
+def test_broadcast_promotes_every_replica_bit_exact():
+    """One publish through the bus lands the same (params, version) on
+    every replica; decode parity is bit-exact across the fleet and vs a
+    fresh engine built at the published version."""
+    cfg, rt, params, pa, engines, bus = _fleet(3)
+    params2 = mdl.init_params(cfg, jax.random.PRNGKey(1))
+    v = bus.publish_params(params2, version=7, wait=True)
+    assert v == 7 and bus.version == 7
+    outs = []
+    for e in engines:
+        assert e.version == 7 and e.params is params2
+        outs.append(e.generate(PROMPTS, steps=3))
+    with Engine(cfg, rt, params2, max_len=32, pa=pa, version=7) as fresh:
+        ref = fresh.generate(PROMPTS, steps=3)
+    for o in outs:
+        np.testing.assert_array_equal(o, ref)
+    # mesh-less engines: the host build degenerates to the no-slot triple
+    # but the dedup accounting still sees one shared build per host group
+    assert bus.dedup_hits == 2 and bus.replica_evictions == 0
+    assert len(bus.route()) == 3
+    _teardown(bus, engines)
+
+
+def test_crash_evicts_one_replica_fleet_serves_rejoin_bit_exact():
+    """A replica that raises through every send retry is EVICTED without
+    blocking the others (they promote the published version); after the
+    fault clears, ``rejoin`` catches it up bit-exactly from the newest
+    published triple."""
+    cfg, rt, params, pa, engines, bus = _fleet(
+        4, max_retries=1, backoff_s=0.005)
+    params2 = mdl.init_params(cfg, jax.random.PRNGKey(2))
+    faults.inject("replica.crash", only="r2", times=None)
+    with pytest.warns(RuntimeWarning, match="evicted"):
+        bus.publish_params(params2, version=3, wait=True)
+    h = bus.poll()
+    assert h["r2"].state == EVICTED
+    assert bus.replica_evictions == 1 and bus.publish_drops == 1
+    assert bus.broadcast_retries >= 1
+    # the crash fired BEFORE the send reached the engine: r2 still serves
+    # its OLD version; the other three promoted the new one
+    assert engines[2].version == 0
+    survivors = bus.route()
+    assert len(survivors) == 3 and engines[2] not in survivors
+    for e in (engines[0], engines[1], engines[3]):
+        assert e.version == 3 and e.params is params2
+    # later publications skip the evicted replica without new evictions
+    params3 = mdl.init_params(cfg, jax.random.PRNGKey(3))
+    bus.publish_params(params3, version=4, wait=True)
+    assert engines[2].version == 0 and bus.replica_evictions == 1
+    # fault cleared -> rejoin catches up to the NEWEST published version
+    faults.clear()
+    assert bus.rejoin("r2")
+    assert bus.poll()["r2"].state == HEALTHY
+    assert bus.replica_rejoins == 1 and len(bus.route()) == 4
+    assert engines[2].version == 4 and engines[2].params is params3
+    ref = engines[0].generate(PROMPTS, steps=3)
+    np.testing.assert_array_equal(engines[2].generate(PROMPTS, steps=3),
+                                  ref)
+    _teardown(bus, engines)
+
+
+def test_build_hang_goes_lagging_then_evicted_without_blocking():
+    """A hung staged build never blocks anything: the replica is marked
+    LAGGING once the build age passes the deadline (drained from routing,
+    its OLD version keeps serving decode), then EVICTED past the evict
+    deadline — while the rest of the fleet promotes normally."""
+    cfg, rt, params, pa, engines, bus = _fleet(
+        3, build_deadline_s=0.08, evict_deadline_s=0.35)
+    params2 = mdl.init_params(cfg, jax.random.PRNGKey(4))
+    out_old = engines[1].generate(PROMPTS, steps=2)
+    faults.inject("replica.build_hang", only="r1", hang_s=30.0, times=None)
+    bus.publish_params(params2, version=2)      # no wait: r1's build hangs
+    deadline = time.monotonic() + 5.0
+    while (bus.poll()["r1"].state == HEALTHY
+           and time.monotonic() < deadline):
+        time.sleep(0.02)
+    assert bus.poll()["r1"].state == LAGGING
+    assert engines[1] not in bus.route()        # drained by the router
+    # decode on the LAGGING replica still serves the OLD version, and the
+    # call is bounded (never blocks on the wedged build)
+    t0 = time.perf_counter()
+    np.testing.assert_array_equal(engines[1].generate(PROMPTS, steps=2),
+                                  out_old)
+    assert time.perf_counter() - t0 < 5.0
+    assert engines[1].version == 0
+    # the healthy replicas promoted the publication meanwhile
+    for e in (engines[0], engines[2]):
+        e.flush()
+        assert e.version == 2
+    deadline = time.monotonic() + 5.0
+    with pytest.warns(RuntimeWarning, match="evicted"):
+        while (bus.poll()["r1"].state == LAGGING
+               and time.monotonic() < deadline):
+            time.sleep(0.05)
+    assert bus.poll()["r1"].state == EVICTED
+    assert bus.replica_evictions == 1
+    faults.clear()                              # releases the hang
+    _teardown(bus, engines)
+
+
+def test_transient_broadcast_drop_is_retried_in_place():
+    """A transient send failure (one ``bus.broadcast_drop`` firing) is
+    absorbed by retry-with-backoff: the replica promotes the publication
+    and stays HEALTHY, nothing is evicted."""
+    cfg, rt, params, pa, engines, bus = _fleet(
+        2, max_retries=2, backoff_s=0.005)
+    faults.inject("bus.broadcast_drop", only="r0", times=1)
+    params2 = mdl.init_params(cfg, jax.random.PRNGKey(5))
+    bus.publish_params(params2, version=1, wait=True)
+    assert bus.broadcast_retries == 1 and bus.replica_evictions == 0
+    assert bus.publish_drops == 0
+    for e in engines:
+        assert e.version == 1
+    assert {h.state for h in bus.poll().values()} == {HEALTHY}
+    _teardown(bus, engines)
+
+
+def test_bus_coalesces_to_latest_and_rejects_after_close():
+    """Back-to-back publishes coalesce latest-wins (like the engine's own
+    staging) and a closed bus raises on publish — but close never touches
+    the replica engines."""
+    cfg, rt, params, pa, engines, bus = _fleet(2)
+    for k in range(5):
+        bus.publish_params(
+            mdl.init_params(cfg, jax.random.PRNGKey(10 + k)),
+            version=k + 1)
+    bus.flush()
+    assert bus.version == 5
+    for e in engines:
+        assert e.version == 5
+    bus.close()
+    with pytest.raises(RuntimeError):
+        bus.publish_params(params)
+    with pytest.raises(RuntimeError):
+        bus.rejoin("r0")
+    assert not engines[0]._closed       # caller owns the engines
+    for e in engines:
+        e.close()
+
+
+def test_train_loop_publishes_through_bus_and_counts_fleet_events():
+    """The bus duck-types the engine surface ``train_loop`` publishes
+    into: versions are the global step, a replica dying mid-run is
+    evicted (drop-and-count — training never blocks or raises), and the
+    fleet counters land in every later history record."""
+    cfg = C.get_smoke("gpt-moe-s")
+    rt = mdl.Runtime()
+    tc = TrainConfig(learning_rate=3e-3, warmup_steps=2, total_steps=8)
+    sched = HecateScheduler(cfg, ep=1, impl="ep")
+    pa = sched.plan_arrays()
+    params = mdl.init_params(cfg, jax.random.PRNGKey(0))
+    engines = [Engine(cfg, rt, params, max_len=32, pa=pa, name=f"r{i}")
+               for i in range(2)]
+    bus = PublicationBus([(e.name, e) for e in engines],
+                         max_retries=0, backoff_s=0.001)
+    faults.inject("replica.crash", only="r1", times=None)
+    stream = make_stream(cfg.vocab_size, 32, 8, kind="bytes", seed=0)
+    with pytest.warns(RuntimeWarning, match="evicted"):
+        state, hist = train_loop(cfg, rt, tc, stream, scheduler=sched,
+                                 num_steps=8, log_every=0,
+                                 publish_engine=bus, publish_every=3)
+        bus.flush()
+    faults.clear()
+    # publications at steps 3 and 6, versioned by the GLOBAL step
+    assert bus.version == 6 and engines[0].version == 6
+    assert bus.replica_evictions == 1
+    assert hist[-1]["replica_evictions"] == 1
+    assert hist[-1]["replica_rejoins"] == 0
+    assert "dedup_hits" in hist[-1] and "elastic_restores" in hist[-1]
+    # the healthy replica serves the trained params bit-exactly
+    out = engines[0].generate(PROMPTS, steps=3)
+    with Engine(cfg, rt, engines[0].params, max_len=32, pa=engines[0].pa,
+                version=6) as fresh:
+        np.testing.assert_array_equal(out, fresh.generate(PROMPTS, steps=3))
+    # the dead replica rejoins from the newest published version
+    assert bus.rejoin("r1")
+    np.testing.assert_array_equal(out, engines[1].generate(PROMPTS, steps=3))
+    assert engines[1].version == 6
+    _teardown(bus, engines)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint: gc vs verified-latest race, elastic restore
+# ---------------------------------------------------------------------------
+def test_gc_racing_verified_latest_step_falls_back(tmp_path, monkeypatch):
+    """A reader walking newest-first while retention GC deletes its
+    current candidate must fall back to the next intact checkpoint —
+    never crash, never return the vanished step."""
+    d = str(tmp_path)
+    for s in (1, 2, 3):
+        store.save(d, s, {"x": np.full(4, s, np.float32)})
+    orig = store._load_verified
+    raced = []
+
+    def racing_load(path):
+        # GC's rmtree lands between the reader listing step_3 and reading
+        # it — the newest candidate vanishes mid-walk
+        if path.endswith("step_00000003") and not raced:
+            raced.append(path)
+            shutil.rmtree(path)
+        return orig(path)
+
+    monkeypatch.setattr(store, "_load_verified", racing_load)
+    assert store.latest_step(d, verify=True) == 2
+    # the same fallback protects restore-by-latest flows: gc(keep_last=1)
+    # then a verified walk still lands on the newest survivor
+    store.gc(d, keep_last=1)
+    assert store.latest_step(d, verify=True) == 2
+    data, _ = store._load_verified(f"{d}/step_00000002")
+    np.testing.assert_array_equal(data["x"], np.full(4, 2, np.float32))
+
+
+def test_elastic_row_remap_padded_layout():
+    """ep=2 -> ep=3 (E=8 does not divide): the new layout has pad rows —
+    they come back zero-filled, and every expert row survives the move."""
+    old = homogeneous_sharding(2, 8, 2)
+    new = homogeneous_sharding(2, 8, 3)
+    src, valid = elastic_row_remap(old, new)
+    assert src.shape == (18,) and int(valid.sum()) == 16
+    arr = np.arange(16 * 3, dtype=np.float32).reshape(16, 3) + 1.0
+    out = remap_buffer_rows(arr, src, valid)
+    assert out.shape == (18, 3) and out.dtype == arr.dtype
+    assert (out[~valid] == 0).all()
+    np.testing.assert_array_equal(out[new.global_rows().reshape(-1)],
+                                  arr[old.global_rows().reshape(-1)])
+    # (L, E) mismatch is a hard error, not a silent misload
+    with pytest.raises(ValueError):
+        elastic_row_remap(old, homogeneous_sharding(2, 4, 2))
+
+
+def _ckpt_on_ep(cfg, tmp_path, ep, gstep=5):
+    tc = TrainConfig(checkpoint_dir=str(tmp_path), checkpoint_every=1,
+                     keep_checkpoints=0)
+    sched = HecateScheduler(cfg, ep=ep, impl="ep")
+    sched.plan_arrays()                 # sets _last_plan for the save
+    state = step_lib.init_state(cfg, jax.random.PRNGKey(7), ep=ep)
+    state = state._replace(
+        opt=state.opt._replace(
+            mu=jax.tree.map(lambda a: a + 1.0, state.opt.mu),
+            nu=jax.tree.map(lambda a: a + 2.0, state.opt.nu)),
+        step=np.int64(gstep))
+    save_train_state(tc, gstep, state, sched)
+    sched.close()
+    return tc, sched, state
+
+
+def test_elastic_restore_remaps_buffer_and_moments(tmp_path):
+    """A checkpoint saved on ep=2 restores on ep=4: detected from the
+    saved ShardingPlan's device count (the array SHAPES coincide here —
+    shape checks alone would silently misload), chunk rows of params AND
+    both AdamW moments land at their new-plan positions bit-exactly, all
+    other leaves restore verbatim, and the scheduler adopts the new
+    plan."""
+    cfg = C.get_smoke("gpt-moe-s")
+    tc, sched2, state2 = _ckpt_on_ep(cfg, tmp_path, ep=2)
+    old_plan = sched2.sharding
+    sched4 = HecateScheduler(cfg, ep=4, impl="ep")
+    counters = RobustnessCounters()
+    with pytest.warns(RuntimeWarning, match="re-laid-out"):
+        state4, gstep = resume_train_state(cfg, tc, sched4, ep=4,
+                                           counters=counters)
+    assert gstep == 5 and int(state4.step) == 5
+    assert counters.elastic_restores == 1
+    assert sched4.sharding.num_devices == 4
+    og = old_plan.global_rows().reshape(-1)
+    ng = sched4.sharding.global_rows().reshape(-1)
+    for get in (lambda s: s.params["moe_buffer"],
+                lambda s: s.opt.mu["moe_buffer"],
+                lambda s: s.opt.nu["moe_buffer"]):
+        np.testing.assert_array_equal(np.asarray(get(state4))[ng],
+                                      np.asarray(get(state2))[og])
+    # every layout-independent leaf restores verbatim (only chunk-buffer
+    # rows move in an elastic restore)
+    flat2 = jax.tree_util.tree_flatten_with_path(state2.params)[0]
+    flat4 = jax.tree_util.tree_flatten_with_path(state4.params)[0]
+    checked = 0
+    for (p2, a2), (p4, a4) in zip(flat2, flat4):
+        assert p2 == p4
+        if "moe_buffer" in jax.tree_util.keystr(p2):
+            continue
+        np.testing.assert_array_equal(np.asarray(a4), np.asarray(a2))
+        checked += 1
+    assert checked > 0
+    sched4.close()
+    # same-EP resume stays verbatim (no elastic event, saved plan adopted)
+    sched2b = HecateScheduler(cfg, ep=2, impl="ep")
+    c2 = RobustnessCounters()
+    state2b, _ = resume_train_state(cfg, tc, sched2b, ep=2, counters=c2)
+    assert c2.elastic_restores == 0
+    np.testing.assert_array_equal(
+        np.asarray(state2b.params["moe_buffer"]),
+        np.asarray(state2.params["moe_buffer"]))
+    sched2b.close()
+
+
+def test_restore_mesh_mismatch_fault_degrades_to_fresh_init(tmp_path):
+    """An armed ``restore.mesh_mismatch`` (the elastic re-layout itself
+    failing) degrades to fresh init with a warning — resume never crashes
+    on a layout change."""
+    cfg = C.get_smoke("gpt-moe-s")
+    tc, sched2, _ = _ckpt_on_ep(cfg, tmp_path, ep=2)
+    sched4 = HecateScheduler(cfg, ep=4, impl="ep")
+    faults.inject("restore.mesh_mismatch", times=1)
+    with pytest.warns(RuntimeWarning, match="starting fresh"):
+        state, gstep = resume_train_state(cfg, tc, sched4, ep=4)
+    assert state is None and gstep == 0
+    assert faults.fired("restore.mesh_mismatch") == 1
+    faults.clear()
+    # payload is (saved_ep, running_ep) — only= can target one transition
+    faults.inject("restore.mesh_mismatch", only=(8, 4), times=1)
+    state, gstep = resume_train_state(cfg, tc, sched4, ep=4)
+    assert state is not None and gstep == 5     # (2, 4) passed through
+    assert faults.fired("restore.mesh_mismatch") == 0
+    sched4.close()
+
+
+def test_engine_health_snapshot_is_lock_free_and_accurate():
+    """``health()`` reflects staging life-cycle without touching the
+    staging lock: pending build age grows, promotion clears it, close
+    flips the flag."""
+    cfg, rt, params, pa, engines, bus = _fleet(1)
+    eng = engines[0]
+    h0 = eng.health()
+    assert (h0.name, h0.version, h0.staged_pending) == ("r0", 0, False)
+    gate = __import__("threading").Event()
+    orig = eng._build_slots
+    eng._build_slots = lambda *a, **k: (gate.wait(5.0), orig(*a, **k))[1]
+    eng.publish_params(mdl.init_params(cfg, jax.random.PRNGKey(8)),
+                       version=2)
+    time.sleep(0.05)
+    h1 = eng.health()
+    assert h1.staged_pending and h1.staged_version == 2
+    assert h1.staged_age_s > 0.0
+    gate.set()
+    eng.flush()
+    h2 = eng.health()
+    assert not h2.staged_pending and h2.version == 2
+    assert h2.promotions == 1 and h2.staged_age_s == 0.0
+    _teardown(bus, engines)
+    assert eng.health().closed
+
+
+# ---------------------------------------------------------------------------
+# Distributed: same-host dedup law + elastic optimizer-state parity
+# ---------------------------------------------------------------------------
+FLEET_DEDUP_SCRIPT = r"""
+import numpy as np, jax, jax.numpy as jnp, time
+from functools import partial
+from repro.common import faults
+from repro.common.jaxprs import find_prims
+from repro.configs.gpt_moe_s import smoke
+from repro.core.placement import homogeneous_sharding
+from repro.core.schedule import sparse_materialization
+from repro.core import moe as moe_core
+from repro.models import model as mdl
+from repro.serve.bus import PublicationBus, EVICTED, HEALTHY
+from repro.serve.engine import Engine
+
+cfg = smoke()
+EP = 4
+mesh = jax.make_mesh((2, EP), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+L = moe_core.num_moe_layers(cfg)
+E = cfg.moe.num_experts
+sh = homogeneous_sharding(L, E, EP)
+plan = sparse_materialization(sh, np.ones((L, E)), t=4, m=1, impl="ring")
+pa = moe_core.plan_to_arrays(plan)
+rt = mdl.Runtime(mesh=mesh, moe=moe_core.MoERuntime(
+    mesh=mesh, batch_axes=("data",), impl="ring", m=1, capacity=16,
+    use_pallas=True))
+params = mdl.init_params(cfg, jax.random.PRNGKey(0), ep=EP)
+params2 = mdl.init_params(cfg, jax.random.PRNGKey(1), ep=EP)
+prompts = np.asarray([[5, 7, 9], [1, 2, 3]], np.int32)
+
+# the acceptance law, jaxpr-side: ONE stacked build = L*m ring ppermutes
+# + L FSDP all_gathers — so "exactly one build" below IS "exactly one
+# stacked gather per publication"
+build = partial(moe_core.materialize_stack, cfg, rt.moe,
+                dtype=jnp.dtype(cfg.dtype), name=False)
+eqns = find_prims(build, params["moe_buffer"], pa,
+                  prims={"ppermute", "all_gather"})
+n_pp = sum(e.primitive.name == "ppermute" for e in eqns)
+n_ag = sum(e.primitive.name == "all_gather" for e in eqns)
+assert n_pp == L * plan.m, (n_pp, L, plan.m)
+assert n_ag == L, (n_ag, L)
+
+engines = [Engine(cfg, rt, params, max_len=32, pa=pa, name=f"r{i}")
+           for i in range(4)]
+bus = PublicationBus([(e.name, e) for e in engines],
+                     max_retries=1, backoff_s=0.01)
+
+builds = []
+orig_mc = moe_core.materialize_chunks
+def counting_mc(*a, **k):
+    builds.append(k.get("pa_token"))
+    return orig_mc(*a, **k)
+moe_core.materialize_chunks = counting_mc
+
+# ---- 4 same-host replicas, 1 publication -> EXACTLY ONE stacked build
+bus.publish_params(params2, version=1, wait=True)
+assert len(builds) == 1, builds
+assert bus.dedup_hits == 3, bus.dedup_hits
+outs = [e.generate(prompts, steps=3) for e in engines]
+for e in engines:
+    assert e.version == 1
+fresh = Engine(cfg, rt, params2, max_len=32, pa=pa, version=1)
+ref = fresh.generate(prompts, steps=3)
+fresh.close()
+for o in outs:
+    assert (o == ref).all()
+print(f"dedup: {len(builds)} build for 4 replicas "
+      f"({bus.dedup_hits} hits)")
+
+# ---- mid-publish crash: 3 replicas serve v2, r1 evicted, rejoin exact
+params3 = mdl.init_params(cfg, jax.random.PRNGKey(2), ep=EP)
+faults.inject("replica.crash", only="r1", times=None)
+import warnings
+with warnings.catch_warnings():
+    warnings.simplefilter("ignore")
+    bus.publish_params(params3, version=2, wait=True)
+assert bus.poll()["r1"].state == EVICTED
+assert len(bus.route()) == 3
+for e in (engines[0], engines[2], engines[3]):
+    assert e.version == 2
+assert engines[1].version == 1          # untouched by the failed send
+faults.clear()
+assert bus.rejoin("r1")
+assert engines[1].version == 2
+ref2 = engines[0].generate(prompts, steps=3)
+assert (engines[1].generate(prompts, steps=3) == ref2).all()
+moe_core.materialize_chunks = orig_mc
+bus.close()
+for e in engines:
+    e.close()
+print("FLEET DEDUP OK")
+"""
+
+
+def test_same_host_dedup_one_stacked_gather_per_publication(dist):
+    """4 replicas on one host promote one publication from EXACTLY ONE
+    stacked gather (call-counted; its jaxpr carries the full L·m ring
+    permutes + L all-gathers), decode bit-exactly; a mid-publish crash
+    evicts one replica, the other 3 serve the new version, and the
+    rejoined replica catches up bit-exactly — on a real (2 x 4) mesh."""
+    out = dist(FLEET_DEDUP_SCRIPT, n_devices=8)
+    assert "FLEET DEDUP OK" in out
+
+
+ELASTIC_SCRIPT = r"""
+import os, tempfile
+import numpy as np, jax, jax.numpy as jnp
+from repro.common.config import ModelConfig, MoEConfig, TrainConfig
+from repro.core import moe as moe_core
+from repro.core.placement import homogeneous_sharding
+from repro.core.schedule import sparse_materialization
+from repro.models import model as mdl
+from repro.train import step as step_lib
+from repro.train.metrics import RobustnessCounters
+from repro.train.trainer import (HecateScheduler, resume_train_state,
+                                 save_train_state)
+
+cfg = ModelConfig(
+    name="t", arch_type="moe", num_layers=2,
+    d_model=128, num_heads=4, num_kv_heads=4, head_dim=32,
+    d_ff=256, vocab_size=512,
+    moe=MoEConfig(num_experts=8, experts_per_token=2, d_ff=256,
+                  slots_per_device=2),
+    act="gelu", norm="ln", remat=False, dtype="float32")
+L = moe_core.num_moe_layers(cfg)
+E = cfg.moe.num_experts
+tc = TrainConfig(learning_rate=1e-3, warmup_steps=2,
+                 checkpoint_dir=os.path.join(tempfile.mkdtemp(), "ck"),
+                 keep_checkpoints=0, seed=0)
+rng = np.random.default_rng(0)
+BATCHES = [{"tokens": jnp.asarray(rng.integers(0, 512, (4, 9)), jnp.int32)}
+           for _ in range(8)]
+
+
+def runtime(dp, ep):
+    mesh = jax.make_mesh((dp, ep), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,)*2)
+    return mdl.Runtime(mesh=mesh, moe=moe_core.MoERuntime(
+        mesh=mesh, batch_axes=("data",), impl="ring", m=1, capacity=64,
+        use_pallas=False))
+
+
+def pa_for(ep):
+    sh = homogeneous_sharding(L, E, ep)
+    return moe_core.plan_to_arrays(
+        sparse_materialization(sh, np.ones((L, E)), t=4, m=1, impl="ring"))
+
+
+def run(state, rt, pa, batches):
+    fn = jax.jit(step_lib.build_train_step(cfg, rt, tc))
+    losses = []
+    for b in batches:
+        state, m = fn(state, b, pa)
+        m = jax.tree.map(np.asarray, m)
+        assert float(m.get("dropped_frac", 0.0)) == 0.0   # parity needs
+        losses.append(float(m["loss"]))                   # zero drops
+    return state, losses
+
+# ---- run A (unresized): (dp=2, ep=2) for all 8 steps ------------------
+rt22 = runtime(2, 2)
+pa2 = pa_for(2)
+stateA = step_lib.init_state(cfg, jax.random.PRNGKey(0), ep=2)
+stateA, lossA = run(stateA, rt22, pa2, BATCHES)
+
+# ---- run B: 4 steps on (2, 2), checkpoint, resume on (1, 4) -----------
+stateB = step_lib.init_state(cfg, jax.random.PRNGKey(0), ep=2)
+stateB, lossB1 = run(stateB, rt22, pa2, BATCHES[:4])
+np.testing.assert_allclose(lossB1, lossA[:4], atol=1e-6)
+sched2 = HecateScheduler(cfg, ep=2, impl="ring", async_plan=False,
+                         calibrate=False)
+sched2.plan_arrays()                    # live plan -> sharding persisted
+save_train_state(tc, 4, stateB._replace(step=stateB.step * 0 + 4), sched2)
+old_plan = sched2.sharding
+sched2.close()
+old_buf = {
+    "p": np.asarray(stateB.params["moe_buffer"]),
+    "mu": np.asarray(stateB.opt.mu["moe_buffer"]),
+    "nu": np.asarray(stateB.opt.nu["moe_buffer"])}
+
+# the trainer "lost devices": same host count, different mesh shape
+sched4 = HecateScheduler(cfg, ep=4, impl="ring", async_plan=False,
+                         calibrate=False)
+counters = RobustnessCounters()
+import warnings
+with warnings.catch_warnings():
+    warnings.simplefilter("ignore")
+    stateR, gstep = resume_train_state(cfg, tc, sched4, ep=4,
+                                       counters=counters)
+assert gstep == 4 and counters.elastic_restores == 1
+assert sched4.sharding.num_devices == 4
+og = old_plan.global_rows().reshape(-1)
+ng = sched4.sharding.global_rows().reshape(-1)
+new_buf = {
+    "p": np.asarray(stateR.params["moe_buffer"]),
+    "mu": np.asarray(stateR.opt.mu["moe_buffer"]),
+    "nu": np.asarray(stateR.opt.nu["moe_buffer"])}
+for k in ("p", "mu", "nu"):             # params AND AdamW moments moved
+    assert (new_buf[k][ng] == old_buf[k][og]).all(), k
+sched4.close()
+
+rt14 = runtime(1, 4)
+pa4 = pa_for(4)
+stateR, lossB2 = run(stateR, rt14, pa4, BATCHES[4:])
+
+# ---- acceptance: trajectory parity <= 1e-5 vs the unresized run -------
+err = np.max(np.abs(np.asarray(lossB2) - np.asarray(lossA[4:])))
+assert err <= 1e-5, (err, lossB2, lossA[4:])
+print(f"elastic trajectory parity: max |dloss| = {err:.2e}")
+print("ELASTIC RESTORE OK")
+"""
+
+
+def test_elastic_restore_trajectory_parity_distributed(dist):
+    """(dp=2, ep=2) checkpoint at step 4 resumes on (dp=1, ep=4) — AdamW
+    moments re-laid-out with the params — and steps 5..8 track the
+    unresized run's losses to ≤ 1e-5 (acceptance criterion d)."""
+    out = dist(ELASTIC_SCRIPT, n_devices=4)
+    assert "ELASTIC RESTORE OK" in out
