@@ -1,16 +1,17 @@
 """Serving example: train a tiny byte-level LM briefly, then serve a batch
-of prompts through prefill + decode with the KV-cache engine.
+of UNPADDED mixed-length prompts through the continuous-batching request
+scheduler (paged KV cache, one-shot prefill, per-request completion).
 
   PYTHONPATH=src python examples/serve_decode.py
 """
-import jax
 import numpy as np
 
 import repro.configs as configs
 from repro.common.config import TrainConfig
-from repro.data.pipeline import _BUILTIN_CORPUS, make_stream
+from repro.data.pipeline import make_stream
 from repro.models.model import Runtime
 from repro.serve.engine import Engine
+from repro.serve.scheduler import DONE, RequestScheduler
 from repro.train.trainer import train_loop
 
 
@@ -22,17 +23,24 @@ def main():
     state, hist = train_loop(cfg, rt, tc, stream, num_steps=120,
                              log_every=30)
 
-    eng = Engine(cfg, rt, state.params, max_len=96)
     prompts = ["In the beginning ", "The scheduler said", "Tokens moved "]
-    enc = np.zeros((len(prompts), max(len(p) for p in prompts)), np.int32)
-    for i, p in enumerate(prompts):
-        enc[i, :len(p)] = np.frombuffer(p.encode(), np.uint8)
-    out = eng.generate(enc, steps=48, temperature=0.0)
-    print("\n--- greedy completions (byte-level) ---")
-    for i, p in enumerate(prompts):
-        text = bytes(int(b) for b in out[i] if 0 < b < 128).decode(
-            errors="replace")
-        print(f"[{i}] {text!r}")
+    eng = Engine(cfg, rt, state.params, max_len=96)
+    # each prompt keeps its TRUE length — the scheduler batches mixed
+    # lengths through per-sequence page tables, no padding tokens decoded
+    with RequestScheduler(eng, max_slots=4, num_pages=37, page_size=8,
+                          max_kv=96, default_ttl_s=300.0) as rs:
+        reqs = [rs.submit(np.frombuffer(p.encode(), np.uint8).astype(
+            np.int32), max_new_tokens=48) for p in prompts]
+        rs.run()
+        print("\n--- greedy completions (byte-level) ---")
+        for i, (p, r) in enumerate(zip(prompts, reqs)):
+            assert r.state == DONE, (r.state, r.finish_reason)
+            text = bytes(int(b) for b in r.output() if 0 < b < 128).decode(
+                errors="replace")
+            print(f"[{i}] {text!r}")
+        print(f"({rs.decode_ticks} batched decode ticks for "
+              f"{sum(len(r.output()) for r in reqs)} tokens)")
+    eng.close()
 
 
 if __name__ == "__main__":

@@ -20,7 +20,10 @@ With ``--replicas N`` the trainer publishes through a
 ``repro.serve.bus.PublicationBus`` into an N-replica fleet instead of a
 single engine (the train loop cannot tell the difference — the bus
 duck-types the engine's publication surface), and the script additionally
-asserts every healthy replica decodes bit-exactly the same completions.
+serves every healthy replica through the continuous-batching
+``RequestScheduler`` (paged KV, unpadded mixed-length prompts, routed
+least-loaded-first by ``bus.route()``) and asserts the fleet decodes
+bit-exactly the same completions.
 """
 import argparse
 import os
@@ -106,9 +109,21 @@ def main():
                              callback=cb, publish_engine=bus or eng,
                              publish_every=args.publish_every)
     if bus is not None:
+        from repro.serve.scheduler import DONE, RequestScheduler
         bus.flush()                   # broadcast + promote fleet-wide
-        fleet = bus.route()
-        outs = [e.generate(enc, steps=args.decode_steps) for e in fleet]
+        fleet = bus.route()           # healthy replicas, least-loaded first
+        outs = []
+        for e in fleet:
+            # continuous batching per replica: each prompt at its TRUE
+            # length (no padding tokens), retired when its request is done
+            with RequestScheduler(e, max_slots=2, num_pages=25,
+                                  page_size=8, max_kv=96) as rs:
+                reqs = [rs.submit(
+                    np.frombuffer(p.encode(), np.uint8).astype(np.int32),
+                    max_new_tokens=args.decode_steps) for p in PROMPTS]
+                rs.run()
+                assert all(r.state == DONE for r in reqs)
+                outs.append(np.concatenate([r.output() for r in reqs]))
         assert all((o == outs[0]).all() for o in outs[1:])
         print(f"fleet parity across {len(fleet)} replicas at version "
               f"{eng.version}: OK ({bus.dedup_hits} deduped builds, "

@@ -100,6 +100,37 @@ out:
     ``exc=...``.  Guarantee: a failed elastic restore degrades to fresh
     init with a warning — resume never crashes on a layout change.
 
+Continuous-batching sites (serve.scheduler — the paged-KV request
+scheduler).  The chaos soak in tests/test_serve_batching.py arms all
+three in random order and asserts the scheduler invariant: the decode
+path never raises, and every admitted request terminates in exactly one
+of DONE / REJECTED / TIMED_OUT:
+
+``serve.page_exhausted``
+    Fired inside ``RequestScheduler._alloc`` before every KV page-pool
+    allocation (arm with ``exc=...`` and a ``times`` budget).  An armed
+    hit forces the allocation to report exhaustion (None) — the
+    scheduler reacts exactly as it would to a genuinely full pool:
+    arrivals wait at admission, and a mid-decode page fault PREEMPTS the
+    youngest sequence (pages freed, requeued with prompt + generated so
+    far) instead of raising.  ``requests_preempted`` counts the victims.
+
+``serve.request_hang``
+    Fired once per active sequence per decode tick, payload = the
+    request id (arm with ``only=<rid>`` to wedge one request).  A hung
+    request stops advancing — no position bump, no sample — but keeps
+    its slot and recomputes an idempotent KV write each tick, until its
+    TTL reaps it to TIMED_OUT (``requests_timed_out``).  The other
+    sequences in the batch keep decoding unaffected.
+
+``serve.prefill_crash``
+    Fired at the head of ``RequestScheduler._prefill``, payload = the
+    request id.  Arm with ``exc=...``.  Guarantee: the request's pages
+    are freed and it is re-queued for a bounded number of retries
+    (``max_prefill_retries``), then REJECTED with
+    ``finish_reason="prefill_crash"`` — the crash never propagates out
+    of ``step()``.
+
 Usage::
 
     from repro.common import faults

@@ -15,6 +15,13 @@ replicas behind a ``repro.serve.bus.PublicationBus`` (one shared host
 group, so the bus's same-host dedup applies), an initial publication
 broadcast through the bus, prompts routed to the healthy replicas, and a
 per-replica health report at the end.
+
+``--continuous`` serves through the continuous-batching
+``repro.serve.scheduler.RequestScheduler`` instead of fixed-batch
+``Engine.generate``: each prompt keeps its TRUE length (no padding
+tokens through the model), prefill is one-shot, and sequences retire
+individually the tick they finish.  Decoder-only archs only — the
+scheduler's paged KV pool has no encoder cross-attention cache.
 """
 from __future__ import annotations
 
@@ -32,6 +39,10 @@ def main():
     ap.add_argument("--no-serve-state", action="store_true",
                     help="ignore persisted (plan, version) serving state")
     ap.add_argument("--prompt", action="append", default=None)
+    ap.add_argument("--continuous", action="store_true",
+                    help="serve through the paged-KV continuous-batching "
+                         "scheduler (unpadded mixed-length prompts) "
+                         "instead of fixed-batch generate")
     ap.add_argument("--steps", type=int, default=32)
     ap.add_argument("--max-len", type=int, default=256)
     ap.add_argument("--temperature", type=float, default=0.0)
@@ -111,16 +122,43 @@ def main():
 
     enc_in = None
     if cfg.is_encoder_decoder:
+        if args.continuous:
+            raise SystemExit("--continuous requires a decoder-only arch "
+                             "(the paged KV pool has no encoder "
+                             "cross-attention cache)")
         enc_in = np.random.default_rng(0).standard_normal(
             (len(prompts), cfg.encoder_seq_len, cfg.d_model)).astype(
             np.float32)
 
+    def serve_continuous(eng):
+        # each prompt at its true length: the scheduler batches mixed
+        # lengths through per-sequence page tables, never decoding pads
+        from repro.serve.scheduler import DONE, RequestScheduler
+        with RequestScheduler(eng, max_slots=min(len(prompts), 4),
+                              num_pages=-(-args.max_len // 8)
+                              * min(len(prompts), 4) + 1,
+                              page_size=8, max_kv=args.max_len,
+                              default_ttl_s=600.0,
+                              temperature=args.temperature,
+                              seed=args.seed) as rs:
+            reqs = [rs.submit(
+                np.frombuffer(p.encode(), np.uint8).astype(np.int32)
+                % cfg.vocab_size, max_new_tokens=args.steps)
+                for p in prompts]
+            rs.run()
+            assert all(r.state == DONE for r in reqs), \
+                [(r.state, r.finish_reason) for r in reqs]
+            print(f"continuous batching: {rs.decode_ticks} decode ticks "
+                  f"for {len(reqs)} requests")
+            return [r.output() for r in reqs]
+
     if args.replicas <= 1:
         with Engine(cfg, rt, params, max_len=args.max_len, pa=pa,
                     version=version) as eng:
-            out = eng.generate(enc, steps=args.steps,
-                               temperature=args.temperature,
-                               seed=args.seed, encoder_input=enc_in)
+            out = (serve_continuous(eng) if args.continuous else
+                   eng.generate(enc, steps=args.steps,
+                                temperature=args.temperature,
+                                seed=args.seed, encoder_input=enc_in))
     else:
         from repro.serve.bus import PublicationBus
         engines = [Engine(cfg, rt, params, max_len=args.max_len, pa=pa,
@@ -132,12 +170,14 @@ def main():
             # bus-published version before taking traffic
             bus.publish_params(params, version=version + 1, pa=pa,
                                wait=True)
-            fleet = bus.route()
+            fleet = bus.route()   # healthy replicas, least-loaded first
             if not fleet:
                 raise SystemExit("no healthy replicas after broadcast")
-            out = fleet[0].generate(enc, steps=args.steps,
-                                    temperature=args.temperature,
-                                    seed=args.seed, encoder_input=enc_in)
+            out = (serve_continuous(fleet[0]) if args.continuous else
+                   fleet[0].generate(enc, steps=args.steps,
+                                     temperature=args.temperature,
+                                     seed=args.seed,
+                                     encoder_input=enc_in))
             for name, st in sorted(bus.poll().items()):
                 print(f"replica {name}: {st.state.lower()} "
                       f"version {st.version}")

@@ -131,6 +131,60 @@ def kv_cache_axes(batch: int, mesh_batch: int):
             "v": (None, "seq_shard", "kv_heads", None)}
 
 
+def init_paged_kv_cache(cfg: ModelConfig, num_rows: int, dtype):
+    """Block-paged KV cache for ONE sublayer: a flat pool of
+    ``num_rows = num_pages * page_size`` token rows shared by every
+    sequence.  Which rows belong to which sequence is pure metadata (the
+    scheduler's page tables — see ``repro.serve.kv_pool``); the device
+    arrays carry no batch dimension at all."""
+    nkv, hd = cfg.num_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((num_rows, nkv, hd), dtype),
+        "v": jnp.zeros((num_rows, nkv, hd), dtype),
+    }
+
+
+def decode_attention_paged(p, cfg: ModelConfig, x, cache, positions,
+                           row_idx, *, kind="attn"):
+    """One-token decode for B sequences at INDEPENDENT positions against a
+    block-paged KV pool.
+
+    x: (B, 1, D); positions: (B,) int32 — each sequence's write position
+    (= its current length); row_idx: (B, max_kv) int32 — the page tables
+    flattened to per-token pool rows: ``row_idx[b, t]`` is the pool row
+    holding sequence b's token t (rows past the allocated pages point at
+    the reserved trash page 0, which no live sequence owns).
+
+    The new K/V is scattered to ``row_idx[b, positions[b]]``; attention
+    gathers each sequence's rows back into a (B, max_kv) view and masks
+    ``t <= positions[b]`` — identical math to the dense path, so a paged
+    trace is bit-exact with a dense-cache trace of the same sequence
+    (asserted in tests/test_serve_batching.py).  Returns (out, new_cache).
+    """
+    q, k_new, v_new = _project_qkv(p, x)
+    mr = default_mrope_sections(cfg.head_dim) if cfg.mrope else None
+    posb = positions[:, None]                       # (B, 1)
+    if cfg.mrope:
+        posb = jnp.broadcast_to(posb[..., None], posb.shape + (3,))
+    q = apply_rope(q, posb, cfg.rope_theta, mr)
+    k_new = apply_rope(k_new, posb, cfg.rope_theta, mr)
+    write_rows = jnp.take_along_axis(row_idx, positions[:, None],
+                                     axis=1)[:, 0]  # (B,)
+    # slots parked on the trash page collide at row 0 — harmless, nothing
+    # live ever reads it; live sequences own disjoint rows by construction
+    k = cache["k"].at[write_rows].set(k_new[:, 0])
+    v = cache["v"].at[write_rows].set(v_new[:, 0])
+    kb, vb = k[row_idx], v[row_idx]                 # (B, max_kv, nkv, hd)
+    kpos = jnp.arange(row_idx.shape[1])
+    valid = kpos[None, :] <= positions[:, None]
+    if kind == "local" and cfg.sliding_window > 0:
+        valid &= kpos[None, :] > positions[:, None] - cfg.sliding_window
+    mask = valid[:, None, None, :]                  # (B, 1, 1, max_kv)
+    out = _sdpa(q, kb, vb, mask, cfg.attn_logit_softcap, cfg.head_dim)
+    out = jnp.einsum("bsnh,nhd->bsd", out, p["wo"].astype(x.dtype))
+    return out, {"k": k, "v": v}
+
+
 def decode_attention(p, cfg: ModelConfig, x, cache, pos, *, kind="attn",
                      xa=None, update_cache: bool = True):
     """One-token decode. x: (B,1,D); pos: scalar int32 current position.

@@ -662,6 +662,32 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, *,
     return cache
 
 
+def init_paged_cache(cfg: ModelConfig, num_slots: int, num_rows: int):
+    """Block-paged decode cache: attention sublayers share a flat pool of
+    ``num_rows`` token rows (``attn.init_paged_kv_cache``; ownership is
+    page-table metadata, see ``repro.serve.kv_pool``), while O(1)-state
+    sublayers (mamba, whose state does not grow with sequence length) keep
+    one dense state per scheduler SLOT.  Leading ``num_superblocks`` axis
+    per sublayer, exactly like :func:`init_cache`.  Encoder-decoder
+    caches are not paged (no continuous-batching path for them yet)."""
+    assert not cfg.is_encoder_decoder, (
+        "paged decode does not support encoder-decoder caches")
+    dt = jnp.dtype(cfg.dtype)
+    n_sb = cfg.num_superblocks
+
+    def one(kind):
+        if kind == "mamba":
+            return mb.init_mamba_cache(cfg, num_slots, dt)
+        return attn.init_paged_kv_cache(cfg, num_rows, dt)
+
+    def stack(c):
+        return jax.tree.map(lambda a: jnp.broadcast_to(
+            a[None], (n_sb,) + a.shape).copy(), c)
+
+    return {f"l{j}": stack(one(kind))
+            for j, kind in enumerate(cfg.layer_pattern)}
+
+
 def cache_logical_axes(cfg: ModelConfig, batch: int, mesh_batch: int):
     ax = {}
     for j, kind in enumerate(cfg.layer_pattern):
@@ -678,12 +704,27 @@ def cache_logical_axes(cfg: ModelConfig, batch: int, mesh_batch: int):
 
 
 def decode_step(cfg: ModelConfig, rt: Runtime, params, cache, tokens, pos,
-                pa: Optional[PlanArrays] = None, premat=None):
+                pa: Optional[PlanArrays] = None, premat=None, *,
+                row_idx=None):
     """tokens: (B, 1) int32; pos: scalar — position being written.
     premat: optional stacked (L_moe, M, K, chunk_len) pre-materialized
     compute slots (``moe_core.materialize_chunks``) — each MoE layer then
     skips its SparseAllGather (the plan/buffer are static across decode
-    steps).  Returns (logits: (B,1,V), new_cache)."""
+    steps).  Returns (logits: (B,1,V), new_cache).
+
+    row_idx: optional (B, max_kv) int32 — switches the attention layers
+    to the BLOCK-PAGED cache (``init_paged_cache`` layout; each row maps
+    a sequence token to its pool row).  In paged mode ``pos`` must be a
+    (B,) int32 vector of per-sequence positions: B independent sequences
+    decode one token each at independent lengths (continuous batching —
+    see ``repro.serve.scheduler``).  Everything outside the attention
+    cache read/write — MoE premat reuse included — is identical, so the
+    paged step obeys the same collective law (zero SparseAllGathers with
+    a fresh slot cache; jaxpr-asserted in tests/test_serve_batching.py).
+    """
+    if row_idx is not None:
+        assert not cfg.is_encoder_decoder, (
+            "paged decode does not support encoder-decoder models")
     dt = jnp.dtype(cfg.dtype)
     x = ly.embed(params["embed"], tokens, dt) * math.sqrt(cfg.d_model)
     x = rt.constrain(x, ("batch", None, None))
@@ -718,6 +759,12 @@ def decode_step(cfg: ModelConfig, rt: Runtime, params, cache, tokens, pos,
             if kind == "mamba":
                 y, nc = mb.mamba_decode_step(p["mamba"], cfg, h,
                                              cache_sb[f"l{j}"])
+                x = x + y
+                new_cache[f"l{j}"] = nc
+            elif row_idx is not None:
+                y, nc = attn.decode_attention_paged(p["attn"], cfg, h,
+                                                    cache_sb[f"l{j}"], pos,
+                                                    row_idx, kind=kind)
                 x = x + y
                 new_cache[f"l{j}"] = nc
             else:

@@ -102,6 +102,10 @@ class ReplicaStatus:
     staged_age_s: float
     publish_drops: int
     last_error: Optional[str]
+    # backpressure from the replica's request scheduler (engine load
+    # probe; zeros when no scheduler is attached) — route() sorts by it
+    queue_depth: int = 0
+    kv_used_frac: float = 0.0
 
 
 class PublicationBus:
@@ -178,10 +182,22 @@ class PublicationBus:
         return [h for h in self._replicas.values() if h.state == HEALTHY]
 
     def route(self) -> List[Any]:
-        """The router's view: engines safe to hand requests to.  LAGGING
-        and EVICTED replicas are DRAINED — excluded here — while their
-        engines (if alive) keep serving whatever they already promoted."""
-        return [h.engine for h in self.healthy()]
+        """The router's view: engines safe to hand requests to, LEAST
+        LOADED first.  LAGGING and EVICTED replicas are DRAINED —
+        excluded here — while their engines (if alive) keep serving
+        whatever they already promoted.
+
+        Ordering is the backpressure signal each engine's request
+        scheduler exposes through ``EngineHealth`` (queue depth, then KV
+        page occupancy); the sort is stable, so replicas without a
+        scheduler attached (all-zero load) keep registration order."""
+        def _load(h):
+            try:
+                hs = h.engine.health()
+                return (hs.queue_depth, hs.kv_used_frac)
+            except Exception:
+                return (0, 0.0)
+        return [h.engine for h in sorted(self.healthy(), key=_load)]
 
     # ---- the train_loop-facing surface --------------------------------
     def publish_params(self, params, version: Optional[int] = None, *,
@@ -421,7 +437,9 @@ class PublicationBus:
                 staged_pending=hs.staged_pending,
                 staged_age_s=hs.staged_age_s,
                 publish_drops=hs.publish_drops,
-                last_error=(repr(h.last_error) if h.last_error else None))
+                last_error=(repr(h.last_error) if h.last_error else None),
+                queue_depth=hs.queue_depth,
+                kv_used_frac=hs.kv_used_frac)
         return out
 
     # ---- lifecycle ------------------------------------------------------

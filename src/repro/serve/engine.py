@@ -94,6 +94,13 @@ class EngineHealth:
     ``staged_version``/``staged_pending``/``staged_age_s`` describe the
     pending publication: the version being built, whether the build is
     still in flight, and for how long (0.0 when done or nothing staged).
+
+    ``queue_depth``/``kv_used_frac`` are the LOAD signals a request
+    scheduler attached to this engine reports (``attach_load_probe``):
+    queued-but-unadmitted requests and the KV page-pool occupancy.  The
+    publication bus consumes them in ``route()`` to place requests on the
+    least-loaded healthy replica; both read 0 when no scheduler is
+    attached (a bare engine advertises itself as unloaded).
     """
     name: str
     version: int
@@ -106,6 +113,8 @@ class EngineHealth:
     publish_drops: int
     last_publish_error: Optional[BaseException]
     closed: bool
+    queue_depth: int = 0
+    kv_used_frac: float = 0.0
 
 
 def build_serve_step(cfg: ModelConfig, rt: mdl.Runtime):
@@ -125,6 +134,13 @@ def build_prefill_step(cfg: ModelConfig, rt: mdl.Runtime):
 
     The cache holds every layer's rotated K/V (or SSM state) for the whole
     prompt — the real production prefill, not a loop of decode steps.
+
+    ``batch["last_pos"]`` (optional, (B,) int32) picks each sequence's
+    LAST REAL position instead of ``-1`` — the continuous-batching
+    scheduler pads prompts up to a shape bucket so mixed lengths share
+    one compiled prefill, and under a causal mask the padding tokens
+    cannot affect positions ``<= last_pos`` (their K/V rows are simply
+    never copied into the paged pool).
     """
     def prefill_step(params, batch, pa: Optional[PlanArrays]):
         kwargs: Dict[str, Any] = {}
@@ -136,8 +152,28 @@ def build_prefill_step(cfg: ModelConfig, rt: mdl.Runtime):
             kwargs["encoder_input"] = batch["encoder_input"]
         logits, _, cache = mdl.forward(cfg, rt, params, pa=pa,
                                        collect_cache=True, **kwargs)
+        if "last_pos" in batch:
+            idx = batch["last_pos"][:, None, None]
+            last = jnp.take_along_axis(
+                logits, jnp.broadcast_to(
+                    idx, (logits.shape[0], 1, logits.shape[2])), axis=1)
+            return last, cache
         return logits[:, -1:], cache
     return prefill_step
+
+
+def build_paged_serve_step(cfg: ModelConfig, rt: mdl.Runtime):
+    """fn(params, cache, tokens:(B,1), positions:(B,), row_idx:(B,max_kv),
+    pa[, premat]) -> (logits:(B,1,V), cache) — one decode token for B
+    INDEPENDENT sequences against the block-paged cache
+    (``mdl.init_paged_cache``).  Same premat contract as
+    ``build_serve_step``: with pre-materialized slots the step issues NO
+    SparseAllGather collectives."""
+    def paged_step(params, cache, tokens, positions, row_idx,
+                   pa: Optional[PlanArrays], premat=None):
+        return mdl.decode_step(cfg, rt, params, cache, tokens, positions,
+                               pa, premat=premat, row_idx=row_idx)
+    return paged_step
 
 
 class Engine:
@@ -167,6 +203,10 @@ class Engine:
         self._executor = None
         self._lock = threading.Lock()
         self._closed = False
+        # optional load probe, installed by an attached request scheduler
+        # (serve.scheduler): () -> (queue_depth, kv_used_frac).  Read
+        # lock-free by health(); a bare engine reports (0, 0.0).
+        self._load_probe = None
         # observability: publications staged / boundaries that promoted /
         # boundaries that found the staged build still in flight /
         # staged builds dropped because they FAILED (old version kept
@@ -365,6 +405,13 @@ class Engine:
             pending = not st["fut"].done()
             if pending:
                 age = time.monotonic() - st["staged_at"]
+        qd, kv = 0, 0.0
+        probe = self._load_probe
+        if probe is not None:
+            try:
+                qd, kv = probe()
+            except Exception:
+                pass                    # a dead scheduler reads unloaded
         return EngineHealth(
             name=self.name, version=self.version,
             staged_version=staged_version, staged_pending=pending,
@@ -373,7 +420,14 @@ class Engine:
             deferred_boundaries=self.deferred_boundaries,
             publish_drops=self.publish_drops,
             last_publish_error=self.last_publish_error,
-            closed=self._closed)
+            closed=self._closed, queue_depth=int(qd),
+            kv_used_frac=float(kv))
+
+    def attach_load_probe(self, probe) -> None:
+        """Install (or clear, with None) the scheduler load probe whose
+        (queue_depth, kv_used_frac) surfaces through :meth:`health` —
+        the backpressure signal ``PublicationBus.route()`` places by."""
+        self._load_probe = probe
 
     def _snapshot(self):
         """One decode step's consistent view: run the boundary and read

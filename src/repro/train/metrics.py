@@ -45,6 +45,18 @@ class RobustnessCounters:
     elastic_restores: resumes that re-laid-out the chunk buffer (params
                     + AdamW moments) from a checkpoint saved under a
                     different mesh shape (mesh-shape-elastic restore).
+
+    Serving counters (``serve.scheduler.RequestScheduler`` — overload is
+    a typed per-request outcome, never an exception on the decode path):
+
+    requests_rejected: requests refused with a typed REJECTED result
+                    (bounded queue full, prompt that can never fit the
+                    KV pool, or prefill crashes past the retry budget).
+    requests_preempted: decoding sequences preempted under KV page-pool
+                    exhaustion (youngest first; pages freed, requeued
+                    with prompt + generated so far — lossless resume).
+    requests_timed_out: requests reaped by their TTL deadline in any
+                    non-terminal state (queued or wedged mid-decode).
     """
 
     skipped_steps: int = 0
@@ -56,6 +68,9 @@ class RobustnessCounters:
     replica_rejoins: int = 0
     dedup_hits: int = 0
     elastic_restores: int = 0
+    requests_rejected: int = 0
+    requests_preempted: int = 0
+    requests_timed_out: int = 0
 
     def as_dict(self) -> Dict[str, int]:
         return dataclasses.asdict(self)

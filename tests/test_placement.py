@@ -164,3 +164,57 @@ def test_alg1_a2a_batched_byte_parity_seeded():
                                     node_size=ns, q_rounds=q,
                                     vectorized=False)
         assert _a2a_plans_equal(pv, pl), (trial, L, E, M, t, m, ns, q)
+
+
+# ---------------------------------------------------------------------------
+# Mesh-shape-elastic row remap: the ep -> ep' -> ep round trip
+# ---------------------------------------------------------------------------
+@st.composite
+def remap_problem(draw):
+    L = draw(st.integers(1, 3))
+    E = draw(st.sampled_from([4, 8, 16, 40]))
+    M = draw(st.sampled_from([2, 3, 4, 8]))
+    M2 = draw(st.sampled_from([2, 3, 4, 8, 16]))
+    # k_local >= ceil(E/M): randomized slack creates PAD rows even when
+    # E % M == 0 — the round trip must preserve their zeros bit-exactly
+    k1 = -(-E // M) + draw(st.integers(0, 2))
+    k2 = -(-E // M2) + draw(st.integers(0, 2))
+    return L, E, M, M2, k1, k2
+
+
+@settings(max_examples=40, deadline=None)
+@given(remap_problem(), st.integers(0, 2 ** 31 - 1))
+def test_elastic_row_remap_round_trips_bit_exact(p, seed):
+    """ep -> ep' -> ep re-layout is the identity, bit-exact, for the
+    params buffer AND AdamW-moment-shaped companions — including the pad
+    rows both layouts zero-fill (the elastic-restore guarantee: shrinking
+    then growing a fleet, or vice versa, loses nothing)."""
+    from repro.common.sharding import elastic_row_remap, remap_buffer_rows
+
+    L, E, M, M2, k1, k2 = p
+    old = homogeneous_sharding(L, E, M, k_local=k1)
+    new = homogeneous_sharding(L, E, M2, k_local=k2)
+    fwd = elastic_row_remap(old, new)
+    bwd = elastic_row_remap(new, old)
+
+    rows_old = old.rows_per_device * old.num_devices
+    rng = np.random.default_rng(seed)
+    # canonical checkpoint buffers: live rows random, pad rows ZERO
+    live = np.zeros(rows_old, bool)
+    live[old.global_rows().reshape(-1)] = True
+    buffers = {
+        "params": rng.standard_normal((rows_old, 8)).astype(np.float32),
+        "mu": rng.standard_normal((rows_old, 8)).astype(np.float32),
+        "nu": rng.gamma(1.0, 1.0, (rows_old, 8)).astype(np.float32),
+    }
+    for name, arr in buffers.items():
+        arr[~live] = 0.0
+        there = remap_buffer_rows(arr, *fwd)
+        assert there.shape[0] == new.rows_per_device * new.num_devices
+        back = remap_buffer_rows(there, *bwd)
+        np.testing.assert_array_equal(back, arr, err_msg=name)
+        assert back.dtype == arr.dtype
+        # the intermediate layout also zero-fills ITS pad rows
+        live2 = np.zeros(there.shape[0], bool)
+        live2[new.global_rows().reshape(-1)] = True
+        assert (there[~live2] == 0).all()
