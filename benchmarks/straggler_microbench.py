@@ -6,6 +6,15 @@ Measured quantity: the ZERO-DROP DISPATCH CAPACITY each placement needs
 buffer — and the All-to-All traffic and grouped-kernel compute over it —
 is proportional to the most-loaded device, so the capacity ratio is the
 straggler factor.  Also reports drop rates at balanced-load buffers.
+
+Second scenario (MTTR): a real training run on (dp=1, ep=EP) loses a
+device mid-run and the in-run supervisor shrinks the mesh in-process
+(roll back to the newest checkpoint + replay on the survivors).  The
+reported row is the recovery cost: detect -> shrunk-and-training wall
+time (``mttr_s``, as measured by the supervisor itself) and the steps
+lost to the rollback — the quantities a restart-based recovery pays a
+full process relaunch + cold compile for.  Results land in
+``BENCH_straggler.json``.
 """
 import argparse
 import subprocess
@@ -81,6 +90,81 @@ print("RESULT " + json.dumps(res))
 """
 
 
+MTTR_SCRIPT = r"""
+import json, os, tempfile, time, warnings
+import numpy as np, jax
+from repro.common.compat import install_axis_type_shim
+install_axis_type_shim()
+from repro.common import faults
+from repro.common.config import ModelConfig, MoEConfig, TrainConfig
+from repro.core import moe as moe_core
+from repro.models import model as mdl
+from repro.train.supervisor import RECOVERED, SHRUNK, TrainSupervisor, \
+    surviving_mesh
+from repro.train.trainer import HecateScheduler, train_loop
+
+EP = int(os.environ.get("MTTR_EP", 4))
+STEPS = int(os.environ.get("MTTR_STEPS", 8))
+cfg = ModelConfig(
+    name="bench", arch_type="moe", num_layers=2,
+    d_model=128, num_heads=4, num_kv_heads=4, head_dim=32,
+    d_ff=256, vocab_size=512,
+    moe=MoEConfig(num_experts=8, experts_per_token=2, d_ff=256,
+                  slots_per_device=2),
+    act="gelu", norm="ln", remat=False, dtype="float32")
+rng = np.random.default_rng(0)
+batches = iter({"tokens": rng.integers(0, 512, (4, 9)).astype(np.int32)}
+               for _ in range(STEPS))
+tc = TrainConfig(learning_rate=1e-3, warmup_steps=2, total_steps=STEPS,
+                 checkpoint_dir=os.path.join(tempfile.mkdtemp(), "ck"),
+                 checkpoint_every=2, keep_checkpoints=0, seed=0)
+
+
+def runtime(ep):
+    mesh = surviving_mesh(1, ep)
+    return mdl.Runtime(mesh=mesh, moe=moe_core.MoERuntime(
+        mesh=mesh, batch_axes=("data",), impl="ring", m=2, capacity=64,
+        use_pallas=False))
+
+sched = HecateScheduler(cfg, ep=EP, impl="ring", async_plan=False,
+                        calibrate=False)
+sup = TrainSupervisor(ep=EP, runtime_factory=runtime, min_ep=1)
+# lose the last device once the run is warm (past the step-3 checkpoint);
+# the device "rejoins" as soon as the shrink lands, so the run also pays
+# the grow-back on the way out
+faults.inject("mesh.device_lost", only=EP - 1, after=4, times=None)
+
+
+def clear_when_shrunk(i, state, metrics):
+    if sup.state == SHRUNK:
+        faults.clear("mesh.device_lost")
+
+t0 = time.perf_counter()
+with warnings.catch_warnings():
+    warnings.simplefilter("ignore")
+    _, hist = train_loop(cfg, runtime(EP), tc, batches, scheduler=sched,
+                         num_steps=STEPS, log_every=0, supervisor=sup,
+                         callback=clear_when_shrunk)
+wall_s = time.perf_counter() - t0
+assert sup.recoveries, "device loss never fired"
+r = sup.recoveries[0]
+res = {
+  "ep": EP,
+  "steps": STEPS,
+  "device_losses": hist[-1]["device_losses"],
+  "elastic_shrinks": hist[-1]["elastic_shrinks"],
+  "grow_backs": hist[-1]["grow_backs"],
+  "recovered_to_full_ep": bool(sup.state == RECOVERED and sup.ep == EP),
+  "ep_from": r["ep_from"],
+  "ep_to": r["ep_to"],
+  "steps_lost_to_rollback": r["steps_lost"],
+  "mttr_s": round(float(r["mttr_s"]), 3),
+  "run_wall_s": round(wall_s, 3),
+}
+print("RESULT " + json.dumps(res))
+"""
+
+
 def run(ep=8, t=4096, e=16) -> dict:
     env = dict(os.environ)
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={ep}"
@@ -95,13 +179,34 @@ def run(ep=8, t=4096, e=16) -> dict:
     return json.loads(line[len("RESULT "):])
 
 
+def run_mttr(ep=4, steps=8) -> dict:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={ep}"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["MTTR_EP"], env["MTTR_STEPS"] = str(ep), str(steps)
+    r = subprocess.run([sys.executable, "-c", MTTR_SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=560)
+    if r.returncode != 0:
+        raise RuntimeError(r.stderr[-2000:])
+    line = [l for l in r.stdout.splitlines() if l.startswith("RESULT ")][-1]
+    return json.loads(line[len("RESULT "):])
+
+
 def smoke():
     """CI: tiny mesh (4 devices, 512 tokens) — asserts the straggler
     DIRECTION (skewed EP load exceeds uniform; FSSDP recovers some of
-    it), no magnitude claims, no JSON."""
+    it) and that the in-run supervisor actually recovers from a device
+    loss (shrink happened, steps were replayed, full EP restored).  No
+    magnitude claims, no JSON."""
     res = run(ep=4, t=512, e=8)
     assert res["ep_skew_max_device_load"] > res["ep_uniform_max_device_load"]
     assert res["fssdp_speedup_over_ep_skew"] > 1.0, res
+    mt = run_mttr(ep=4, steps=8)
+    assert mt["elastic_shrinks"] == 1 and mt["grow_backs"] == 1, mt
+    assert mt["recovered_to_full_ep"], mt
+    assert mt["steps_lost_to_rollback"] >= 1 and mt["mttr_s"] > 0, mt
+    print(f"mttr_s={mt['mttr_s']} "
+          f"steps_lost={mt['steps_lost_to_rollback']}")
     print("SMOKE PASSED")
 
 
@@ -109,8 +214,20 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="tiny mesh, direction checks only, no JSON")
+    ap.add_argument("--out", default="BENCH_straggler.json",
+                    help="result JSON path (full run only)")
     args = ap.parse_args()
     if args.smoke:
         smoke()
         sys.exit(0)
-    print(json.dumps(run(), indent=2))
+    res = {"backend": "cpu", "capacity": run(), "mttr": run_mttr(),
+           "note": "capacity: zero-drop dispatch capacity ratio is the "
+                   "straggler factor. mttr: in-process shrink cost — "
+                   "detect -> shrunk-and-training wall seconds plus "
+                   "steps replayed from the rollback; a restart-based "
+                   "recovery pays process relaunch + cold compile on "
+                   "top. Host-only container: absolute seconds are an "
+                   "upper bound."}
+    print(json.dumps(res, indent=2))
+    with open(args.out, "w") as f:
+        json.dump(res, f, indent=2)

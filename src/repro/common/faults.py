@@ -100,6 +100,50 @@ out:
     ``exc=...``.  Guarantee: a failed elastic restore degrades to fresh
     init with a warning — resume never crashes on a layout change.
 
+Elastic-trainer sites (train.supervisor — the in-run recovery layer).
+The supervisor converts every armed failure below into a typed
+``DeviceLossError`` (or a transient degradation) instead of a hang or a
+crash; ``train_loop`` then shrinks the mesh in-process and rolls back to
+the newest intact checkpoint (tests/test_elastic_recovery.py):
+
+``mesh.device_lost``
+    Fired by ``TrainSupervisor.probe`` once per step per live device,
+    payload = device index on the EP axis.  Arm with ``only=<dev>`` (and
+    ``exc=...`` or nothing — any raise counts) for a hard device loss.
+    Guarantee: the raise is converted to ``DeviceLossError(lost={dev})``;
+    ``train_loop`` shrinks to the surviving ep', re-lays-out state from
+    the newest intact checkpoint (``elastic_row_remap``), and continues
+    training in-process with trajectory parity vs a kill-and-restart
+    elastic restore.  While the site stays armed the device is
+    considered DOWN; ``clear()`` makes it eligible to rejoin — the loop
+    grows back to the full ep at the next checkpoint boundary.
+
+``host.heartbeat_miss``
+    Fired once per step per live device, payload = device index.  Arm
+    with ``mutate=faults.drop_heartbeat`` (returns None = missed beat)
+    and ``only=<dev>``.  Guarantee: a transient miss (times <
+    ``heartbeat_misses``) only degrades the supervisor state
+    (RUNNING→DEGRADED→RUNNING); ``heartbeat_misses`` CONSECUTIVE misses
+    declare the device lost (same recovery as ``mesh.device_lost``).
+
+``collective.timeout``
+    Fired once per step, payload = ``(step, dt_s)``.  Arm with
+    ``exc=...`` to simulate a wedged collective (the real watchdog —
+    ``step_timeout_s`` — takes the same path when a step overruns).
+    Guarantee: converted to ``DeviceLossError`` blaming the slowest
+    device by step-time EMA — a hang becomes a typed, recoverable loss.
+
+``mesh.slow_device``
+    Fired once per step with the per-device step-time vector (the
+    straggler probe's input; in simulation all devices run in lockstep,
+    so the unmutated vector is uniform).  Arm with
+    ``mutate=faults.slow_device(dev, factor)`` to inflate one device's
+    time.  Guarantee: the supervisor's EMA de-weights the straggler
+    after ``calibration_steps`` samples, the next reshard assigns it
+    proportionally fewer expert slots (``schedule.heterogeneous_sharding``
+    with ``device_weights``), and the cost model accounts for the
+    de-weighting — degradation, not death.
+
 Continuous-batching sites (serve.scheduler — the paged-KV request
 scheduler).  The chaos soak in tests/test_serve_batching.py arms all
 three in random order and asserts the scheduler invariant: the decode
@@ -134,18 +178,17 @@ of DONE / REJECTED / TIMED_OUT:
 Usage::
 
     from repro.common import faults
-    faults.inject("train.nan_grads", mutate=faults.poison_grads,
-                  after=3, times=1)
-    try:
+    with faults.injected("train.nan_grads", mutate=faults.poison_grads,
+                         after=3, times=1):
         ...  # run the loop
-    finally:
-        faults.clear()
 
-``clear()`` (or the ``times`` budget running out on every site)
-disarms the registry and restores the zero-overhead path.
+``clear()`` (or the ``times`` budget running out on every site, or the
+:func:`injected` context exiting) disarms the registry and restores the
+zero-overhead path.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import threading
 from typing import Any, Callable, Dict, Optional
@@ -209,6 +252,20 @@ def inject(site: str, *, times: Optional[int] = 1, after: int = 0,
         _SITES[site] = _Fault(site, times=times, after=after, exc=exc,
                               hang_s=hang_s, mutate=mutate, only=only)
         _ARMED = True
+
+
+@contextlib.contextmanager
+def injected(site: str, **kw):
+    """Context-manager form of :func:`inject`: arms ``site`` on entry and
+    disarms exactly that site on exit (releasing any in-flight hang), so
+    chaos tests stop hand-rolling try/finally ``clear()`` blocks.  Takes
+    the same keyword arguments as ``inject``.  Other armed sites are left
+    alone — contexts nest."""
+    inject(site, **kw)
+    try:
+        yield
+    finally:
+        clear(site)
 
 
 def clear(site: Optional[str] = None) -> None:
@@ -279,6 +336,23 @@ def poison_grads(batch: dict) -> dict:
     batch = dict(batch)
     batch[GRAD_SCALE_KEY] = np.float32(np.nan)
     return batch
+
+
+def drop_heartbeat(device: Any) -> None:
+    """``host.heartbeat_miss`` mutator: swallow the beat — the supervisor
+    sees ``None`` and counts a consecutive miss for ``device``."""
+    return None
+
+
+def slow_device(device: int, factor: float = 4.0) -> Callable:
+    """``mesh.slow_device`` mutator factory: inflate one device's entry
+    of the per-device step-time vector by ``factor`` (a persistent
+    straggler when armed with ``times=None``)."""
+    def mut(times):
+        t = np.array(times, np.float64, copy=True)
+        t[device] *= factor
+        return t
+    return mut
 
 
 def truncate_file(path: str, keep_frac: float = 0.5) -> str:

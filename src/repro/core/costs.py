@@ -62,16 +62,28 @@ def device_loads_for(plan: MaterializationPlan, loads: np.ndarray,
 
 def placement_latency(ctx: CostContext, plan: MaterializationPlan,
                       loads: np.ndarray, layer: int = 0,
-                      extra_on_path: bool = False) -> float:
+                      extra_on_path: bool = False,
+                      device_weights: Optional[np.ndarray] = None) -> float:
     """Modeled per-layer latency (seconds) for `plan` under `loads`.
 
     extra_on_path: charge the spAG fully on the critical path (the
-    calibration case — a re-plan issued after the gate cannot overlap)."""
+    calibration case — a re-plan issued after the gate cannot overlap).
+    device_weights: per-device speed weights (1.0 = full speed) — a
+    device at weight w takes 1/w as long per token, so the compute
+    critical path is the max of the speed-scaled device loads.  This is
+    what makes the resharding policy's accept decision consistent with
+    the straggler de-weighting in heterogeneous_sharding."""
     cfg = ctx.cfg
     dev = device_loads_for(plan, loads, layer, ctx.tokens_per_step,
                            cfg.moe.experts_per_token)
-    comp = dev.max() * ctx.expert_flops_per_token * 3 / ctx.hw.peak_flops_bf16
+    dev_t = dev                         # compute-time-equivalent loads
+    if device_weights is not None:
+        w = np.asarray(device_weights, np.float64).reshape(-1)
+        dev_t = dev * (w.max() / w)     # slow device: more time per token
+    comp = dev_t.max() * ctx.expert_flops_per_token * 3 \
+        / ctx.hw.peak_flops_bf16
     # dispatch: worst inbound link ~ max device load crossing links
+    # (links don't slow down with the device — unweighted)
     a2a = 4 * dev.max() * cfg.d_model * 2 / ctx.hw.ici_bw
     # materialization volume (per device, ring = exact λS)
     m_extra = int((plan.extra_experts[layer] >= 0).sum()) \
@@ -86,10 +98,13 @@ def placement_latency(ctx: CostContext, plan: MaterializationPlan,
 
 def calibration_gain(ctx: CostContext, current: MaterializationPlan,
                      candidate: MaterializationPlan, real_loads: np.ndarray,
-                     layer: int = 0) -> float:
+                     layer: int = 0,
+                     device_weights: Optional[np.ndarray] = None) -> float:
     """Positive when switching to `candidate` (paying its spAG on the
     critical path, §4.2) still wins under the REAL loads."""
-    t_cur = placement_latency(ctx, current, real_loads, layer)
+    t_cur = placement_latency(ctx, current, real_loads, layer,
+                              device_weights=device_weights)
     t_cand = placement_latency(ctx, candidate, real_loads, layer,
-                               extra_on_path=True)
+                               extra_on_path=True,
+                               device_weights=device_weights)
     return t_cur - t_cand

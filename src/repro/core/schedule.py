@@ -421,7 +421,9 @@ def calibrate(plan: MaterializationPlan, real_loads: np.ndarray,
 def heterogeneous_sharding(loads: np.ndarray, num_devices: int, t: int,
                            *, node_size: int = 0,
                            k_local: Optional[int] = None,
-                           vectorized: bool = True) -> ShardingPlan:
+                           vectorized: bool = True,
+                           device_weights: Optional[Sequence[float]] = None,
+                           ) -> ShardingPlan:
     """Paper Algorithm 2.  loads: (L, E).  Returns a ShardingPlan where the
     number of owned experts per (layer, device) may vary (0..k_local) while
     total buffer rows per device stay exactly balanced.
@@ -434,8 +436,48 @@ def heterogeneous_sharding(loads: np.ndarray, num_devices: int, t: int,
     to the Python-sort reference, which survives as the parity baseline
     for benchmarks/planner_microbench.py); the ordering loops around it
     (hot marking, cold ordering, buffer-row assignment) are fully
-    vectorized."""
+    vectorized.
+
+    device_weights: optional per-device SPEED weights (straggler
+    de-weighting — the trainer's step-time probe).  A device of weight w
+    accrues ``load * w_max / w`` effective load per placement, so the
+    greedy charges a half-speed device double for every expert it takes:
+    it receives proportionally fewer slots wherever the memory-balance
+    cap leaves freedom, and where rows are exactly balanced it receives
+    the COLDEST experts instead (fewer expected tokens either way).  The
+    static memory contract is untouched — ``rows_per_device`` and
+    ``k_local`` never scale, so compiled shapes and the per-device buffer
+    stay identical.  Uniform weights multiply every load by exactly 1.0
+    (w/w is exact in IEEE), making the output byte-identical to the
+    unweighted call — locked in by tests/test_placement.py.  The weights
+    are ADVISORY, the memory contract is not: on a tight (zero-slack)
+    layout a skewed placement order can dead-end against the row or
+    k_local caps, in which case the greedy silently retries unweighted —
+    a straggler may keep its slots, but a reshard can never fail because
+    a device slowed down."""
     loads = np.asarray(loads, np.float64)
+    M = num_devices
+    inv_w = None                        # effective-load multiplier per dev
+    if device_weights is not None:
+        w = np.asarray(device_weights, np.float64).reshape(-1)
+        if w.shape != (M,):
+            raise ValueError(f"device_weights shape {w.shape} != ({M},)")
+        if not np.all(w > 0) or not np.all(np.isfinite(w)):
+            raise ValueError("device_weights must be positive and finite")
+        if np.any(w != w.max()):        # uniform -> stay on the exact path
+            inv_w = (w.max() / w).tolist()
+    if inv_w is not None:
+        try:
+            return _hetero_greedy(loads, M, t, node_size, k_local,
+                                  vectorized, inv_w)
+        except RuntimeError:
+            pass                        # infeasible under this order
+    return _hetero_greedy(loads, M, t, node_size, k_local, vectorized, None)
+
+
+def _hetero_greedy(loads: np.ndarray, num_devices: int, t: int,
+                   node_size: int, k_local: Optional[int],
+                   vectorized: bool, inv_w) -> ShardingPlan:
     L, E = loads.shape
     M = num_devices
     rows_per_device = -(-(L * E) // M)
@@ -579,13 +621,14 @@ def heterogeneous_sharding(loads: np.ndarray, num_devices: int, t: int,
         d = place_fast(l)
         owner_dev[l, e] = d
         plc_rows[l][d] += 1
-        placed_fast(l, d, loads_rows[l][e])
+        w = loads_rows[l][e]
+        placed_fast(l, d, w * inv_w[d] if inv_w is not None else w)
 
     def take_loop(l, e):
         d = place_loop(l)
         owner_dev[l, e] = d
         slots_free[d] -= 1
-        dev_load[d] += loads[l, e]
+        dev_load[d] += loads[l, e] * (inv_w[d] if inv_w is not None else 1.0)
         per_layer_count[l, d] += 1
 
     take = take_fast if vectorized else take_loop
@@ -629,6 +672,10 @@ class ReshardingPolicy:
     interval: int = 100
     t: int = 4
     node_size: int = 0
+    # Per-device speed weights (straggler de-weighting) — refreshed by the
+    # scheduler from the trainer's step-time probe before each trigger;
+    # None means every device runs at full speed.
+    device_weights: Optional[np.ndarray] = None
 
     def maybe_reshard(self, step: int, current: ShardingPlan,
                       predictor: LoadPredictor) -> Tuple[ShardingPlan, bool]:
@@ -637,6 +684,7 @@ class ReshardingPolicy:
         new = heterogeneous_sharding(predictor.predict(),
                                      current.num_devices, self.t,
                                      node_size=self.node_size,
-                                     k_local=current.k_local)
+                                     k_local=current.k_local,
+                                     device_weights=self.device_weights)
         changed = not np.array_equal(new.owner_dev, current.owner_dev)
         return (new, True) if changed else (current, False)

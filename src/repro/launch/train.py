@@ -45,6 +45,18 @@ def main():
     ap.add_argument("--max-bad-steps", type=int, default=3,
                     help="consecutive skipped steps before abort with "
                          "rollback to the last intact checkpoint")
+    ap.add_argument("--elastic", action="store_true",
+                    help="attach the in-run elastic recovery supervisor: "
+                         "device loss shrinks the mesh in-process (roll "
+                         "back + replay), cleared faults grow it back, "
+                         "stragglers are de-weighted at reshard time "
+                         "(requires --mesh-data and --checkpoint-dir)")
+    ap.add_argument("--min-ep", type=int, default=1,
+                    help="abort instead of shrinking below this EP size")
+    ap.add_argument("--step-timeout", type=float, default=0.0,
+                    help="wall-clock watchdog: a step slower than this "
+                         "(seconds) is treated as a wedged collective "
+                         "(0 = disabled; only with --elastic)")
     ap.add_argument("--data", default="synthetic",
                     choices=["synthetic", "bytes"])
     ap.add_argument("--skew", type=float, default=0.0)
@@ -93,11 +105,31 @@ def main():
             cfg, ep=ep, impl=args.impl,
             resharding=ReshardingPolicy(interval=args.resharding_interval))
 
+    supervisor = None
+    if args.elastic:
+        if not args.checkpoint_dir:
+            ap.error("--elastic needs --checkpoint-dir (the shrink path "
+                     "rolls back to the newest intact checkpoint)")
+        from repro.train.supervisor import TrainSupervisor, surviving_mesh
+        dp = max(args.mesh_data, 1)
+
+        def runtime_factory(ep_new):
+            if mesh is None:
+                return rt               # mesh-less run: nothing to shrink
+            return inp.make_runtime(cfg, surviving_mesh(dp, ep_new),
+                                    impl=args.impl)
+
+        supervisor = TrainSupervisor(ep=ep,
+                                     runtime_factory=runtime_factory,
+                                     min_ep=args.min_ep,
+                                     step_timeout_s=args.step_timeout)
+
     # periodic checkpointing + auto-resume now live INSIDE train_loop
     # (crash-safe: atomic renames, per-array checksums, keep-last GC,
     # resume from the newest intact step — see repro.train.trainer)
     state, history = train_loop(cfg, rt, tc, stream, scheduler=scheduler,
-                                num_steps=args.steps)
+                                num_steps=args.steps,
+                                supervisor=supervisor)
     if args.checkpoint_dir:
         from repro.train.trainer import save_train_state
         save_train_state(tc, int(state.step), state, scheduler)

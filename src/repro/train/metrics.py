@@ -46,6 +46,23 @@ class RobustnessCounters:
                     + AdamW moments) from a checkpoint saved under a
                     different mesh shape (mesh-shape-elastic restore).
 
+    Elastic-recovery counters (``train.supervisor.TrainSupervisor``
+    riding inside ``train_loop`` — device failure is a typed, in-process
+    event, never a dead run):
+
+    device_losses:  devices declared lost by the supervisor (an armed
+                    ``mesh.device_lost`` / ``collective.timeout`` raise,
+                    or ``heartbeat_misses`` consecutive missed beats).
+    elastic_shrinks: in-process mesh shrinks — state rolled back from
+                    the newest intact checkpoint and re-laid-out onto
+                    the surviving ep' without a process restart.
+    grow_backs:     re-expansions to the original ep at a checkpoint
+                    boundary after the lost device rejoined (inverse
+                    row remap — layout restored bit-exactly).
+    stragglers_deweighted: devices de-weighted by the step-time EMA
+                    probe — the next reshard assigns them proportionally
+                    fewer expert slots instead of declaring them dead.
+
     Serving counters (``serve.scheduler.RequestScheduler`` — overload is
     a typed per-request outcome, never an exception on the decode path):
 
@@ -68,6 +85,10 @@ class RobustnessCounters:
     replica_rejoins: int = 0
     dedup_hits: int = 0
     elastic_restores: int = 0
+    device_losses: int = 0
+    elastic_shrinks: int = 0
+    grow_backs: int = 0
+    stragglers_deweighted: int = 0
     requests_rejected: int = 0
     requests_preempted: int = 0
     requests_timed_out: int = 0

@@ -11,6 +11,32 @@ Per iteration (paper Fig. 5):
   5. every ``resharding.interval`` steps Algorithm 2 re-shards the unified
      chunk buffer (cross-layer heterogeneous sharding) — the only data
      movement on the critical path, amortized (paper §4.3).
+
+In-run elastic recovery (``repro.train.supervisor``): with a
+``TrainSupervisor`` attached, device failure is a typed in-process event,
+not a dead run.  The supervisor's per-step probe runs the heartbeat /
+watchdog / straggler checks and drives this state machine::
+
+    RUNNING --(heartbeat miss / straggler seen)--> DEGRADED
+    DEGRADED --(beats return, stragglers clear)--> RUNNING
+    RUNNING|DEGRADED --(loss declared)-----------> DeviceLossError
+        caught by train_loop: shrink mesh to the surviving ep',
+        roll back to the newest intact checkpoint
+        (elastic_row_remap), rebuild the jitted step, replay the
+        rolled-back batches from the in-memory replay buffer ----> SHRUNK
+    SHRUNK --(fault cleared; next checkpoint boundary:
+              grow back to the full ep via the inverse remap)---> RECOVERED
+    RECOVERED --(next loss / straggler)----------> ... (cycle)
+
+The shrink path reuses ``resume_train_state``'s mesh-shape-elastic
+restore verbatim, so the continued trajectory is the SAME trajectory a
+kill-and-restart elastic restore would produce (parity asserted in
+tests/test_elastic_recovery.py).  A persistently slow device is
+DE-WEIGHTED instead of declared dead: the supervisor's step-time EMA
+publishes per-device speed weights that flow into
+``schedule.heterogeneous_sharding(device_weights=)`` at the next reshard
+(and into the calibration cost model), shrinking the straggler's expert
+slot share proportionally.
 """
 from __future__ import annotations
 
@@ -20,6 +46,7 @@ import queue
 import threading
 import time
 import warnings
+from collections import deque
 from concurrent.futures import Future
 from concurrent.futures import TimeoutError as _FutTimeout
 from typing import Any, Callable, Dict, Iterable, Optional
@@ -39,6 +66,7 @@ from repro.core.schedule import (LoadPredictor, ReshardingPolicy,
                                  sparse_materialization)
 from repro.train import metrics as metrics_lib
 from repro.train import step as step_lib
+from repro.train.supervisor import DeviceLossError, TrainSupervisor
 
 
 class TrainAbortError(RuntimeError):
@@ -55,10 +83,11 @@ class TrainAbortError(RuntimeError):
         self.step = step
 
 
-def placement_latency_safe(ctx, plan, loads, layer):
+def placement_latency_safe(ctx, plan, loads, layer, device_weights=None):
     from repro.core.costs import placement_latency
     try:
-        return placement_latency(ctx, plan, loads, layer)
+        return placement_latency(ctx, plan, loads, layer,
+                                 device_weights=device_weights)
     except Exception:
         return 0.0
 
@@ -163,6 +192,10 @@ class HecateScheduler:
         self._prefetched_tables = None
         self.calibration_events = 0
         self.plan_ahead_hits = 0
+        # per-device speed weights from the supervisor's straggler probe
+        # (None = all devices at full speed); refreshed by train_loop
+        # each step, consumed at reshard and calibration time
+        self.device_weights: Optional[np.ndarray] = None
         # degraded-mode accounting: background jobs that raised or hung
         # and were answered by the synchronous plan path instead
         self.plan_fallbacks = 0
@@ -321,9 +354,9 @@ class HecateScheduler:
                          real_loads.max(1) / np.maximum(means, 1e-12), 0.0)
         layer = int(np.argmax(ratio))
         base = placement_latency_safe(ctx, self._last_plan, real_loads,
-                                      layer)
+                                      layer, self.device_weights)
         gain = calibration_gain(ctx, self._last_plan, cand, real_loads,
-                                layer)
+                                layer, device_weights=self.device_weights)
         if base > 0 and gain / base > self.calibration_margin:
             self._calibrated = cand
             self.calibration_events += 1
@@ -332,6 +365,14 @@ class HecateScheduler:
         """Returns perm (np.ndarray) to apply to buffer rows, or None."""
         if self.resharding is None or self.impl in ("ep", "dense"):
             return None
+        # hand the straggler weights to the policy (plain attribute set —
+        # harmless on duck-typed test policies); drop weights whose length
+        # no longer matches the mesh (stale across an elastic shrink)
+        w = self.device_weights
+        if w is not None and np.asarray(w).reshape(-1).shape[0] \
+                != self.sharding.num_devices:
+            w = None
+        self.resharding.device_weights = w
         new, changed = self.resharding.maybe_reshard(
             step, self.sharding, self.predictor)
         if not changed:
@@ -555,7 +596,8 @@ def train_loop(cfg: ModelConfig, rt, tc: TrainConfig,
                log_every: int = 10,
                callback: Optional[Callable] = None,
                metric_logger=None,
-               publish_engine=None, publish_every: int = 0):
+               publish_engine=None, publish_every: int = 0,
+               supervisor: Optional[TrainSupervisor] = None):
     """Single-host training driver (used by examples + e2e tests).
 
     Planning runs OFF the critical path: the jitted step is dispatched
@@ -612,6 +654,24 @@ def train_loop(cfg: ModelConfig, rt, tc: TrainConfig,
       publication is counted (``publish_drops``), a closed engine stops
       further publications, and the engine itself drops failed slot
       builds at its boundary without ever raising on the decode path.
+    * **In-run elastic recovery** (``supervisor``, a
+      ``repro.train.supervisor.TrainSupervisor``): the supervisor's probe
+      runs after every step readback; on ``DeviceLossError`` the loop
+      shrinks IN-PROCESS to the surviving ep' — new runtime from
+      ``supervisor.runtime_factory``, state rolled back through the same
+      ``resume_train_state`` mesh-shape-elastic path a kill-and-restart
+      would take (trajectory parity by construction), jitted step
+      rebuilt, and the rolled-back batches replayed from an in-memory
+      replay buffer so the data order matches an uninterrupted run
+      (``device_losses`` / ``elastic_shrinks``).  When the lost device
+      rejoins (its fault site cleared), the loop GROWS BACK to the full
+      ep at the next checkpoint boundary via the inverse row remap
+      (``grow_backs``).  Publication versions are guarded monotone across
+      rollbacks, so a live engine/bus never sees its version regress.
+      The supervisor's straggler weights flow into the scheduler each
+      step (``stragglers_deweighted``).  A loss below ``min_ep`` — or
+      without a checkpoint to roll back from — aborts with
+      :class:`TrainAbortError`.
     """
     num_steps = num_steps or tc.total_steps
     counters = metrics_lib.RobustnessCounters()
@@ -649,15 +709,29 @@ def train_loop(cfg: ModelConfig, rt, tc: TrainConfig,
     _FLEET = ("replica_evictions", "replica_rejoins", "dedup_hits")
     fleet0 = {k: getattr(publish_engine, k, 0) or 0 for k in _FLEET}
     plan_fb0 = scheduler.plan_fallbacks if scheduler is not None else 0
+    sup_dw0 = supervisor.deweight_events if supervisor is not None else 0
+    # elastic recovery: keep the raw batches consumed since (a bit before)
+    # the last checkpoint so a rollback can REPLAY them in order instead
+    # of restarting the stream; `pending` holds batches queued for replay
+    replay = deque(maxlen=max(2 * (tc.checkpoint_every or 1), 8)) \
+        if supervisor is not None else None
+    pending = deque()
+    last_pub_version = 0            # monotone guard across rollbacks
     try:
-        for i in range(start, num_steps):
+        i = start
+        while i < num_steps:
             gstep = step_base + (i - start) + 1     # global step AFTER i
-            batch = {k: jnp.asarray(v) for k, v in next(it).items()}
+            raw = pending.popleft() if pending else next(it)
+            if replay is not None:
+                replay.append((i, raw))
+            batch = {k: jnp.asarray(v) for k, v in raw.items()}
             # chaos site: tests arm this with faults.poison_grads to make
             # THIS step's gradients NaN (see repro.common.faults)
             batch = faults.fire("train.nan_grads", batch)
             pa = None
             if scheduler is not None and cfg.moe.enabled:
+                if supervisor is not None:
+                    scheduler.device_weights = supervisor.device_weights()
                 perm = scheduler.maybe_reshard(i)
                 if perm is not None:
                     state = apply_reshard(state, perm)
@@ -667,7 +741,11 @@ def train_loop(cfg: ModelConfig, rt, tc: TrainConfig,
             # async dispatch: the call returns with the step in flight
             state, metrics = train_step_fn(state, batch, pa)
             if (publish_engine is not None and publish_every
-                    and (i + 1) % publish_every == 0):
+                    and (i + 1) % publish_every == 0
+                    # after an elastic rollback the replayed steps revisit
+                    # old gsteps — never hand the engine a version it has
+                    # already seen (its version counter must not regress)
+                    and gstep > last_pub_version):
                 # training-while-serving: stage the updated params into
                 # the live engine, versioned by step.  The updated arrays
                 # are still in flight — the engine's background build
@@ -687,6 +765,7 @@ def train_loop(cfg: ModelConfig, rt, tc: TrainConfig,
                     else:
                         publish_engine.publish_params(
                             state.params, version=gstep)
+                    last_pub_version = gstep
                 except Exception as e:
                     loop_pub_failures += 1
                     if not publish_warned:
@@ -703,6 +782,67 @@ def train_loop(cfg: ModelConfig, rt, tc: TrainConfig,
                 scheduler.plan_ahead()
             metrics = jax.tree.map(np.asarray, metrics)  # blocks on step
             dt = time.perf_counter() - t0
+            if supervisor is not None:
+                try:
+                    supervisor.probe(i, dt)
+                except DeviceLossError as e:
+                    counters.device_losses += len(e.lost)
+                    new_ep = supervisor.ep - len(e.lost)
+                    if new_ep < max(supervisor.min_ep, 1) \
+                            or not tc.checkpoint_dir:
+                        reason = (f"surviving ep={new_ep} would fall "
+                                  f"below min_ep={supervisor.min_ep}"
+                                  if tc.checkpoint_dir else
+                                  "no checkpoint_dir to roll back from")
+                        raise TrainAbortError(
+                            f"unrecoverable device loss at global step "
+                            f"{gstep} ({e}): {reason}",
+                            state=state, history=history, step=gstep)
+                    warnings.warn(
+                        f"train_loop: {e} at global step {gstep}; "
+                        f"shrinking in-process to ep={new_ep} and rolling "
+                        f"back to the newest intact checkpoint",
+                        RuntimeWarning)
+                    rt_new = supervisor.runtime_factory(new_ep)
+                    if scheduler is not None:
+                        scheduler.ep = new_ep
+                    rolled, rstep = resume_train_state(
+                        cfg, tc, scheduler, new_ep, counters=counters)
+                    if rolled is None:
+                        raise TrainAbortError(
+                            f"device loss at global step {gstep} ({e}) "
+                            f"but no intact checkpoint to roll back to",
+                            state=state, history=history, step=gstep)
+                    i_resume = start + (rstep - step_base)
+                    if replay and replay[0][0] > i_resume:
+                        raise TrainAbortError(
+                            f"device loss at global step {gstep} ({e}): "
+                            f"replay buffer no longer covers rollback "
+                            f"target step {i_resume} (oldest retained: "
+                            f"{replay[0][0]})",
+                            state=rolled, history=history, step=gstep)
+                    # re-queue the rolled-back batches (oldest first),
+                    # ahead of anything already pending from a previous
+                    # rollback, and prune the replay window to match
+                    tail = [r for idx, r in replay if idx >= i_resume]
+                    kept = [(idx, r) for idx, r in replay
+                            if idx < i_resume]
+                    pending.extendleft(reversed(tail))
+                    replay.clear()
+                    replay.extend(kept)
+                    history[:] = [h for h in history
+                                  if h["step"] < i_resume]
+                    state = rolled
+                    rt = rt_new
+                    train_step_fn = jax.jit(
+                        step_lib.build_train_step(cfg, rt, tc))
+                    counters.elastic_shrinks += 1
+                    supervisor.on_shrunk(new_ep,
+                                         steps_lost=i - i_resume + 1)
+                    bad_streak = 0
+                    pending_replan = True
+                    i = i_resume
+                    continue
             if scheduler is not None and "expert_counts" in metrics:
                 scheduler.observe(metrics["expert_counts"])
             # ---- step-health skip policy (rides the readback above) ----
@@ -715,6 +855,9 @@ def train_loop(cfg: ModelConfig, rt, tc: TrainConfig,
             if scheduler is not None:
                 counters.plan_fallbacks = (scheduler.plan_fallbacks
                                            - plan_fb0)
+            if supervisor is not None:
+                counters.stragglers_deweighted = (
+                    supervisor.deweight_events - sup_dw0)
             if publish_engine is not None:
                 eng_drops = (getattr(publish_engine, "publish_drops", 0)
                              or 0) - eng_drops0
@@ -760,9 +903,51 @@ def train_loop(cfg: ModelConfig, rt, tc: TrainConfig,
             if (tc.checkpoint_dir and tc.checkpoint_every
                     and step_ok and gstep % tc.checkpoint_every == 0):
                 save_train_state(tc, gstep, state, scheduler)
+                if supervisor is not None and supervisor.can_grow_back():
+                    # the lost device rejoined (its fault site cleared):
+                    # grow back to the full ep at this checkpoint
+                    # boundary — restore the JUST-SAVED step through the
+                    # inverse elastic remap, so the row layout round-trips
+                    # bit-exactly (the elastic_row_remap law) and no data
+                    # or history rewinds.  A failed grow-back stays SHRUNK.
+                    full_ep = supervisor.full_ep
+                    shrunk_ep = supervisor.ep
+                    try:
+                        rt_new = supervisor.runtime_factory(full_ep)
+                        if scheduler is not None:
+                            scheduler.ep = full_ep
+                        regrown, rstep = resume_train_state(
+                            cfg, tc, scheduler, full_ep, counters=counters)
+                        if regrown is None or rstep != gstep:
+                            raise RuntimeError(
+                                f"grow-back restore yielded step {rstep}, "
+                                f"expected {gstep}")
+                        state = regrown
+                        rt = rt_new
+                        train_step_fn = jax.jit(
+                            step_lib.build_train_step(cfg, rt, tc))
+                        counters.grow_backs += 1
+                        supervisor.on_grow_back()
+                        pending_replan = True
+                        warnings.warn(
+                            f"train_loop: grew back to ep={full_ep} at "
+                            f"global step {gstep}", RuntimeWarning)
+                    except Exception as ge:
+                        if scheduler is not None:
+                            scheduler.ep = shrunk_ep
+                            # a partial restore may have rehydrated the
+                            # scheduler for the full mesh — re-restore at
+                            # the ep we are actually still running
+                            resume_train_state(cfg, tc, scheduler,
+                                               shrunk_ep)
+                        warnings.warn(
+                            f"train_loop: grow-back to ep={full_ep} "
+                            f"failed ({ge!r}); staying on ep="
+                            f"{shrunk_ep}", RuntimeWarning)
             if log_every and i % log_every == 0:
                 print(f"step {i:5d}  loss {rec['loss']:.4f}  "
                       f"xent {rec['xent']:.4f}  {dt*1e3:.0f} ms")
+            i += 1
     finally:
         if scheduler is not None:
             # join the plan-ahead worker; the executor is re-created

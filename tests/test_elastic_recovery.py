@@ -1,0 +1,467 @@
+"""In-run elastic recovery: the TrainSupervisor + train_loop shrink /
+grow-back / straggler-de-weighting layer (repro.train.supervisor).
+
+1. Supervisor unit behaviour: heartbeat-miss streaks degrade then
+   declare a loss, ``collective.timeout`` and the wall-clock watchdog
+   convert to typed ``DeviceLossError``, the step-time EMA publishes
+   straggler weights, and the state machine walks
+   RUNNING→DEGRADED→SHRUNK→RECOVERED.
+2. In-process recovery on a dense (mesh-less) run: a device loss
+   mid-run rolls back to the newest intact checkpoint and REPLAYS the
+   rolled-back batches — the trajectory matches an uninterrupted run to
+   ≤ 1e-5 — then grows back at the next checkpoint boundary after the
+   fault clears.
+3. Straggler de-weighting end to end (host-side): supervisor weights →
+   scheduler → ReshardingPolicy → weighted heterogeneous_sharding; the
+   slow device's owned-slot share shrinks wherever the memory-balance
+   cap leaves freedom.
+4. Distributed (forced-host-device subprocess): arming
+   ``mesh.device_lost`` mid-run on a (dp=1, ep=4) mesh shrinks the mesh
+   IN-PROCESS to ep=3 with per-step trajectory parity ≤ 1e-5 vs a
+   kill-and-restart elastic restore onto ep=3, grows back to ep=4 at the
+   next checkpoint boundary (row layout round-trips bit-exactly), and a
+   live publish/decode engine never raises throughout; a slow-device run
+   shows the straggler's slot share shrinking after calibration.
+"""
+import warnings
+
+import numpy as np
+import pytest
+
+import repro.configs as C
+import repro.models.model as mdl
+from repro.common import faults
+from repro.common.config import TrainConfig
+from repro.core.schedule import ReshardingPolicy, heterogeneous_sharding
+from repro.data.pipeline import make_stream
+from repro.train.supervisor import (DEGRADED, RECOVERED, RUNNING, SHRUNK,
+                                    DeviceLossError, TrainSupervisor)
+from repro.train.trainer import TrainAbortError, train_loop
+
+
+@pytest.fixture(autouse=True)
+def _disarm_faults():
+    yield
+    faults.clear()
+
+
+def _sup(**kw):
+    kw.setdefault("ep", 4)
+    kw.setdefault("runtime_factory", lambda ep: None)
+    return TrainSupervisor(**kw)
+
+
+# ---------------------------------------------------------------------------
+# supervisor unit behaviour
+# ---------------------------------------------------------------------------
+def test_device_lost_fault_converts_to_typed_loss():
+    """An armed ``mesh.device_lost`` raise becomes DeviceLossError naming
+    the device; while armed the supervisor considers the device down."""
+    sup = _sup()
+    faults.inject("mesh.device_lost", only=2, times=None)
+    with pytest.raises(DeviceLossError) as ei:
+        sup.probe(0, 0.01)
+    assert ei.value.lost == (2,) and ei.value.site == "mesh.device_lost"
+    assert sup.lost == {2} and sup.state == DEGRADED
+    sup.on_shrunk(3, steps_lost=1)
+    assert sup.state == SHRUNK and sup.ep == 3
+    assert not sup.can_grow_back()          # device still down
+    faults.clear("mesh.device_lost")
+    assert sup.can_grow_back()
+    sup.on_grow_back()
+    assert sup.state == RECOVERED and sup.ep == 4 and not sup.lost
+
+
+def test_heartbeat_streak_degrades_then_declares_loss():
+    """Transient misses only degrade (RUNNING→DEGRADED→RUNNING); the
+    configured number of CONSECUTIVE misses declares the loss."""
+    sup = _sup(heartbeat_misses=3)
+    faults.inject("host.heartbeat_miss", only=1,
+                  mutate=faults.drop_heartbeat, times=2)
+    sup.probe(0, 0.01)
+    assert sup.state == DEGRADED            # 1 miss
+    sup.probe(1, 0.01)
+    assert sup.state == DEGRADED            # 2 misses (budget exhausted)
+    sup.probe(2, 0.01)                      # beat returns — streak resets
+    assert sup.state == RUNNING
+    faults.clear()
+    faults.inject("host.heartbeat_miss", only=1,
+                  mutate=faults.drop_heartbeat, times=None)
+    sup.probe(3, 0.01)
+    sup.probe(4, 0.01)
+    with pytest.raises(DeviceLossError) as ei:
+        sup.probe(5, 0.01)
+    assert ei.value.lost == (1,) and ei.value.site == "host.heartbeat_miss"
+
+
+def test_collective_timeout_and_watchdog_blame_slowest_device():
+    """Both the injected ``collective.timeout`` and the real wall-clock
+    watchdog convert to a loss of the slowest device by step-time EMA."""
+    sup = _sup(calibration_steps=2)
+    # seed the EMA with device 3 slow
+    faults.inject("mesh.slow_device", mutate=faults.slow_device(3, 8.0),
+                  times=None)
+    sup.probe(0, 0.01)
+    sup.probe(1, 0.01)
+    faults.clear()
+    faults.inject("collective.timeout", times=1)
+    with pytest.raises(DeviceLossError) as ei:
+        sup.probe(2, 0.01)
+    assert ei.value.lost == (3,) and ei.value.site == "collective.timeout"
+    # the REAL watchdog takes the same path — no fault armed
+    sup2 = _sup(step_timeout_s=0.5)
+    with pytest.raises(DeviceLossError) as ei:
+        sup2.probe(0, 2.0)
+    assert ei.value.site == "collective.timeout"
+    sup2.probe(1, 0.01)                     # a fast step does not trip it
+
+
+def test_straggler_ema_publishes_weights_and_counts_once():
+    """A persistently slow device is de-weighted (weight < 1, clamped at
+    the floor) after calibration; the event counts ONCE, the state shows
+    DEGRADED, and the weights clear when the device recovers."""
+    sup = _sup(calibration_steps=3, straggler_ratio=1.5, weight_floor=0.25)
+    faults.inject("mesh.slow_device", mutate=faults.slow_device(1, 6.0),
+                  times=None)
+    for s in range(4):
+        sup.probe(s, 0.01)
+    w = sup.device_weights()
+    assert w is not None and w.shape == (4,)
+    assert w[1] == pytest.approx(0.25) and (np.delete(w, 1) == 1.0).all()
+    assert sup.deweight_events == 1 and sup.state == DEGRADED
+    sup.probe(4, 0.01)
+    assert sup.deweight_events == 1         # same straggler, no re-count
+    faults.clear()
+    for s in range(5, 12):                  # EMA decays back to uniform
+        sup.probe(s, 0.01)
+    assert sup.device_weights() is None and sup.state == RUNNING
+
+
+# ---------------------------------------------------------------------------
+# weighted sharding consumed through the scheduler plumbing
+# ---------------------------------------------------------------------------
+def test_deweighted_device_loses_slot_share_through_policy():
+    """Supervisor weights reach heterogeneous_sharding through the
+    ReshardingPolicy field and shrink the straggler's owned-slot count
+    wherever the row cap leaves freedom (L*E=16 on M=3: capacity 18)."""
+    L, E, M = 2, 8, 3
+    loads = np.ones((L, E))
+    base = heterogeneous_sharding(loads, M, 2, k_local=6)
+    pol = ReshardingPolicy(interval=1, t=2)
+    pol.device_weights = np.array([1.0, 1.0, 0.25])
+
+    class _Pred:
+        def predict(self):
+            return loads
+
+    new, changed = pol.maybe_reshard(3, base, _Pred())
+    counts = [(new.owner_dev == d).sum() for d in range(M)]
+    base_counts = [(base.owner_dev == d).sum() for d in range(M)]
+    assert counts[2] < min(counts[0], counts[1])
+    assert counts[2] < base_counts[2]
+    assert sum(counts) == L * E
+    new.validate()                          # still memory-balanced
+    # weights of the wrong length (stale across a shrink) must hard-fail
+    with pytest.raises(ValueError):
+        heterogeneous_sharding(loads, M, 2,
+                               device_weights=np.ones(M + 1))
+
+
+# ---------------------------------------------------------------------------
+# in-process recovery on a dense (mesh-less) run
+# ---------------------------------------------------------------------------
+def _dense_cfg():
+    return C.get_smoke("smollm-360m")
+
+
+def _tc(d, **kw):
+    kw.setdefault("learning_rate", 3e-3)
+    kw.setdefault("warmup_steps", 2)
+    kw.setdefault("total_steps", 8)
+    kw.setdefault("checkpoint_every", 2)
+    return TrainConfig(checkpoint_dir=d, seed=0, **kw)
+
+
+def _stream(cfg):
+    return make_stream(cfg.vocab_size, 32, 2, kind="synthetic", seed=0)
+
+
+def test_in_process_shrink_replays_to_parity_then_grows_back(tmp_path):
+    """Device loss at step 5 rolls back to the gstep-4 checkpoint and
+    replays batches 4..5 from the in-memory buffer — per-step losses
+    match an uninterrupted run to ≤ 1e-5 — then the cleared fault grows
+    the run back at the next checkpoint boundary (RECOVERED, counters
+    surfaced in every history record)."""
+    cfg, rt = _dense_cfg(), mdl.Runtime()
+    _, h_ref = train_loop(cfg, rt, _tc(str(tmp_path / "a")), _stream(cfg),
+                          num_steps=8, log_every=0)
+    sup = TrainSupervisor(ep=2, runtime_factory=lambda ep: rt, min_ep=1)
+    faults.inject("mesh.device_lost", only=1, after=5, times=None)
+
+    def clear_when_shrunk(i, state, metrics):
+        if sup.state == SHRUNK:
+            faults.clear("mesh.device_lost")
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        s, h = train_loop(cfg, rt, _tc(str(tmp_path / "b")), _stream(cfg),
+                          num_steps=8, log_every=0, supervisor=sup,
+                          callback=clear_when_shrunk)
+    assert sup.state == RECOVERED and sup.ep == 2
+    last = h[-1]
+    assert last["device_losses"] == 1 and last["elastic_shrinks"] == 1
+    assert last["grow_backs"] == 1
+    assert int(s.step) == 8
+    ref = {r["step"]: r["loss"] for r in h_ref}
+    got = {r["step"]: r["loss"] for r in h}
+    assert set(ref) == set(got)             # replay restored every step
+    for k in ref:
+        assert abs(ref[k] - got[k]) <= 1e-5, (k, ref[k], got[k])
+    assert len(sup.recoveries) == 1
+    rec = sup.recoveries[0]
+    assert rec["steps_lost"] == 2 and rec["mttr_s"] > 0.0
+    assert rec["ep_from"] == 2 and rec["ep_to"] == 1
+
+
+def test_loss_without_checkpoint_dir_aborts_typed():
+    """No checkpoint to roll back from: the loss surfaces as a typed
+    TrainAbortError (with the loss site in the message), never a hang."""
+    cfg, rt = _dense_cfg(), mdl.Runtime()
+    sup = TrainSupervisor(ep=2, runtime_factory=lambda ep: rt)
+    faults.inject("mesh.device_lost", only=0, after=1, times=None)
+    with pytest.raises(TrainAbortError, match="no checkpoint_dir"):
+        train_loop(cfg, rt, TrainConfig(learning_rate=3e-3, warmup_steps=2,
+                                        total_steps=8, seed=0),
+                   _stream(cfg), num_steps=8, log_every=0, supervisor=sup)
+
+
+def test_loss_below_min_ep_aborts_typed(tmp_path):
+    """A loss that would shrink below min_ep aborts instead of limping
+    on an undersized mesh."""
+    cfg, rt = _dense_cfg(), mdl.Runtime()
+    sup = TrainSupervisor(ep=2, runtime_factory=lambda ep: rt, min_ep=2)
+    faults.inject("mesh.device_lost", only=1, after=3, times=None)
+    with pytest.raises(TrainAbortError, match="min_ep"):
+        train_loop(cfg, rt, _tc(str(tmp_path)), _stream(cfg),
+                   num_steps=8, log_every=0, supervisor=sup)
+
+
+# ---------------------------------------------------------------------------
+# distributed: in-process shrink parity vs kill-and-restart, grow-back,
+# live publish engine, straggler slot share
+# ---------------------------------------------------------------------------
+RECOVERY_SCRIPT = r"""
+import os, tempfile, warnings
+import numpy as np, jax, jax.numpy as jnp
+from repro.common import faults
+from repro.common.config import ModelConfig, MoEConfig, TrainConfig
+from repro.common.sharding import elastic_row_remap, remap_buffer_rows
+from repro.core import moe as moe_core
+from repro.core.placement import homogeneous_sharding
+from repro.core.schedule import sparse_materialization
+from repro.models import model as mdl
+from repro.serve.engine import Engine
+from repro.train.supervisor import (RECOVERED, SHRUNK, TrainSupervisor,
+                                    surviving_mesh)
+from repro.train.trainer import HecateScheduler, train_loop
+
+cfg = ModelConfig(
+    name="t", arch_type="moe", num_layers=2,
+    d_model=128, num_heads=4, num_kv_heads=4, head_dim=32,
+    d_ff=256, vocab_size=512,
+    moe=MoEConfig(num_experts=8, experts_per_token=2, d_ff=256,
+                  slots_per_device=2),
+    act="gelu", norm="ln", remat=False, dtype="float32")
+L = moe_core.num_moe_layers(cfg)
+E = cfg.moe.num_experts
+rng = np.random.default_rng(0)
+BATCHES = [{"tokens": rng.integers(0, 512, (4, 9)).astype(np.int32)}
+           for _ in range(8)]
+
+
+def tc(d):
+    return TrainConfig(learning_rate=1e-3, warmup_steps=2, total_steps=8,
+                       checkpoint_dir=d, checkpoint_every=2,
+                       keep_checkpoints=0, seed=0)
+
+
+def runtime(ep):
+    mesh = surviving_mesh(1, ep)
+    return mdl.Runtime(mesh=mesh, moe=moe_core.MoERuntime(
+        mesh=mesh, batch_axes=("data",), impl="ring", m=2, capacity=64,
+        use_pallas=False))
+
+
+def sched(ep):
+    return HecateScheduler(cfg, ep=ep, impl="ring", async_plan=False,
+                           calibrate=False)
+
+
+def pa_for(ep):
+    sh = homogeneous_sharding(L, E, ep)
+    return moe_core.plan_to_arrays(
+        sparse_materialization(sh, np.ones((L, E)), t=4, m=2, impl="ring"))
+
+
+def losses_of(hist):
+    for h in hist:
+        assert h.get("dropped_frac", 0.0) == 0.0   # parity needs zero drops
+    return {h["step"]: h["loss"] for h in hist}
+
+
+# ---- run A (reference): kill-and-restart + PR 7 elastic restore -------
+# 4 steps on ep=4 with checkpoints, "kill", restart a NEW scheduler and
+# runtime on the surviving ep=3, auto-resume (elastic restore), steps 4..7
+dA = os.path.join(tempfile.mkdtemp(), "ckA")
+sA1 = sched(4)
+_, hA1 = train_loop(cfg, runtime(4), tc(dA), iter(BATCHES),
+                    scheduler=sA1, num_steps=4, log_every=0)
+sA2 = sched(3)
+with warnings.catch_warnings():
+    warnings.simplefilter("ignore")
+    _, hA2 = train_loop(cfg, runtime(3), tc(dA), iter(BATCHES),
+                        scheduler=sA2, num_steps=8, log_every=0)
+ref = {**losses_of(hA1), **losses_of(hA2)}
+assert sorted(ref) == list(range(8)), sorted(ref)
+
+# ---- run B: IN-PROCESS shrink at step 4, grow back at gstep 6 ---------
+dB = os.path.join(tempfile.mkdtemp(), "ckB")
+sB = sched(4)
+sup = TrainSupervisor(ep=4, runtime_factory=runtime, min_ep=1)
+# a live engine on the FULL mesh keeps receiving publications throughout;
+# the ep=3 phase publishes a mismatched buffer — dropped at the engine
+# boundary, decode never raises
+pa4 = pa_for(4)
+rt4 = runtime(4)
+eng = Engine(cfg, rt4, mdl.init_params(cfg, jax.random.PRNGKey(0), ep=4),
+             max_len=32, pa=pa4, name="r0")
+prompts = np.asarray([[5, 7, 9], [1, 2, 3]], np.int32)
+eng.generate(prompts, steps=2)              # decode live before the chaos
+
+faults.inject("mesh.device_lost", only=3, after=4, times=None)
+
+def clear_when_shrunk(i, state, metrics):
+    if sup.state == SHRUNK:
+        faults.clear("mesh.device_lost")    # device rejoins
+
+with warnings.catch_warnings():
+    warnings.simplefilter("ignore")
+    stateB, hB = train_loop(cfg, rt4, tc(dB), iter(BATCHES),
+                            scheduler=sB, num_steps=8, log_every=0,
+                            supervisor=sup, callback=clear_when_shrunk,
+                            publish_engine=eng, publish_every=2)
+    eng.flush()
+
+got = losses_of(hB)
+assert sorted(got) == list(range(8)), sorted(got)
+last = hB[-1]
+assert last["device_losses"] == 1, last
+assert last["elastic_shrinks"] == 1, last
+assert last["grow_backs"] == 1, last
+assert sup.state == RECOVERED and sup.ep == 4
+assert sup.recoveries and sup.recoveries[0]["ep_to"] == 3
+
+# acceptance: in-process trajectory == kill-and-restart trajectory
+err = max(abs(ref[k] - got[k]) for k in range(8))
+assert err <= 1e-5, (err, ref, got)
+print(f"in-process shrink parity: max |dloss| = {err:.2e}")
+
+# grow-back restored the ep=4 row layout: the final buffer addresses all
+# L*E expert rows under the ep=4 homogeneous plan, and the shrink path's
+# remap round-trips bit-exactly at the EXACT plans used (ep=4 -> ep=3 ->
+# ep=4, the elastic_row_remap law)
+p4 = homogeneous_sharding(L, E, 4)
+p3 = homogeneous_sharding(L, E, 3)
+buf = np.asarray(stateB.params["moe_buffer"])
+assert buf.shape[0] == moe_core.buffer_rows(cfg, 4)
+s43, v43 = elastic_row_remap(p4, p3, out_rows=moe_core.buffer_rows(cfg, 3))
+s34, v34 = elastic_row_remap(p3, p4, out_rows=moe_core.buffer_rows(cfg, 4))
+down = remap_buffer_rows(buf, s43, v43)
+back = remap_buffer_rows(down, s34, v34)
+assert (back == buf).all()                  # bit-exact round trip
+print("grow-back row layout round-trips bit-exactly")
+
+# the publish/decode path never raised; post-grow-back publications landed
+eng.flush()
+assert eng.version == 8, eng.version
+out = eng.generate(prompts, steps=3)
+fresh = Engine(cfg, rt4, eng.params, max_len=32, pa=eng.pa,
+               version=eng.version)
+assert (out == fresh.generate(prompts, steps=3)).all()
+fresh.close()
+eng.close()
+print("ELASTIC RECOVERY OK")
+"""
+
+
+def test_in_process_shrink_parity_and_grow_back_distributed(dist):
+    """Acceptance: ``mesh.device_lost`` mid-run on (dp=1, ep=4) shrinks
+    in-process to ep=3 with trajectory parity ≤ 1e-5 vs kill-and-restart
+    + elastic restore onto ep=3; grow-back to ep=4 restores the row
+    layout bit-exactly; the decode/publish path never raises."""
+    out = dist(RECOVERY_SCRIPT, n_devices=4)
+    assert "ELASTIC RECOVERY OK" in out
+
+
+STRAGGLER_SCRIPT = r"""
+import warnings
+import numpy as np
+from repro.common import faults
+from repro.common.config import ModelConfig, MoEConfig, TrainConfig
+from repro.core import moe as moe_core
+from repro.core.schedule import ReshardingPolicy
+from repro.models import model as mdl
+from repro.train.supervisor import TrainSupervisor, surviving_mesh
+from repro.train.trainer import HecateScheduler, train_loop
+
+cfg = ModelConfig(
+    name="t", arch_type="moe", num_layers=2,
+    d_model=128, num_heads=4, num_kv_heads=4, head_dim=32,
+    d_ff=256, vocab_size=512,
+    moe=MoEConfig(num_experts=8, experts_per_token=2, d_ff=256,
+                  slots_per_device=2),
+    act="gelu", norm="ln", remat=False, dtype="float32")
+rng = np.random.default_rng(0)
+BATCHES = [{"tokens": rng.integers(0, 512, (4, 9)).astype(np.int32)}
+           for _ in range(8)]
+EP = 3                                      # L*E=16 on 3 devices: row slack
+SLOW = 0                                    # homogeneous fill gives dev 0 a
+                                            # full row count — headroom to lose
+mesh = surviving_mesh(1, EP)
+rt = mdl.Runtime(mesh=mesh, moe=moe_core.MoERuntime(
+    mesh=mesh, batch_axes=("data",), impl="ring", m=2, capacity=64,
+    use_pallas=False))
+tc = TrainConfig(learning_rate=1e-3, warmup_steps=2, total_steps=8, seed=0)
+sched = HecateScheduler(cfg, ep=EP, impl="ring", async_plan=False,
+                        calibrate=False,
+                        resharding=ReshardingPolicy(interval=4, t=2))
+sup = TrainSupervisor(ep=EP, runtime_factory=lambda ep: rt,
+                      calibration_steps=3, straggler_ratio=1.5)
+share0 = int((sched.sharding.owner_dev == SLOW).sum())
+faults.inject("mesh.slow_device", mutate=faults.slow_device(SLOW, 6.0),
+              times=None)
+with warnings.catch_warnings():
+    warnings.simplefilter("ignore")
+    _, hist = train_loop(cfg, rt, tc, iter(BATCHES), scheduler=sched,
+                         num_steps=8, log_every=0, supervisor=sup)
+faults.clear()
+w = sup.device_weights()
+assert w is not None and w[SLOW] < 1.0 and w[1] == w[2] == 1.0, w
+assert hist[-1]["stragglers_deweighted"] == 1, hist[-1]
+share1 = int((sched.sharding.owner_dev == SLOW).sum())
+peers1 = max(int((sched.sharding.owner_dev == d).sum()) for d in (1, 2))
+print(f"straggler slot share {share0} -> {share1} (peers {peers1})")
+assert share1 < share0, (share0, share1)    # fewer slots after calibration
+assert share1 < peers1, (share1, peers1)    # and fewer than its peers
+assert hist[-1]["dropped_frac"] == 0.0      # degradation, not drops
+print("STRAGGLER DEWEIGHT OK")
+"""
+
+
+def test_slow_device_loses_slot_share_distributed(dist):
+    """A persistently slow device (``mesh.slow_device``) is de-weighted
+    after calibration: the reshard at step 4 assigns it fewer expert
+    slots than its peers — degradation, not death — while training
+    continues on the full mesh."""
+    out = dist(STRAGGLER_SCRIPT, n_devices=4)
+    assert "STRAGGLER DEWEIGHT OK" in out

@@ -70,10 +70,10 @@ def test_nan_grads_skips_update_and_training_continues():
     def cb(i, state, metrics):
         snaps[i] = jax.tree.map(np.asarray, state.params)
 
-    faults.inject("train.nan_grads", mutate=faults.poison_grads,
-                  after=3, times=1)
-    state, hist = train_loop(cfg, rt, _tc(), _stream(cfg), num_steps=8,
-                             log_every=0, callback=cb)
+    with faults.injected("train.nan_grads", mutate=faults.poison_grads,
+                         after=3, times=1):
+        state, hist = train_loop(cfg, rt, _tc(), _stream(cfg), num_steps=8,
+                                 log_every=0, callback=cb)
     assert [h["step_ok"] for h in hist] == [1, 1, 1, 0, 1, 1, 1, 1]
     assert hist[-1]["skipped_steps"] == 1
     # bit-identical across the skip: the NaN never touched params/moments
@@ -106,10 +106,10 @@ def test_abort_after_budget_with_rollback(tmp_path):
     d = str(tmp_path / "ckpt")
     tc = _tc(total_steps=12, checkpoint_dir=d, checkpoint_every=2,
              max_bad_steps=3)
-    faults.inject("train.nan_grads", mutate=faults.poison_grads,
-                  after=6, times=None)
-    with pytest.raises(TrainAbortError) as ei:
-        train_loop(cfg, rt, tc, _stream(cfg), num_steps=12, log_every=0)
+    with faults.injected("train.nan_grads", mutate=faults.poison_grads,
+                         after=6, times=None):
+        with pytest.raises(TrainAbortError) as ei:
+            train_loop(cfg, rt, tc, _stream(cfg), num_steps=12, log_every=0)
     e = ei.value
     assert e.step == 9                       # 3 bad steps after step 6
     assert e.history[-1]["skipped_steps"] == 3
@@ -155,10 +155,9 @@ def test_resume_skips_checkpoint_truncated_mid_save(tmp_path):
     d = str(tmp_path / "ckpt")
     tc = _tc(checkpoint_dir=d, checkpoint_every=2)
     # saves land at steps 2, 4, 6 — corrupt the third (step 6)
-    faults.inject("checkpoint.corrupt", mutate=faults.truncate_file,
-                  after=2, times=1)
-    train_loop(cfg, rt, tc, _stream(cfg), num_steps=7, log_every=0)
-    faults.clear()
+    with faults.injected("checkpoint.corrupt", mutate=faults.truncate_file,
+                         after=2, times=1):
+        train_loop(cfg, rt, tc, _stream(cfg), num_steps=7, log_every=0)
     assert store.latest_step(d) == 6                    # present on disk...
     assert store.latest_step(d, verify=True) == 4       # ...but not intact
     _, hB = train_loop(cfg, rt, tc, _stream(cfg), num_steps=8, log_every=0)
@@ -172,10 +171,9 @@ def test_crash_mid_save_leaves_no_partial_checkpoint(tmp_path):
     d = str(tmp_path / "ckpt")
     tree = {"w": np.arange(6, dtype=np.float32)}
     store.save(d, 1, tree)
-    faults.inject("checkpoint.save_crash")
-    with pytest.raises(faults.FaultError):
-        store.save(d, 2, tree)
-    faults.clear()
+    with faults.injected("checkpoint.save_crash"):
+        with pytest.raises(faults.FaultError):
+            store.save(d, 2, tree)
     assert store.latest_step(d) == 1
     assert not [x for x in os.listdir(d) if x.startswith(".tmp_ckpt_")]
 
@@ -347,9 +345,8 @@ def test_restore_detects_bitflip(tmp_path):
     d = str(tmp_path / "ckpt")
     tree = {"w": np.arange(128, dtype=np.float32)}
     store.save(d, 1, tree)
-    faults.inject("checkpoint.corrupt", mutate=faults.bitflip_file)
-    store.save(d, 2, tree)
-    faults.clear()
+    with faults.injected("checkpoint.corrupt", mutate=faults.bitflip_file):
+        store.save(d, 2, tree)
     with pytest.raises(store.CheckpointCorruptError):
         store.restore(d, 2, tree)
     assert store.verify_step(d, 1) and not store.verify_step(d, 2)
@@ -374,12 +371,11 @@ def test_planner_job_exception_falls_back_synchronously():
     for _ in range(5):
         sched.observe(loads)
         sync.observe(loads)
-    faults.inject("scheduler.plan_job")
-    sched.plan_ahead()
-    with warnings.catch_warnings(record=True) as w:
-        warnings.simplefilter("always")
-        plan = sched.plan()                 # must NOT raise
-    faults.clear()
+    with faults.injected("scheduler.plan_job"):
+        sched.plan_ahead()
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            plan = sched.plan()             # must NOT raise
     assert sched.plan_fallbacks == 1
     assert any("plan-ahead job failed" in str(x.message) for x in w)
     ref = sync.plan()
@@ -404,24 +400,25 @@ def test_planner_job_hang_bounded_fallback_and_close():
     loads = np.abs(np.random.default_rng(2).normal(100, 5, (2, 8)))
     for _ in range(5):
         sched.observe(loads)
-    faults.inject("scheduler.plan_job_hang", hang_s=120)
-    sched.plan_ahead()
-    t0 = time.perf_counter()
-    plan = sched.plan()                     # bounded, answered sync
-    assert time.perf_counter() - t0 < 10
-    assert plan is not None
-    assert sched.plan_fallbacks == 1
-    assert not sched.async_plan and sched._worker_poisoned
-    # the worker is a DAEMON thread: even a genuinely hung job (one
-    # faults.clear() never releases) cannot wedge interpreter shutdown —
-    # a ThreadPoolExecutor's non-daemon threads would be joined atexit
-    assert sched._executor._thread.daemon
-    sched.plan_ahead()                      # degraded: no-op now
-    assert sched._pending is None
-    t0 = time.perf_counter()
-    sched.close()                           # must not block 120s
-    assert time.perf_counter() - t0 < 10
-    faults.clear()                          # releases the sleeping worker
+    # the context must wrap through close(): its exit is what releases
+    # the sleeping worker, and close() must return BEFORE that happens
+    with faults.injected("scheduler.plan_job_hang", hang_s=120):
+        sched.plan_ahead()
+        t0 = time.perf_counter()
+        plan = sched.plan()                 # bounded, answered sync
+        assert time.perf_counter() - t0 < 10
+        assert plan is not None
+        assert sched.plan_fallbacks == 1
+        assert not sched.async_plan and sched._worker_poisoned
+        # the worker is a DAEMON thread: even a genuinely hung job (one
+        # faults.clear() never releases) cannot wedge interpreter shutdown —
+        # a ThreadPoolExecutor's non-daemon threads would be joined atexit
+        assert sched._executor._thread.daemon
+        sched.plan_ahead()                  # degraded: no-op now
+        assert sched._pending is None
+        t0 = time.perf_counter()
+        sched.close()                       # must not block 120s
+        assert time.perf_counter() - t0 < 10
 
 
 def test_plan_fallbacks_reported_as_this_runs_delta():
@@ -447,13 +444,13 @@ def test_publish_build_failure_drops_and_keeps_serving():
     eng = Engine(cfg, rt, params, max_len=32)
     prompts = np.array([[1, 2, 3], [4, 5, 6]], np.int32)
     out0 = eng.generate(prompts, steps=4)
-    faults.inject("engine.publish_build")
-    eng.publish_params(dict(params))
-    deadline = time.perf_counter() + 30
-    while not eng._staged["fut"].done() and time.perf_counter() < deadline:
-        time.sleep(0.01)
-    out1 = eng.generate(prompts, steps=4)   # boundary drops, never raises
-    faults.clear()
+    with faults.injected("engine.publish_build"):
+        eng.publish_params(dict(params))
+        deadline = time.perf_counter() + 30
+        while (not eng._staged["fut"].done()
+               and time.perf_counter() < deadline):
+            time.sleep(0.01)
+        out1 = eng.generate(prompts, steps=4)  # boundary drops, no raise
     assert eng.publish_drops == 1
     assert isinstance(eng.last_publish_error, faults.FaultError)
     assert eng.version == 0                 # old version kept serving
@@ -470,10 +467,9 @@ def test_flush_swallows_failed_build():
     params = mdl.init_params(cfg, jax.random.PRNGKey(0))
     from repro.serve.engine import Engine
     eng = Engine(cfg, rt, params, max_len=16)
-    faults.inject("engine.publish_build")
-    eng.publish_params(dict(params))
-    eng.flush()                             # must not raise
-    faults.clear()
+    with faults.injected("engine.publish_build"):
+        eng.publish_params(dict(params))
+        eng.flush()                         # must not raise
     assert eng.publish_drops == 1 and eng.version == 0
     eng.close()
 
@@ -501,11 +497,11 @@ def test_train_loop_surfaces_engine_side_drops():
     params = mdl.init_params(cfg, jax.random.PRNGKey(0))
     from repro.serve.engine import Engine
     eng = Engine(cfg, rt, params, max_len=16)
-    faults.inject("engine.publish_build")
-    _, hist = train_loop(cfg, rt, _tc(), _stream(cfg), num_steps=6,
-                         log_every=0, publish_engine=eng, publish_every=2)
-    eng.flush()
-    faults.clear()
+    with faults.injected("engine.publish_build"):
+        _, hist = train_loop(cfg, rt, _tc(), _stream(cfg), num_steps=6,
+                             log_every=0, publish_engine=eng,
+                             publish_every=2)
+        eng.flush()
     assert eng.publish_drops == 1
     assert isinstance(eng.last_publish_error, faults.FaultError)
     assert hist[-1]["publish_drops"] == 1   # surfaced in history records

@@ -70,6 +70,70 @@ def test_alg2_memory_balance(p, t):
     assert rows_used.max() - rows_used.min() <= max(1, M - (L * E) % M)
 
 
+# ---------------------------------------------------------------------------
+# Weighted Algorithm 2 — straggler de-weighting (device_weights)
+# ---------------------------------------------------------------------------
+@st.composite
+def weighted_problem(draw):
+    L, E, M = draw(sizes)
+    hypothesis.assume(M <= L * E)       # degenerate: counts tie at 0/1 and
+    # index order (not weight) decides who gets the odd row out
+    w = draw(st.lists(st.sampled_from([0.25, 0.5, 1.0]),
+                      min_size=M, max_size=M))
+    t = draw(st.integers(0, 8))
+    return L, E, M, np.asarray(w, np.float64), t
+
+
+@settings(max_examples=40, deadline=None)
+@given(weighted_problem())
+def test_weighted_alg2_monotone_and_balanced(p):
+    """Straggler de-weighting: under uniform loads a strictly SLOWER
+    device never owns more slots than a faster one (weak monotonicity of
+    the owned-slot count in the speed weight), while the memory contract
+    is untouched — every plan still validates and no device exceeds
+    rows_per_device.  k_local=E isolates the row budget (the per-layer
+    cap is weight-independent and can only mask the ordering)."""
+    L, E, M, w, t = p
+    loads = np.ones((L, E))
+    sh = heterogeneous_sharding(loads, M, t, k_local=E, device_weights=w)
+    sh.validate()
+    counts = np.array([(sh.owner_dev == d).sum() for d in range(M)])
+    assert counts.sum() == L * E
+    assert counts.max() <= sh.rows_per_device
+    for a in range(M):
+        for b in range(M):
+            if w[a] < w[b]:
+                assert counts[a] <= counts[b], (w.tolist(), counts.tolist())
+
+
+@settings(max_examples=40, deadline=None)
+@given(problem(), st.integers(0, 8), st.sampled_from([0.25, 0.5, 1.0]))
+def test_weighted_alg2_uniform_weights_byte_identical(p, t, c):
+    """Uniform weights (any constant) take the exact unweighted path —
+    w/w is exactly 1.0 in IEEE — so the output is byte-identical to the
+    device_weights=None call."""
+    L, E, M, loads = p
+    base = heterogeneous_sharding(loads, M, t)
+    sh = heterogeneous_sharding(loads, M, t,
+                                device_weights=np.full(M, c))
+    assert np.array_equal(base.owner_dev, sh.owner_dev)
+    assert np.array_equal(base.owner_row, sh.owner_row)
+    assert base.k_local == sh.k_local
+
+
+def test_weighted_alg2_infeasible_order_falls_back():
+    """Zero-slack regression: L*E == M*rows_per_device with a tight
+    k_local can make the WEIGHTED placement order dead-end against the
+    caps.  The weights are advisory — the greedy must retry unweighted
+    (byte-identical to the no-weights call), never raise."""
+    w = np.array([0.25, 0.25, 1.0, 0.5, 1.0, 0.25, 1.0, 1.0])
+    sh = heterogeneous_sharding(np.ones((3, 8)), 8, 6, device_weights=w)
+    base = heterogeneous_sharding(np.ones((3, 8)), 8, 6)
+    sh.validate()
+    assert np.array_equal(sh.owner_dev, base.owner_dev)
+    assert np.array_equal(sh.owner_row, base.owner_row)
+
+
 @settings(max_examples=25, deadline=None)
 @given(problem())
 def test_alg1_hot_experts_replicated_more(p):

@@ -108,26 +108,26 @@ def test_crash_evicts_one_replica_fleet_serves_rejoin_bit_exact():
     cfg, rt, params, pa, engines, bus = _fleet(
         4, max_retries=1, backoff_s=0.005)
     params2 = mdl.init_params(cfg, jax.random.PRNGKey(2))
-    faults.inject("replica.crash", only="r2", times=None)
-    with pytest.warns(RuntimeWarning, match="evicted"):
-        bus.publish_params(params2, version=3, wait=True)
-    h = bus.poll()
-    assert h["r2"].state == EVICTED
-    assert bus.replica_evictions == 1 and bus.publish_drops == 1
-    assert bus.broadcast_retries >= 1
-    # the crash fired BEFORE the send reached the engine: r2 still serves
-    # its OLD version; the other three promoted the new one
-    assert engines[2].version == 0
-    survivors = bus.route()
-    assert len(survivors) == 3 and engines[2] not in survivors
-    for e in (engines[0], engines[1], engines[3]):
-        assert e.version == 3 and e.params is params2
-    # later publications skip the evicted replica without new evictions
-    params3 = mdl.init_params(cfg, jax.random.PRNGKey(3))
-    bus.publish_params(params3, version=4, wait=True)
-    assert engines[2].version == 0 and bus.replica_evictions == 1
-    # fault cleared -> rejoin catches up to the NEWEST published version
-    faults.clear()
+    with faults.injected("replica.crash", only="r2", times=None):
+        with pytest.warns(RuntimeWarning, match="evicted"):
+            bus.publish_params(params2, version=3, wait=True)
+        h = bus.poll()
+        assert h["r2"].state == EVICTED
+        assert bus.replica_evictions == 1 and bus.publish_drops == 1
+        assert bus.broadcast_retries >= 1
+        # the crash fired BEFORE the send reached the engine: r2 still
+        # serves its OLD version; the other three promoted the new one
+        assert engines[2].version == 0
+        survivors = bus.route()
+        assert len(survivors) == 3 and engines[2] not in survivors
+        for e in (engines[0], engines[1], engines[3]):
+            assert e.version == 3 and e.params is params2
+        # later publications skip the evicted replica, no new evictions
+        params3 = mdl.init_params(cfg, jax.random.PRNGKey(3))
+        bus.publish_params(params3, version=4, wait=True)
+        assert engines[2].version == 0 and bus.replica_evictions == 1
+    # fault cleared (context exit) -> rejoin catches up to the NEWEST
+    # published version
     assert bus.rejoin("r2")
     assert bus.poll()["r2"].state == HEALTHY
     assert bus.replica_rejoins == 1 and len(bus.route()) == 4
@@ -147,33 +147,33 @@ def test_build_hang_goes_lagging_then_evicted_without_blocking():
         3, build_deadline_s=0.08, evict_deadline_s=0.35)
     params2 = mdl.init_params(cfg, jax.random.PRNGKey(4))
     out_old = engines[1].generate(PROMPTS, steps=2)
-    faults.inject("replica.build_hang", only="r1", hang_s=30.0, times=None)
-    bus.publish_params(params2, version=2)      # no wait: r1's build hangs
-    deadline = time.monotonic() + 5.0
-    while (bus.poll()["r1"].state == HEALTHY
-           and time.monotonic() < deadline):
-        time.sleep(0.02)
-    assert bus.poll()["r1"].state == LAGGING
-    assert engines[1] not in bus.route()        # drained by the router
-    # decode on the LAGGING replica still serves the OLD version, and the
-    # call is bounded (never blocks on the wedged build)
-    t0 = time.perf_counter()
-    np.testing.assert_array_equal(engines[1].generate(PROMPTS, steps=2),
-                                  out_old)
-    assert time.perf_counter() - t0 < 5.0
-    assert engines[1].version == 0
-    # the healthy replicas promoted the publication meanwhile
-    for e in (engines[0], engines[2]):
-        e.flush()
-        assert e.version == 2
-    deadline = time.monotonic() + 5.0
-    with pytest.warns(RuntimeWarning, match="evicted"):
-        while (bus.poll()["r1"].state == LAGGING
+    with faults.injected("replica.build_hang", only="r1", hang_s=30.0,
+                         times=None):           # exit releases the hang
+        bus.publish_params(params2, version=2)  # no wait: r1's build hangs
+        deadline = time.monotonic() + 5.0
+        while (bus.poll()["r1"].state == HEALTHY
                and time.monotonic() < deadline):
-            time.sleep(0.05)
-    assert bus.poll()["r1"].state == EVICTED
-    assert bus.replica_evictions == 1
-    faults.clear()                              # releases the hang
+            time.sleep(0.02)
+        assert bus.poll()["r1"].state == LAGGING
+        assert engines[1] not in bus.route()    # drained by the router
+        # decode on the LAGGING replica still serves the OLD version, and
+        # the call is bounded (never blocks on the wedged build)
+        t0 = time.perf_counter()
+        np.testing.assert_array_equal(engines[1].generate(PROMPTS, steps=2),
+                                      out_old)
+        assert time.perf_counter() - t0 < 5.0
+        assert engines[1].version == 0
+        # the healthy replicas promoted the publication meanwhile
+        for e in (engines[0], engines[2]):
+            e.flush()
+            assert e.version == 2
+        deadline = time.monotonic() + 5.0
+        with pytest.warns(RuntimeWarning, match="evicted"):
+            while (bus.poll()["r1"].state == LAGGING
+                   and time.monotonic() < deadline):
+                time.sleep(0.05)
+        assert bus.poll()["r1"].state == EVICTED
+        assert bus.replica_evictions == 1
     _teardown(bus, engines)
 
 
@@ -183,9 +183,9 @@ def test_transient_broadcast_drop_is_retried_in_place():
     and stays HEALTHY, nothing is evicted."""
     cfg, rt, params, pa, engines, bus = _fleet(
         2, max_retries=2, backoff_s=0.005)
-    faults.inject("bus.broadcast_drop", only="r0", times=1)
     params2 = mdl.init_params(cfg, jax.random.PRNGKey(5))
-    bus.publish_params(params2, version=1, wait=True)
+    with faults.injected("bus.broadcast_drop", only="r0", times=1):
+        bus.publish_params(params2, version=1, wait=True)
     assert bus.broadcast_retries == 1 and bus.replica_evictions == 0
     assert bus.publish_drops == 0
     for e in engines:
@@ -232,14 +232,13 @@ def test_train_loop_publishes_through_bus_and_counts_fleet_events():
                for i in range(2)]
     bus = PublicationBus([(e.name, e) for e in engines],
                          max_retries=0, backoff_s=0.001)
-    faults.inject("replica.crash", only="r1", times=None)
     stream = make_stream(cfg.vocab_size, 32, 8, kind="bytes", seed=0)
-    with pytest.warns(RuntimeWarning, match="evicted"):
-        state, hist = train_loop(cfg, rt, tc, stream, scheduler=sched,
-                                 num_steps=8, log_every=0,
-                                 publish_engine=bus, publish_every=3)
-        bus.flush()
-    faults.clear()
+    with faults.injected("replica.crash", only="r1", times=None):
+        with pytest.warns(RuntimeWarning, match="evicted"):
+            state, hist = train_loop(cfg, rt, tc, stream, scheduler=sched,
+                                     num_steps=8, log_every=0,
+                                     publish_engine=bus, publish_every=3)
+            bus.flush()
     # publications at steps 3 and 6, versioned by the GLOBAL step
     assert bus.version == 6 and engines[0].version == 6
     assert bus.replica_evictions == 1
@@ -379,17 +378,16 @@ def test_restore_mesh_mismatch_fault_degrades_to_fresh_init(tmp_path):
     cfg = C.get_smoke("gpt-moe-s")
     tc, sched2, _ = _ckpt_on_ep(cfg, tmp_path, ep=2)
     sched4 = HecateScheduler(cfg, ep=4, impl="ep")
-    faults.inject("restore.mesh_mismatch", times=1)
-    with pytest.warns(RuntimeWarning, match="starting fresh"):
-        state, gstep = resume_train_state(cfg, tc, sched4, ep=4)
-    assert state is None and gstep == 0
-    assert faults.fired("restore.mesh_mismatch") == 1
-    faults.clear()
+    with faults.injected("restore.mesh_mismatch", times=1):
+        with pytest.warns(RuntimeWarning, match="starting fresh"):
+            state, gstep = resume_train_state(cfg, tc, sched4, ep=4)
+        assert state is None and gstep == 0
+        assert faults.fired("restore.mesh_mismatch") == 1
     # payload is (saved_ep, running_ep) — only= can target one transition
-    faults.inject("restore.mesh_mismatch", only=(8, 4), times=1)
-    state, gstep = resume_train_state(cfg, tc, sched4, ep=4)
-    assert state is not None and gstep == 5     # (2, 4) passed through
-    assert faults.fired("restore.mesh_mismatch") == 0
+    with faults.injected("restore.mesh_mismatch", only=(8, 4), times=1):
+        state, gstep = resume_train_state(cfg, tc, sched4, ep=4)
+        assert state is not None and gstep == 5  # (2, 4) passed through
+        assert faults.fired("restore.mesh_mismatch") == 0
     sched4.close()
 
 
