@@ -122,6 +122,13 @@ class ModelConfig:
     final_logit_softcap: float = 0.0    # gemma2 (30.0)
     sliding_window: int = 0             # gemma2 local layers (4096)
     mrope: bool = False                 # qwen2-vl multimodal RoPE
+    # Block-paged decode attention via the Pallas kernel
+    # (repro.kernels.paged_attention) — reads the page table directly from
+    # the flat KV pool, native GQA, online softmax in f32.  False forces
+    # the pure-XLA gather path (k[row_idx] per step), which stays
+    # BIT-exact with the dense cache; the kernel is reduction-order-exact
+    # to ≤1e-6 in f32 (tests/test_serve_batching.py asserts both).
+    paged_attn_kernel: bool = True
     # Repeating unit of layer kinds, tiled to num_layers.  Kinds:
     #   "attn"    causal global attention + FFN
     #   "local"   sliding-window attention + FFN

@@ -13,6 +13,7 @@ import jax.numpy as jnp
 
 from repro.kernels import flash_attention as _fa
 from repro.kernels import grouped_mlp as _gm
+from repro.kernels import paged_attention as _pa
 
 
 def _interpret() -> bool:
@@ -39,7 +40,14 @@ def grouped_mlp(x, wi, wg, wo, group_sizes=None, row_valid=None, *,
 
 @partial(jax.jit, static_argnames=("causal", "window"))
 def flash_attention(q, k, v, *, causal: bool = True, window: int = 0):
-    """Flash attention, q/k/v (B,S,N,H); GQA k/v expanded to N heads here."""
+    """Flash attention, q/k/v (B,S,N,H).
+
+    The PREFILL kernel still tiles over ``nq`` equal heads, so GQA K/V are
+    expanded here — prefill-only cost, paid once per sequence.  The decode
+    paths must NOT come through this expansion: ``paged_decode_attention``
+    reads the ``nkv`` heads natively, and the dense decode path uses the
+    grouped-einsum ``_sdpa`` (jaxpr-asserted in tests/test_serve_batching).
+    """
     nq, nkv = q.shape[2], k.shape[2]
     if nq != nkv:
         rep = nq // nkv
@@ -47,3 +55,24 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0):
         v = jnp.repeat(v, rep, axis=2)
     return _fa.flash_attention(q, k, v, causal=causal, window=window,
                                interpret=_interpret())
+
+
+@partial(jax.jit, static_argnames=("page_size", "window", "softcap"))
+def paged_decode_attention(q, k_pool, v_pool, row_idx, positions, *,
+                           page_size: int, window: int = 0,
+                           softcap: float = 0.0):
+    """Block-paged decode attention over the flat KV pool.
+
+    q: (B, nq, hd); k/v_pool: (num_rows, nkv, hd); row_idx: (B, max_kv)
+    int32 per-token pool rows (page-aligned — the kernel consumes the
+    page-granular table ``row_idx[:, ::page_size] // page_size``);
+    positions: (B,) int32 write positions.  Native GQA: the kernel reads
+    the ``nkv`` KV heads directly, with NO ``jnp.repeat`` head expansion
+    and NO ``(B, max_kv, ...)`` gather materialization (contrast
+    ``flash_attention`` above, whose prefill kernel still expands).
+    """
+    assert row_idx.shape[1] % page_size == 0, (row_idx.shape, page_size)
+    block_tbl = row_idx[:, ::page_size] // page_size
+    return _pa.paged_decode_attention(
+        q, k_pool, v_pool, block_tbl, positions, page_size=page_size,
+        window=window, softcap=softcap, interpret=_interpret())

@@ -145,7 +145,7 @@ def init_paged_kv_cache(cfg: ModelConfig, num_rows: int, dtype):
 
 
 def decode_attention_paged(p, cfg: ModelConfig, x, cache, positions,
-                           row_idx, *, kind="attn"):
+                           row_idx, *, kind="attn", page_size=None):
     """One-token decode for B sequences at INDEPENDENT positions against a
     block-paged KV pool.
 
@@ -156,10 +156,18 @@ def decode_attention_paged(p, cfg: ModelConfig, x, cache, positions,
     the reserved trash page 0, which no live sequence owns).
 
     The new K/V is scattered to ``row_idx[b, positions[b]]``; attention
-    gathers each sequence's rows back into a (B, max_kv) view and masks
-    ``t <= positions[b]`` — identical math to the dense path, so a paged
-    trace is bit-exact with a dense-cache trace of the same sequence
-    (asserted in tests/test_serve_batching.py).  Returns (out, new_cache).
+    then masks ``t <= positions[b]`` (windowed for ``kind="local"``) over
+    each sequence's rows.  With ``page_size`` set and
+    ``cfg.paged_attn_kernel`` (default), the reduction runs in the Pallas
+    paged kernel (``repro.kernels.paged_attention``): each program reads
+    its KV pages straight from the flat pool through the page table —
+    no ``(B, max_kv, nkv, hd)`` gather copy, native GQA, online softmax
+    in f32 (paged-vs-dense parity ≤1e-6 in f32; reduction order is the
+    only difference).  Without ``page_size`` (or with the config flag
+    off) the pure-XLA fallback gathers ``k[row_idx]`` and reuses
+    ``_sdpa`` — identical math to the dense path, BIT-exact with a
+    dense-cache trace of the same sequence.  Both laws are asserted in
+    tests/test_serve_batching.py.  Returns (out, new_cache).
     """
     q, k_new, v_new = _project_qkv(p, x)
     mr = default_mrope_sections(cfg.head_dim) if cfg.mrope else None
@@ -174,13 +182,20 @@ def decode_attention_paged(p, cfg: ModelConfig, x, cache, positions,
     # live ever reads it; live sequences own disjoint rows by construction
     k = cache["k"].at[write_rows].set(k_new[:, 0])
     v = cache["v"].at[write_rows].set(v_new[:, 0])
-    kb, vb = k[row_idx], v[row_idx]                 # (B, max_kv, nkv, hd)
-    kpos = jnp.arange(row_idx.shape[1])
-    valid = kpos[None, :] <= positions[:, None]
-    if kind == "local" and cfg.sliding_window > 0:
-        valid &= kpos[None, :] > positions[:, None] - cfg.sliding_window
-    mask = valid[:, None, None, :]                  # (B, 1, 1, max_kv)
-    out = _sdpa(q, kb, vb, mask, cfg.attn_logit_softcap, cfg.head_dim)
+    window = cfg.sliding_window if kind == "local" else 0
+    if page_size is not None and cfg.paged_attn_kernel:
+        from repro.kernels import ops as kops
+        out = kops.paged_decode_attention(
+            q[:, 0], k, v, row_idx, positions, page_size=page_size,
+            window=window, softcap=cfg.attn_logit_softcap)[:, None]
+    else:
+        kb, vb = k[row_idx], v[row_idx]             # (B, max_kv, nkv, hd)
+        kpos = jnp.arange(row_idx.shape[1])
+        valid = kpos[None, :] <= positions[:, None]
+        if window > 0:
+            valid &= kpos[None, :] > positions[:, None] - window
+        mask = valid[:, None, None, :]              # (B, 1, 1, max_kv)
+        out = _sdpa(q, kb, vb, mask, cfg.attn_logit_softcap, cfg.head_dim)
     out = jnp.einsum("bsnh,nhd->bsd", out, p["wo"].astype(x.dtype))
     return out, {"k": k, "v": v}
 

@@ -705,7 +705,7 @@ def cache_logical_axes(cfg: ModelConfig, batch: int, mesh_batch: int):
 
 def decode_step(cfg: ModelConfig, rt: Runtime, params, cache, tokens, pos,
                 pa: Optional[PlanArrays] = None, premat=None, *,
-                row_idx=None):
+                row_idx=None, page_size=None):
     """tokens: (B, 1) int32; pos: scalar — position being written.
     premat: optional stacked (L_moe, M, K, chunk_len) pre-materialized
     compute slots (``moe_core.materialize_chunks``) — each MoE layer then
@@ -717,10 +717,15 @@ def decode_step(cfg: ModelConfig, rt: Runtime, params, cache, tokens, pos,
     a sequence token to its pool row).  In paged mode ``pos`` must be a
     (B,) int32 vector of per-sequence positions: B independent sequences
     decode one token each at independent lengths (continuous batching —
-    see ``repro.serve.scheduler``).  Everything outside the attention
-    cache read/write — MoE premat reuse included — is identical, so the
-    paged step obeys the same collective law (zero SparseAllGathers with
-    a fresh slot cache; jaxpr-asserted in tests/test_serve_batching.py).
+    see ``repro.serve.scheduler``).  ``page_size`` (a static Python int —
+    constant per scheduler, so the jitted paged step compiles once)
+    routes the paged attention through the Pallas paged-decode kernel
+    (``repro.kernels.paged_attention``; pure-XLA gather without it or
+    with ``cfg.paged_attn_kernel=False``).  Everything outside the
+    attention cache read/write — MoE premat reuse included — is
+    identical, so the paged step obeys the same collective law (zero
+    SparseAllGathers with a fresh slot cache; jaxpr-asserted in
+    tests/test_serve_batching.py).
     """
     if row_idx is not None:
         assert not cfg.is_encoder_decoder, (
@@ -764,7 +769,8 @@ def decode_step(cfg: ModelConfig, rt: Runtime, params, cache, tokens, pos,
             elif row_idx is not None:
                 y, nc = attn.decode_attention_paged(p["attn"], cfg, h,
                                                     cache_sb[f"l{j}"], pos,
-                                                    row_idx, kind=kind)
+                                                    row_idx, kind=kind,
+                                                    page_size=page_size)
                 x = x + y
                 new_cache[f"l{j}"] = nc
             else:

@@ -162,17 +162,21 @@ def build_prefill_step(cfg: ModelConfig, rt: mdl.Runtime):
     return prefill_step
 
 
-def build_paged_serve_step(cfg: ModelConfig, rt: mdl.Runtime):
+def build_paged_serve_step(cfg: ModelConfig, rt: mdl.Runtime,
+                           page_size: Optional[int] = None):
     """fn(params, cache, tokens:(B,1), positions:(B,), row_idx:(B,max_kv),
     pa[, premat]) -> (logits:(B,1,V), cache) — one decode token for B
     INDEPENDENT sequences against the block-paged cache
-    (``mdl.init_paged_cache``).  Same premat contract as
-    ``build_serve_step``: with pre-materialized slots the step issues NO
-    SparseAllGather collectives."""
+    (``mdl.init_paged_cache``).  ``page_size`` (static, closed over — one
+    compile per pool geometry) routes attention through the Pallas
+    paged-decode kernel; None keeps the pure-XLA gather path.  Same
+    premat contract as ``build_serve_step``: with pre-materialized slots
+    the step issues NO SparseAllGather collectives."""
     def paged_step(params, cache, tokens, positions, row_idx,
                    pa: Optional[PlanArrays], premat=None):
         return mdl.decode_step(cfg, rt, params, cache, tokens, positions,
-                               pa, premat=premat, row_idx=row_idx)
+                               pa, premat=premat, row_idx=row_idx,
+                               page_size=page_size)
     return paged_step
 
 

@@ -198,10 +198,17 @@ class RequestScheduler:
 
         # the jitted fns live on the ENGINE so their compile caches
         # survive scheduler churn — serving sessions come and go on a
-        # long-lived engine, and a re-attach must not recompile
-        if not hasattr(engine, "_paged_step_fn"):
+        # long-lived engine, and a re-attach must not recompile.  The
+        # paged step closes over page_size (static: the Pallas kernel's
+        # KV tile is one pool page), so only a re-attach with a DIFFERENT
+        # pool geometry rebuilds it.
+        if (not hasattr(engine, "_paged_step_fn")
+                or getattr(engine, "_paged_step_ps", None) != page_size):
             engine._paged_step_fn = jax.jit(
-                build_paged_serve_step(self.cfg, self.rt))
+                build_paged_serve_step(self.cfg, self.rt,
+                                       page_size=page_size))
+            engine._paged_step_ps = page_size
+        if not hasattr(engine, "_sched_prefill_fn"):
             engine._sched_prefill_fn = jax.jit(
                 build_prefill_step(self.cfg, self.rt))
         self._step_fn = engine._paged_step_fn

@@ -5,7 +5,9 @@ import numpy as np
 import pytest
 
 from repro.kernels import ops
-from repro.kernels.ref import flash_attention_ref, grouped_mlp_ref
+from repro.kernels.ref import (flash_attention_ref, grouped_mlp_ref,
+                               paged_decode_attention_ref)
+from repro.serve.kv_pool import PageTable
 
 
 def _tol(dtype):
@@ -223,6 +225,135 @@ def test_flash_attention_sweep(B, S, NQ, NKV, H, dtype, causal, window):
                               causal=causal, window=window)
     np.testing.assert_allclose(np.asarray(o, np.float32), np.asarray(orf),
                                **_tol(dtype))
+
+
+# ---------------------------------------------------------------------------
+# paged decode attention (the serving kernel) vs the gather oracle
+# ---------------------------------------------------------------------------
+PS, MAX_KV = 4, 16                      # 4 KV blocks per sequence
+
+
+def _paged_tables(rng, positions, num_pages):
+    """Adversarial page layouts: every sequence gets ceil((pos+1)/PS)
+    DISTINCT pages drawn in shuffled (non-contiguous, non-monotonic)
+    order — the kernel must follow the table, not the allocation order."""
+    avail = list(range(1, num_pages))
+    rng.shuffle(avail)
+    rows = []
+    for pos in positions:
+        pages = [avail.pop() for _ in range(pos // PS + 1)]
+        rows.append(PageTable(PS, MAX_KV, pages).row_idx())
+    return jnp.asarray(np.stack(rows))
+
+
+def _paged_case(seed, positions, nkv, group, h=32, num_pages=24,
+                dtype=jnp.float32):
+    rng = np.random.default_rng(seed)
+    b, nq = len(positions), nkv * group
+    q = jnp.asarray(rng.standard_normal((b, nq, h)) * 0.4, dtype)
+    k = jnp.asarray(rng.standard_normal((num_pages * PS, nkv, h)) * 0.4,
+                    dtype)
+    v = jnp.asarray(rng.standard_normal((num_pages * PS, nkv, h)) * 0.6,
+                    dtype)
+    row_idx = _paged_tables(rng, positions, num_pages)
+    return q, k, v, row_idx, jnp.asarray(positions, jnp.int32)
+
+
+def _paged_tol(dtype):
+    # f32: the online softmax only reorders the reduction (≤1e-6);
+    # bf16: inputs/outputs round to bf16 but accumulation stays f32.
+    return dict(atol=1e-6, rtol=1e-6) if dtype == jnp.float32 \
+        else dict(atol=2e-2, rtol=2e-2)
+
+
+@pytest.mark.parametrize("group", [1, 4, 8])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_decode_gqa_ragged_parity(group, dtype):
+    """Native-GQA ratios 1/4/8 with ragged per-sequence lengths (including
+    a fresh pos=0 sequence and a full pos=MAX_KV-1 one): kernel vs the
+    gather oracle.  bf16 inputs must still accumulate in f32 — the bf16
+    tolerance only allows input/output rounding."""
+    q, k, v, row_idx, pos = _paged_case(group * 31, [2, 7, 11, 0, 15],
+                                        nkv=2, group=group, dtype=dtype)
+    out = ops.paged_decode_attention(q, k, v, row_idx, pos, page_size=PS)
+    ref = paged_decode_attention_ref(q, k, v, row_idx, pos)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               **_paged_tol(dtype))
+
+
+def test_paged_decode_position_edges():
+    """Positions exactly at 0, the last row of a page (PS-1), the first
+    row of the next page (PS), and the final row of the table (MAX_KV-1)
+    — the tile-skip predicate and the in-tile mask meet at every one."""
+    q, k, v, row_idx, pos = _paged_case(3, [0, PS - 1, PS, MAX_KV - 1],
+                                        nkv=4, group=1)
+    out = ops.paged_decode_attention(q, k, v, row_idx, pos, page_size=PS)
+    ref = paged_decode_attention_ref(q, k, v, row_idx, pos)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               **_paged_tol(jnp.float32))
+
+
+def test_paged_decode_trash_page_never_contributes():
+    """Rows of the reserved trash page (page 0) park every unallocated
+    table slot.  Poisoning page 0 with huge finite values must not change
+    any ACTIVE sequence's output by a single bit — its tiles are either
+    skipped outright or their trash rows get exactly zero probability."""
+    q, k, v, row_idx, pos = _paged_case(9, [5, 0, 13], nkv=2, group=2)
+    out_clean = ops.paged_decode_attention(q, k, v, row_idx, pos,
+                                           page_size=PS)
+    kp = k.at[:PS].set(1e4)
+    vp = v.at[:PS].set(1e4)
+    out_poison = ops.paged_decode_attention(q, kp, vp, row_idx, pos,
+                                            page_size=PS)
+    np.testing.assert_array_equal(np.asarray(out_clean),
+                                  np.asarray(out_poison))
+    # parity holds on the poisoned pool too (the oracle reads the same rows)
+    ref = paged_decode_attention_ref(q, kp, vp, row_idx, pos)
+    np.testing.assert_allclose(np.asarray(out_poison), np.asarray(ref),
+                               **_paged_tol(jnp.float32))
+
+
+def test_paged_decode_fully_parked_sequence_matches_oracle():
+    """A sequence with NO allocated pages (an idle slot: every row is
+    trash row 0, pos 0) still runs and matches the oracle — the scheduler
+    relies on idle slots being harmless, not skipped."""
+    rng = np.random.default_rng(17)
+    q = jnp.asarray(rng.standard_normal((2, 4, 32)) * 0.4, jnp.float32)
+    k = jnp.asarray(rng.standard_normal((5 * PS, 2, 32)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((5 * PS, 2, 32)), jnp.float32)
+    row_idx = jnp.stack([jnp.asarray(PageTable(PS, MAX_KV, [2, 1]).row_idx()),
+                         jnp.asarray(PageTable(PS, MAX_KV, []).row_idx())])
+    pos = jnp.asarray([6, 0], jnp.int32)
+    out = ops.paged_decode_attention(q, k, v, row_idx, pos, page_size=PS)
+    ref = paged_decode_attention_ref(q, k, v, row_idx, pos)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               **_paged_tol(jnp.float32))
+
+
+@pytest.mark.parametrize("window", [3, 4, 7])
+def test_paged_decode_sliding_window_parity(window):
+    """Sliding windows that end mid-page, exactly on a page boundary, and
+    span multiple pages: the tile-skip must drop tiles strictly OUTSIDE
+    [pos-window, pos] and the in-tile mask must trim both edges."""
+    q, k, v, row_idx, pos = _paged_case(window, [2, 7, 11, 15],
+                                        nkv=2, group=2)
+    out = ops.paged_decode_attention(q, k, v, row_idx, pos, page_size=PS,
+                                     window=window)
+    ref = paged_decode_attention_ref(q, k, v, row_idx, pos, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               **_paged_tol(jnp.float32))
+
+
+def test_paged_decode_softcap_parity():
+    """gemma2-style logit softcap is applied in-kernel (after scale,
+    before mask) — same ordering as the oracle and ``_sdpa``."""
+    q, k, v, row_idx, pos = _paged_case(23, [3, 9, 14], nkv=2, group=2)
+    out = ops.paged_decode_attention(q, k, v, row_idx, pos, page_size=PS,
+                                     softcap=50.0)
+    ref = paged_decode_attention_ref(q, k, v, row_idx, pos, softcap=50.0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               **_paged_tol(jnp.float32))
 
 
 def test_flash_attention_grad_flows():

@@ -1,10 +1,16 @@
 """Overload-safe continuous batching: the paged-KV request scheduler.
 
-1. Paged-cache parity: a block-paged decode step is BIT-EXACT with the
-   dense-cache decode step for the same trace (same KV width), and the
-   scheduler's end-to-end traces equal ``Engine.generate`` token-for-token
-   — including mixed prompt lengths decoded concurrently and a sequence
-   that was preempted and resumed.
+1. Paged-cache parity: a block-paged decode step matches the dense-cache
+   decode step for the same trace (same KV width) — BIT-EXACT on the
+   pure-XLA gather path (``cfg.paged_attn_kernel=False``), ≤1e-6 f32 on
+   the Pallas paged-kernel path (online softmax reorders the reduction;
+   the math is otherwise identical) — across the ``attn``, ``local``
+   sliding-window and mrope configs; the jitted paged step materializes
+   NO (B, max_kv, ...) KV gather copy and NO pool-sized GQA head
+   expansion (jaxpr-asserted); and the scheduler's end-to-end traces
+   equal ``Engine.generate`` token-for-token — including mixed prompt
+   lengths decoded concurrently and a sequence that was preempted and
+   resumed.
 2. Overload is a typed RESULT, never an exception: bounded queue
    (``queue_full``), impossible requests (``too_long``), TTL deadlines
    (TIMED_OUT), prefill crashes past the retry budget (REJECTED), and
@@ -47,8 +53,10 @@ def _clean_faults():
     faults.clear()
 
 
-def _smoke_engine(params_seed=0, max_len=32):
+def _smoke_engine(params_seed=0, max_len=32, mutate=None):
     cfg = C.get_smoke("gpt-moe-s")
+    if mutate is not None:
+        cfg = mutate(cfg)
     rt = mdl.Runtime()
     sched = HecateScheduler(cfg, ep=1, impl="ep")
     pa = sched.plan_arrays()
@@ -94,14 +102,31 @@ def test_page_table_row_idx_maps_tokens_and_parks_tail_on_trash():
 # ---------------------------------------------------------------------------
 # 1. parity with the dense cache
 # ---------------------------------------------------------------------------
-def test_paged_decode_step_bit_exact_vs_dense():
-    """Same trace, same KV width: every decode step's logits are
-    bit-identical between the dense cache and the paged pool (the masked
-    trash rows softmax to exact 0.0, and the reduction width matches)."""
-    cfg, rt, params, pa, eng = _smoke_engine(max_len=16)
+_PARITY_VARIANTS = {
+    "attn": lambda c: c,
+    "local": lambda c: c.replace(layer_pattern=("attn", "local"),
+                                 sliding_window=5),
+    "mrope": lambda c: c.replace(mrope=True),
+}
+
+
+@pytest.mark.parametrize("variant", sorted(_PARITY_VARIANTS))
+@pytest.mark.parametrize("impl", ["kernel", "xla"])
+def test_paged_decode_step_parity_vs_dense(variant, impl):
+    """Same trace, same KV width: every decode step's logits match between
+    the dense cache and the paged pool, for global-attn, sliding-window
+    ``local`` and mrope configs.  The pure-XLA gather path
+    (``paged_attn_kernel=False``) is BIT-identical (masked trash rows
+    softmax to exact 0.0 and the reduction width matches); the Pallas
+    kernel path is ≤1e-6 in f32 — its online softmax visits KV tiles in
+    page order, so only the reduction order differs."""
+    def mutate(c):
+        c = _PARITY_VARIANTS[variant](c)
+        return c.replace(paged_attn_kernel=(impl == "kernel"))
+    cfg, rt, params, pa, eng = _smoke_engine(max_len=16, mutate=mutate)
     max_kv = 16
     dense_step = jax.jit(build_serve_step(cfg, rt))
-    paged_step = jax.jit(build_paged_serve_step(cfg, rt))
+    paged_step = jax.jit(build_paged_serve_step(cfg, rt, page_size=4))
     premat = eng._materialized()
 
     dense_cache = mdl.init_cache(cfg, 1, max_kv)
@@ -117,7 +142,57 @@ def test_paged_decode_step_bit_exact_vs_dense():
         lp, paged_cache = paged_step(params, paged_cache, tt,
                                      jnp.asarray([i], jnp.int32),
                                      row_idx, pa, premat)
-        np.testing.assert_array_equal(np.asarray(ld), np.asarray(lp))
+        if impl == "xla":
+            np.testing.assert_array_equal(np.asarray(ld), np.asarray(lp))
+        else:
+            np.testing.assert_allclose(np.asarray(ld), np.asarray(lp),
+                                       atol=1e-5, rtol=1e-5)
+    eng.close()
+
+
+def test_paged_step_materializes_no_gather_and_no_gqa_expansion():
+    """The jitted paged decode step on the kernel path never materializes
+    a (B, max_kv, heads, hd) gathered KV copy and never expands the nkv
+    pool heads up to nq (no head-replicating repeat/broadcast): no
+    equation in its jaxpr produces a value of either shape.  The same
+    detector FIRES on the pure-XLA fallback, which is exactly the gather
+    materialization the kernel removes."""
+    from repro.common.jaxprs import iter_eqns
+
+    def mutate(c):
+        return c.replace(num_kv_heads=2)            # GQA: group = 2
+    cfg, rt, params, pa, eng = _smoke_engine(max_len=16, mutate=mutate)
+    b, max_kv, nq, nkv, hd = 2, 16, cfg.num_heads, cfg.num_kv_heads, \
+        cfg.head_dim
+    num_rows = 5 * 4
+    banned = {
+        (b, max_kv, nkv, hd),           # gathered KV copy (pool heads)
+        (b, max_kv, nq, hd),            # gathered + GQA-expanded copy
+        (num_rows, nq, hd),             # pool-sized head expansion
+    }
+    cache = mdl.init_paged_cache(cfg, b, num_rows)
+    row_idx = jnp.stack([jnp.asarray(PageTable(4, max_kv, [1, 2]).row_idx()),
+                         jnp.asarray(PageTable(4, max_kv, [3, 4]).row_idx())])
+    toks = jnp.asarray([[5], [7]], jnp.int32)
+    pos = jnp.asarray([3, 1], jnp.int32)
+    premat = eng._materialized()
+
+    def shapes(step):
+        closed = jax.make_jaxpr(step)(params, cache, toks, pos, row_idx,
+                                      pa, premat)
+        out = set()
+        for eqn in iter_eqns(closed.jaxpr):
+            for v in eqn.outvars:
+                if hasattr(v.aval, "shape"):
+                    out.add(tuple(v.aval.shape))
+        return out
+
+    kern = shapes(build_paged_serve_step(cfg, rt, page_size=4))
+    assert not (kern & banned), kern & banned
+    # detector sanity: the XLA gather fallback DOES materialize the copy
+    xcfg = cfg.replace(paged_attn_kernel=False)
+    xla = shapes(build_paged_serve_step(xcfg, rt, page_size=4))
+    assert (b, max_kv, nkv, hd) in xla
     eng.close()
 
 
@@ -393,12 +468,13 @@ toks = np.asarray([[5], [7]], np.int32)
 pos = jnp.asarray([3, 1], jnp.int32)
 
 step = lambda p, c, t, pm: mdl.decode_step(cfg, rt, p, c, t, pos, pa,
-                                           premat=pm, row_idx=row_idx)
+                                           premat=pm, row_idx=row_idx,
+                                           page_size=4)
 n_step = len(find_prims(step, params, cache, toks, premat, prims=COLL))
-assert n_step == 0, n_step          # the premat paged step: ZERO spAG
+assert n_step == 0, n_step          # the premat paged KERNEL step: ZERO spAG
 n_nopm = len(find_prims(lambda p, c, t: mdl.decode_step(
-    cfg, rt, p, c, t, pos, pa, row_idx=row_idx), params, cache, toks,
-    prims=COLL))
+    cfg, rt, p, c, t, pos, pa, row_idx=row_idx, page_size=4), params,
+    cache, toks, prims=COLL))
 assert n_nopm > 0, n_nopm           # without premat the spAG is in-step
 print(f"paged step collectives with/without premat: {n_step}/{n_nopm}")
 eng.close()
